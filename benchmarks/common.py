@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+CSV contract (benchmarks/run.py): ``name,us_per_call,derived`` where
+``derived`` is the figure-specific metric (TFLOP/s, ratio, speed-up, ...).
+Wall measurements run on this container's single CPU core; each figure also
+reports the cost-model projection onto the paper's hardware (HoreKa
+A100 nodes) and the TPU-v5e target so the paper's curves can be regenerated
+(DESIGN.md §3 records why the MPI oversubscription pathology itself cannot
+manifest on SPMD hardware and is model-reproduced).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall seconds per call of a jitted fn (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,50 @@
+"""Fig. 4: linear-solver performance (LSP) vs repartitioning ratio alpha.
+
+Measures the repartitioned pressure CG solve (update → bands → CG) on the
+cavity for alpha ∈ {1,2,4,8}: wall time on this host, solver FLOP rate, and
+the cost-model projection to the paper's per-GPU TFLOP/s.  The paper's
+finding — LSP approximately independent of alpha (given enough DOFs/device)
+— shows up here as the measured FLOP rate staying flat across alpha.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.cost_model import CostModel, HOREKA_A100
+from repro.fvm.mesh import CavityMesh
+from repro.fvm.piso import PisoSolver
+
+
+def run(n: int = 24, parts: int = 8, alphas=(1, 2, 4, 8), reps: int = 3):
+    jax.config.update("jax_enable_x64", True)
+    rows = []
+    for alpha in alphas:
+        if parts % alpha:
+            continue
+        mesh = CavityMesh.cube(n, parts)
+        solver = PisoSolver(mesh, alpha=alpha)
+        state = solver.initial_state()
+        state, _ = solver.step(state, 2e-4)  # develop a non-trivial system
+
+        step = functools.partial(solver.step, dt=2e-4)
+        t = time_fn(lambda s=state: step(s)[0], warmup=1, reps=reps)
+        _, stats = solver.step(state, 2e-4)
+        iters = int(stats.p_iters.sum()) + 3 * int(stats.mom_iters)
+        n_dofs = mesh.n_cells_global
+        flops = iters * (2 * 7 * n_dofs + 10 * n_dofs)
+        gflops = flops / t / 1e9
+        cm = CostModel(HOREKA_A100, n_dofs=n_dofs,
+                       solver_iters=max(int(stats.p_iters.sum()), 1))
+        t_gpu = cm.t_solver(4)
+        lsp_model = cm.solver_flops() / t_gpu / 1e12
+        emit(f"fig4_lsp_alpha{alpha}_n{n}", t,
+             f"measured={gflops:.2f}GF/s model_A100x4={lsp_model:.2f}TF/s")
+        rows.append((alpha, gflops))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 5: host-side (assembly) time vs alpha.
+
+The paper's mechanism: alpha = ranks-per-GPU, so host time drops ~1/alpha as
+more CPU ranks assemble.  Measured here: per-rank assembly work shrinking
+with the fine part count (the quantity that parallelizes), plus the
+cost-model host-time projection for the HoreKa node (64 cores, 4 GPUs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.cost_model import CostModel, HOREKA_A100
+from repro.fvm.assembly import CavityAssembly
+from repro.fvm.mesh import CavityMesh
+
+
+def run(n: int = 24, n_gpu: int = 2, alphas=(1, 2, 4, 8)):
+    jax.config.update("jax_enable_x64", True)
+    for alpha in alphas:
+        parts = n_gpu * alpha
+        if n % parts and n % parts != 0:
+            continue
+        if n % parts != 0:
+            continue
+        mesh = CavityMesh.cube(n, parts)
+        asm = CavityAssembly(mesh)
+        U = jnp.zeros((parts, mesh.n_cells, 3), jnp.float64)
+        p = jnp.zeros((parts, mesh.n_cells), jnp.float64)
+
+        @jax.jit
+        def assemble(U, p):
+            phi, phi_if = asm.face_flux(U)
+            sys = asm.assemble_momentum(U, phi, phi_if, p, 1e-3)
+            return sys.diag
+
+        t = time_fn(assemble, U, p)
+        cm = CostModel(HOREKA_A100, n_dofs=mesh.n_cells_global)
+        t_host = cm.t_assembly(parts)
+        emit(f"fig5_host_alpha{alpha}_n{n}", t,
+             f"cells_per_rank={mesh.n_cells} model_host_s={t_host:.4f}")
+
+
+if __name__ == "__main__":
+    run()

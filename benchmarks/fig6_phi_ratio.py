@@ -1,0 +1,26 @@
+"""Fig. 6: phi = t_GPU / t_CPU vs alpha (cost-model on HoreKa constants).
+
+The paper reports phi approaching 15–30 for large alpha and node counts —
+host work becomes negligible relative to the device solve.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cost_model import CostModel, HOREKA_A100
+
+
+def run(n_dofs=(9e6, 74e6, 250e6), nodes=(1, 4, 16),
+        alphas=(1, 2, 4, 8, 16)):
+    for nd in n_dofs:
+        cm = CostModel(HOREKA_A100, n_dofs=nd)
+        for nn in nodes:
+            n_gpu = 4 * nn
+            for alpha in alphas:
+                t_cpu = cm.t_assembly(n_gpu * alpha)
+                t_gpu = cm.t_solver(n_gpu)
+                emit(f"fig6_phi_dofs{int(nd / 1e6)}M_nodes{nn}_alpha{alpha}",
+                     t_gpu, f"phi={t_gpu / t_cpu:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Fig. 7: strong scaling P = n_cells / t_TS for the four strategies.
+
+Strategies (paper §4): CPU reference, GPUURR1 (undersubscribed, n = n_GPU),
+GPUOSR1 (oversubscribed, n = n_CPU ranks sharing GPUs), GPUOSRR16
+(repartitioned, alpha = 16).  The MPI oversubscription penalty is calibrated
+from the paper (up to ~140x); the other curves come from the same
+assembly/solver laws the measured benches fit.  Emits fvOps (= cells/s) per
+(case, nodes).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cost_model import CostModel, HOREKA_A100
+
+CORES_PER_NODE = 128  # 2x64 (paper's HoreKa nodes)
+GPUS_PER_NODE = 4
+
+
+def run(sizes=((9e6, "small"), (74e6, "medium"), (250e6, "large")),
+        nodes=(1, 2, 4, 8, 16)):
+    for n_dofs, tag in sizes:
+        for nn in nodes:
+            n_cpu = nn * CORES_PER_NODE
+            n_gpu = nn * GPUS_PER_NODE
+            cm = CostModel(HOREKA_A100, n_dofs=n_dofs)
+
+            t_cpu_ref = cm.t_assembly(n_cpu) + cm.t_solver_cpu(n_cpu)
+            t_urr1 = cm.T_single(n_gpu, n_gpu)
+            t_osr1 = cm.T_single(n_cpu, n_gpu)
+            t_rep16 = cm.T_repartitioned(n_gpu * 16, n_gpu)
+
+            for case, t in (("CPU", t_cpu_ref), ("GPUURR1", t_urr1),
+                            ("GPUOSR1", t_osr1), ("GPUOSRR16", t_rep16)):
+                fvops = n_dofs / t / 1e6
+                emit(f"fig7_{tag}_{case}_nodes{nn}", t,
+                     f"P={fvops:.2f}MfvOps")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""The three hillclimbed cells (EXPERIMENTS.md §Perf-cells).
+
+Selection from the baseline roofline table:
+  1. phi3.5-moe train_4k    — worst useful ratio (0.12): dense MoE dispatch
+                              computes E=16 experts per token → SORTED
+                              capacity dispatch (top-2 x 1.25).
+  2. mixtral prefill_32k    — compute-bound with an unexploited 4k sliding
+                              window → SWA CHUNK SKIP (each Q chunk visits
+                              ~5 of 32 KV chunks).
+  3. qwen3 train_4k         — collective-dominated → SP REDUCE-SCATTER
+                              sublayer outputs (all-reduce → reduce-scatter
+                              at every row-parallel boundary).
+
+Each entry lowers baseline + optimized configs on the production mesh
+(subprocess; forced devices) and reports analytical/HLO flops, collective
+bytes, and temp memory.  Results are merged into results/hillclimb.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses as dc, json, sys
+import jax
+from repro.launch.dryrun import build_lowerable, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.analysis import analytical_flops
+from repro.configs.registry import get_config
+
+arch, shape, field, value = sys.argv[1:5]
+cfg = get_config(arch)
+if field != "baseline":
+    for f, v in zip(field.split("+"), value.split("+")):
+        vv = {"True": True, "False": False}.get(v, v)
+        cfg = dc.replace(cfg, **{f: vv})
+mesh = make_production_mesh()
+fn, args, sh, don, osh = build_lowerable(arch, shape, mesh, cfg)
+jk = {"in_shardings": sh}
+if don is not None: jk["donate_argnums"] = don
+if osh is not None: jk["out_shardings"] = osh
+with mesh:
+    comp = jax.jit(fn, **jk).lower(*args).compile()
+cost = comp.cost_analysis()
+mem = comp.memory_analysis()
+col = parse_collectives(comp.as_text())
+fr = analytical_flops(cfg, shape)
+print(json.dumps({
+    "arch": arch, "shape": shape, "variant": f"{field}={value}",
+    "hlo_flops_per_device": cost.get("flops", 0.0),
+    "analytical_flops_global": fr.total,
+    "model_flops": fr.model_flops_6nd,
+    "useful_ratio": fr.model_flops_6nd / fr.total,
+    "collective_bytes_per_device": col["total_bytes"],
+    "collective_count": col["total_count"],
+    "temp_gb": mem.temp_size_in_bytes / 1e9,
+}))
+"""
+
+CELLS = [
+    ("phi3.5-moe-42b-a6.6b", "train_4k", "moe_dispatch", "sorted"),
+    ("mixtral-8x22b", "prefill_32k",
+     "swa_chunk_skip+moe_dispatch", "True+sorted"),
+    ("jamba-v0.1-52b", "prefill_32k", "sp_residual", "False"),
+]
+
+
+def run():
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    results = []
+    for arch, shape, field, value in CELLS:
+        for variant in (("baseline", "-"), (field, value)):
+            r = subprocess.run(
+                [sys.executable, "-c", CODE, arch, shape, *variant],
+                capture_output=True, text=True, env=env, timeout=2400)
+            tag = f"hill_{arch.split('-')[0]}_{shape}_{variant[0]}"
+            if r.returncode == 0:
+                rec = json.loads(r.stdout.strip().splitlines()[-1])
+                results.append(rec)
+                emit(tag, 0.0,
+                     f"ana_flops={rec['analytical_flops_global']:.3e} "
+                     f"useful={rec['useful_ratio']:.2f} "
+                     f"colGB={rec['collective_bytes_per_device'] / 1e9:.1f} "
+                     f"temp={rec['temp_gb']:.1f}GB")
+            else:
+                emit(tag + "_ERROR", 0.0, r.stderr.strip()[-140:])
+    os.makedirs("results", exist_ok=True)
+    with open("results/hillclimb.json", "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run()

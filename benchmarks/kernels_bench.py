@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference paths.
+
+On this CPU container, interpret-mode timings are NOT TPU timings — the
+derived column reports the work size (bandwidth-bound roofline on v5e is
+bytes/819GB/s) so the kernel's target cost is visible next to the measured
+oracle path.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.repartition import plan_for_mesh
+from repro.core.update import concat_group_buffers, update_device_direct
+from repro.fvm.mesh import CavityMesh
+from repro.sparse.distributed import spmv_dia
+
+HBM = 819e9
+
+
+def run(n: int = 32, parts: int = 4, alpha: int = 2):
+    mesh = CavityMesh.cube(n, parts)
+    plan = plan_for_mesh(mesh, alpha)
+    n_c = parts // alpha
+    rng = np.random.default_rng(0)
+    offsets = tuple(int(o) for o in plan.dia_offsets)
+
+    bands = jnp.asarray(rng.standard_normal((n_c, 7, plan.m_coarse)),
+                        jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n_c, plan.m_coarse)), jnp.float32)
+
+    t = time_fn(lambda: spmv_dia(bands, x, offsets=offsets,
+                                 plane=plan.plane))
+    byts = bands.size * 4 + 2 * x.size * 4
+    emit("kern_spmv_dia_jnp", t,
+         f"bytes={byts} v5e_roofline_us={byts / HBM * 1e6:.2f}")
+
+    buffers = jnp.asarray(
+        rng.standard_normal((n_c, alpha, plan.buffer_len)), jnp.float32)
+
+    @jax.jit
+    def upd(b):
+        return update_device_direct(plan, b, target="dia")
+
+    t = time_fn(upd, buffers)
+    byts = buffers.size * 4 * 2
+    emit("kern_coef_update_jnp", t,
+         f"bytes={byts} v5e_roofline_us={byts / HBM * 1e6:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,131 @@
+"""Roofline table generator (EXPERIMENTS.md §Roofline).
+
+Reads the per-cell JSONs the dry-run wrote and derives, per (arch, shape) on
+the single-pod mesh:
+
+    compute    = FLOPs / (chips * 197e12)          [bf16 peak]
+    memory     = HBM bytes / (chips * 819e9)
+    collective = per-device collective bytes / 50e9 [ICI link]
+
+FLOP/byte sources: the scan-corrected per-device numbers from compiled
+``cost_analysis`` (x chips → global) — inner sequence scans are still
+undercounted there, so the table also carries the analytical implementation
+FLOPs (launch/analysis.py) and uses max(corrected-HLO, analytical) for the
+compute term; MODEL_FLOPS = 6·N_active·tokens gives the usefulness ratio.
+
+Writes results/roofline.md and prints CSV rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def load_cells(out_dir: str = "results/dryrun", mesh: str = "single_pod",
+               correction_dir: str = "results/dryrun_prefix"):
+    """Load cell JSONs; graft scan-correction fields from an earlier
+    corrected run when the (cheaper) final run skipped them — the
+    correction is a FLOP/collective count, invariant to the memory fixes
+    between the runs."""
+    cells = []
+    for path in sorted(glob.glob(f"{out_dir}/*__{mesh}.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if "flops_per_device_corrected" not in rec:
+            alt = os.path.join(correction_dir, os.path.basename(path))
+            if os.path.exists(alt):
+                with open(alt) as f:
+                    old = json.load(f)
+                for k in ("flops_per_device_corrected",
+                          "bytes_per_device_corrected",
+                          "collective_bytes_corrected",
+                          "collective_count_corrected"):
+                    if k in old:
+                        rec[k] = old[k]
+        cells.append(rec)
+    return cells
+
+
+def derive(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec.get("n_devices", 256)
+    hlo_flops = rec.get("flops_per_device_corrected",
+                        rec.get("flops_per_device", 0.0)) * chips
+    ana = rec.get("analytical_flops_global", 0.0)
+    flops = max(hlo_flops, ana)
+    # the 2-point extrapolation can go negative when the 2-period variant
+    # fuses better than the 1-period one — floor at the raw measurement
+    byts = max(rec.get("bytes_per_device_corrected", 0.0),
+               rec.get("bytes_per_device", 0.0)) * chips
+    col_dev = max(rec.get("collective_bytes_corrected", 0.0),
+                  rec.get("collectives", {}).get("total_bytes", 0.0))
+    t_comp = flops / (chips * PEAK)
+    t_mem = byts / (chips * HBM)
+    t_col = col_dev / LINK
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_col, "collective"))
+    model = rec.get("model_flops_6nd", 0.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_col,
+        "dominant": dom[1], "flops": flops, "hlo_flops": hlo_flops,
+        "analytical_flops": ana, "model_flops": model,
+        "useful_ratio": (model / flops) if flops else 0.0,
+        "roofline_s": max(t_comp, t_mem, t_col),
+        "mfu_bound": model / (max(t_comp, t_mem, t_col) * chips * PEAK)
+        if flops else 0.0,
+        "temp_gb": rec.get("temp_size_in_bytes", 0) / 1e9,
+        "args_gb": rec.get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+_SUGGEST = {
+    "compute": "cut non-useful FLOPs (causal block-skip, top-k-only MoE "
+               "dispatch) or grow per-chip work",
+    "memory": "raise arithmetic intensity: fuse, widen tiles, quantize the "
+              "KV cache / weights",
+    "collective": "reshard to shrink the dominant collective (more "
+                  "in-group fusion, alpha-style fewer parts) or overlap "
+                  "with compute",
+}
+
+
+def markdown(rows, path="results/roofline.md"):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/impl FLOPs | MFU bound | what moves it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound'] * 100:.1f}% | {_SUGGEST[r['dominant']]} |")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def run(out_dir: str = "results/dryrun"):
+    rows = [d for d in (derive(r) for r in load_cells(out_dir)) if d]
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}", r["roofline_s"],
+             f"dom={r['dominant']} useful={r['useful_ratio']:.2f} "
+             f"mfu_bound={r['mfu_bound'] * 100:.1f}%")
+    if rows:
+        path = markdown(rows)
+        print(f"# wrote {path} ({len(rows)} cells)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

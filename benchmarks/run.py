@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper figure + roofline/kernels.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run fig4 fig9    # a subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (cfd_dryrun, cfd_modes, fig4_lsp_vs_alpha,
+                            fig5_host_time, fig6_phi_ratio,
+                            fig7_strong_scaling, fig8_speedup,
+                            fig9_gpu_aware, hillclimb, kernels_bench,
+                            roofline)
+
+    suites = {
+        "fig4": fig4_lsp_vs_alpha.run,
+        "fig5": fig5_host_time.run,
+        "fig6": fig6_phi_ratio.run,
+        "fig7": fig7_strong_scaling.run,
+        "fig8": fig8_speedup.run,
+        "fig9": fig9_gpu_aware.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+        "cfd_dryrun": cfd_dryrun.run,
+        "cfd_modes": cfd_modes.run,
+        "hillclimb": hillclimb.run,
+    }
+    heavy = {"cfd_dryrun", "cfd_modes", "hillclimb"}
+    picked = sys.argv[1:] or [k for k in suites if k not in heavy]
+    print("name,us_per_call,derived")
+    failures = []
+    for name in picked:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+            print(f"{name}_SUITE_ERROR,0,{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""lidDrivenCavity3D end-to-end: icoFOAM PISO with repartitioned pressure
+solves (the paper's measured configuration), run for real on CPU.
+
+  PYTHONPATH=src python examples/cavity_piso.py [--n 12 --steps 10]
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+
+from repro.fvm.mesh import CavityMesh
+from repro.fvm.piso import PisoSolver
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=12)
+ap.add_argument("--parts", type=int, default=4)
+ap.add_argument("--alpha", type=int, default=2)
+ap.add_argument("--steps", type=int, default=10)
+args = ap.parse_args()
+
+mesh = CavityMesh.cube(args.n, args.parts)
+solver = PisoSolver(mesh, alpha=args.alpha, nu=0.01)
+dt = 0.5 * mesh.h  # CFL 0.5 at lid speed 1
+state = solver.initial_state()
+print(f"{mesh.n_cells_global} cells, {args.parts} assembly parts, "
+      f"alpha={args.alpha} → {args.parts // args.alpha} solve parts")
+for step in range(args.steps):
+    state, stats = solver.step(state, dt)
+    print(f"t={dt * (step + 1):.4f}  continuity={float(stats.continuity_err):.2e}  "
+          f"p_iters={[int(i) for i in stats.p_iters]}")
+
+U = np.asarray(state.U)
+print(f"max |U| = {np.abs(U).max():.3f} (lid speed 1.0)")
+assert np.isfinite(U).all() and np.abs(U).max() < 1.5
+print("OK")

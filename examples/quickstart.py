@@ -1,0 +1,62 @@
+"""Quickstart: the paper's repartitioning in ~40 lines.
+
+Assembles a distributed FVM pressure-like system on a fine (CPU/assembly)
+partition, builds the alpha-fusion RepartitionPlan ONCE, updates the
+coarse-partition matrix values through it, and solves with distributed CG —
+then verifies the solution against the fine-partition residual.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ldu import buffer_from_parts, LDULayout
+from repro.core.repartition import plan_for_mesh
+from repro.core.update import update_device_direct
+from repro.fvm.assembly import CavityAssembly
+from repro.fvm.mesh import CavityMesh
+from repro.solvers.cg import cg
+from repro.solvers.jacobi import jacobi_preconditioner
+from repro.sparse.distributed import spmv_dia
+
+N, N_FINE, ALPHA = 16, 8, 4  # 16^3 cells, 8 assembly parts → 2 solve parts
+
+mesh = CavityMesh.cube(N, N_FINE)
+asm = CavityAssembly(mesh)
+
+# 1. assemble a pressure Laplacian on the FINE partition (stacked arrays)
+rAU = jnp.ones((N_FINE, mesh.n_cells))
+phi = jnp.zeros((N_FINE, mesh.n_faces))
+phi_if = jnp.zeros((N_FINE, 2, mesh.plane))
+sysP = asm.assemble_pressure(rAU, phi, phi_if)
+rng = np.random.default_rng(0)
+b = jnp.asarray(rng.standard_normal((N_FINE, mesh.n_cells)))
+
+# 2. repartition: plan once (sparsity + update pattern + permutation) ...
+plan = plan_for_mesh(mesh, ALPHA)
+print(f"plan: {plan.m_coarse} rows/coarse part, localized "
+      f"{plan.nnz_localized} couplings, halo {plan.nnz_halo}")
+
+# 3. ... then per step only VALUES move: grouped gather + permutation
+buffers = buffer_from_parts(sysP.diag, sysP.upper, sysP.lower, sysP.iface)
+grouped = buffers.reshape(N_FINE // ALPHA, ALPHA, -1)
+bands = update_device_direct(plan, grouped, target="dia")
+
+# 4. distributed CG on the COARSE partition
+offsets = tuple(int(o) for o in plan.dia_offsets)
+A = lambda v: spmv_dia(bands, v, offsets=offsets, plane=plan.plane)
+b_c = b.reshape(N_FINE // ALPHA, -1)
+res = cg(A, b_c, jnp.zeros_like(b_c),
+         M=jacobi_preconditioner(sysP.diag.reshape(N_FINE // ALPHA, -1)),
+         tol=1e-10)
+print(f"CG converged in {int(res.iters)} iters, residual {float(res.residual):.2e}")
+
+# 5. verify on the fine partition
+x_fine = res.x.reshape(N_FINE, mesh.n_cells)
+r = b - (sysP.diag * x_fine + asm.offdiag_apply(sysP, x_fine))
+print(f"fine-partition residual: {float(jnp.abs(r).max()):.2e}")
+assert float(jnp.abs(r).max()) < 1e-7
+print("OK — repartitioned solve matches the fine-partition system")

@@ -1,0 +1,30 @@
+"""Batched serving example: prefill → greedy decode with the KV cache, and
+the alpha-fusion KV repartition between the two phases (paper technique
+applied to disaggregated serving — runs the relayout on a forced 8-device
+mesh if available, else single device).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.models import lm
+from repro.serving.engine import generate
+
+cfg = get_smoke_config("granite-3-8b")
+params = lm.init_params(cfg, jax.random.key(0))
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 24)), jnp.int32)
+
+out = generate(cfg, params, prompts, n_new=12)
+print("prompts:", np.asarray(prompts)[:, :8], "...")
+print("generated:", np.asarray(out))
+
+# consistency check vs full forward
+seq = np.asarray(prompts)
+logits = lm.forward(cfg, params, jnp.asarray(seq))
+first_ref = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+assert (np.asarray(out)[:, 0] == first_ref).all()
+print("OK — stepwise decode matches full forward")

@@ -1,0 +1,3 @@
+"""Architecture configs (assigned pool) + input-shape registry."""
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, SHAPES, get_config, get_smoke_config, input_specs, cell_is_skipped)

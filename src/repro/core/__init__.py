@@ -1,0 +1,10 @@
+# The paper's primary contribution: repartitioning an LDU-distributed matrix
+# from a fine (assembly) partition onto a coarse (solve) partition, with a
+# reusable update pattern + permutation (create once / update every step).
+from repro.core.partition import BlockPartition, AlphaConnection, alpha_fusion  # noqa: F401
+from repro.core.ldu import LDULayout, ldu_entries, buffer_from_parts  # noqa: F401
+from repro.core.repartition import RepartitionPlan, build_plan, plan_for_mesh  # noqa: F401
+from repro.core.update import (  # noqa: F401
+    update_device_direct, update_host_buffer, ell_values, dia_values,
+    concat_group_buffers)
+from repro.core.cost_model import CostModel, HardwareSpec, TPU_V5E, HOREKA_A100  # noqa: F401

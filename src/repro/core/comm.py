@@ -1,0 +1,66 @@
+"""Communicator-split emulation on SPMD meshes (paper §3).
+
+The paper splits MPI_COMM_WORLD ``C`` into active ``C_a`` (one rank per GPU —
+enters the solver) and inactive ``C_i`` ranks (skip the solve).  JAX is
+single-program: there is no per-rank control flow to skip.  The equivalent
+statement is about **sharding**:
+
+* assembly-phase tensors are sharded over the *full* mesh
+  ``("solve", "assemble")`` — every device active (= C);
+* solve-phase tensors are sharded over ``"solve"`` only and *replicated* over
+  ``"assemble"`` — the redundant replicas are XLA-deduplicated work, which is
+  the SPMD rendering of "C_i ranks skip the solve";
+* no empty per-device matrices exist on any device (the paper's pitfall),
+  because replication is a layout, not an allocation of empties.
+
+``solve_sharding``/``assembly_sharding`` encode the convention; the
+beyond-paper "full-mesh solve" mode (DESIGN.md §3) simply swaps the solver
+spec to shard rows over both axes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["make_cfd_mesh", "assembly_sharding", "solve_sharding"]
+
+SOLVE_AXIS = "solve"
+ASSEMBLE_AXIS = "assemble"
+
+
+def make_cfd_mesh(n_coarse: int, alpha: int, devices=None) -> Mesh:
+    """Mesh of shape (n_coarse, alpha): axis 'solve' x axis 'assemble'.
+
+    The fine partition has ``n_coarse * alpha`` parts laid out so that the
+    alpha fine parts of coarse group k sit on the devices of mesh row k —
+    making the update pattern's grouped gather an intra-row collective
+    (the ICI-local analogue of the paper's CPU→owning-GPU sends).
+    """
+    import numpy as np
+
+    devices = devices if devices is not None else jax.devices()
+    if len(devices) < n_coarse * alpha:
+        raise ValueError(
+            f"need {n_coarse * alpha} devices, have {len(devices)}")
+    devs = np.array(devices[: n_coarse * alpha]).reshape(n_coarse, alpha)
+    return Mesh(devs, (SOLVE_AXIS, ASSEMBLE_AXIS))
+
+
+def assembly_sharding(mesh: Mesh, extra_dims: int = 1) -> NamedSharding:
+    """Fine-partition arrays (n_fine, ...): parts over both mesh axes (= C)."""
+    return NamedSharding(mesh, P((SOLVE_AXIS, ASSEMBLE_AXIS),
+                                 *(None,) * extra_dims))
+
+
+def solve_sharding(mesh: Mesh, extra_dims: int = 1,
+                   full_mesh: bool = False) -> NamedSharding:
+    """Coarse-partition arrays (n_coarse, ...).
+
+    paper-faithful (default): rows on 'solve', replicated over 'assemble'
+    (= C_a active, C_i idle).  ``full_mesh=True`` is the beyond-paper mode:
+    fused rows additionally sharded over 'assemble' (second trailing dim).
+    """
+    if full_mesh and extra_dims >= 1:
+        return NamedSharding(mesh, P(SOLVE_AXIS, ASSEMBLE_AXIS,
+                                     *(None,) * (extra_dims - 1)))
+    return NamedSharding(mesh, P(SOLVE_AXIS, *(None,) * extra_dims))

@@ -1,0 +1,129 @@
+"""Distributed LDU matrix format (OpenFOAM host-side layout) — paper §3.
+
+OpenFOAM stores a matrix as three arrays over the *local* part:
+
+* ``diag``  — one coefficient per cell,
+* ``upper`` — per internal face ``f``: coefficient ``a(owner[f], neigh[f])``,
+* ``lower`` — per internal face ``f``: coefficient ``a(neigh[f], owner[f])``,
+
+plus one *interface* coefficient array per processor boundary (the coupling to
+cells owned by another rank).
+
+The **coefficient buffer** of a part is the concatenation
+``[diag | upper | lower | iface_0 | iface_1 | ...]`` — this is exactly the
+"continuous buffer array" each CPU rank ships to its owning GPU rank in the
+paper's update procedure.  All planning code here is host-side numpy; runtime
+buffers are stacked jnp arrays with a leading part axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fvm.mesh import CavityMesh
+
+__all__ = ["LDULayout", "ldu_entries", "buffer_from_parts"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LDULayout:
+    """Symbolic per-part LDU addressing (identical across parts by uniformity).
+
+    ``iface_rows[s]``/``iface_remote_rows[s]``/``iface_offsets[s]`` describe
+    interface slot ``s`` (for the slab decomposition: s=0 "down", s=1 "up").
+    """
+
+    n_cells: int
+    owner: np.ndarray          # (F,) int32 local rows
+    neigh: np.ndarray          # (F,)
+    iface_rows: np.ndarray     # (S, B) int32 local rows
+    iface_remote_rows: np.ndarray  # (S, B) int32 local rows on remote part
+    iface_part_offset: np.ndarray  # (S,) int8, e.g. [-1, +1]
+
+    @staticmethod
+    def from_mesh(mesh: CavityMesh) -> "LDULayout":
+        ifs = mesh.ifaces
+        return LDULayout(
+            n_cells=mesh.n_cells,
+            owner=mesh.owner,
+            neigh=mesh.neigh,
+            iface_rows=np.stack([s.rows for s in ifs]),
+            iface_remote_rows=np.stack([s.remote_rows for s in ifs]),
+            iface_part_offset=np.array([s.part_offset for s in ifs], dtype=np.int8),
+        )
+
+    @property
+    def n_faces(self) -> int:
+        return len(self.owner)
+
+    @property
+    def n_ifaces(self) -> int:
+        return self.iface_rows.shape[0]
+
+    @property
+    def iface_size(self) -> int:
+        return self.iface_rows.shape[1]
+
+    @property
+    def buffer_len(self) -> int:
+        """Length of one part's LDU coefficient buffer."""
+        return self.n_cells + 2 * self.n_faces + self.n_ifaces * self.iface_size
+
+    # ---- buffer segment views ------------------------------------------
+    def segments(self) -> dict[str, slice]:
+        m, F, B = self.n_cells, self.n_faces, self.iface_size
+        segs = {"diag": slice(0, m), "upper": slice(m, m + F),
+                "lower": slice(m + F, m + 2 * F)}
+        for s in range(self.n_ifaces):
+            start = m + 2 * F + s * B
+            segs[f"iface{s}"] = slice(start, start + B)
+        return segs
+
+
+def ldu_entries(layout: LDULayout, part: int, n_parts: int
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """(local_rows, global_cols) of every buffer entry, in buffer order.
+
+    The blockwise global numbering assigns part ``p`` the contiguous global
+    range ``[p*m, (p+1)*m)``.  Interface entries of a *physically absent*
+    interface (first part's "down", last part's "up") are mapped to the row's
+    own diagonal column — assembly writes 0.0 there so they are exact no-ops;
+    keeping them preserves shape-uniformity across parts (the SPMD layout).
+    """
+    m = layout.n_cells
+    rows = [np.arange(m, dtype=np.int64),              # diag
+            layout.owner.astype(np.int64),             # upper: a(o, n)
+            layout.neigh.astype(np.int64)]             # lower: a(n, o)
+    cols = [np.arange(m, dtype=np.int64) + part * m,
+            layout.neigh.astype(np.int64) + part * m,
+            layout.owner.astype(np.int64) + part * m]
+    for s in range(layout.n_ifaces):
+        r = layout.iface_rows[s].astype(np.int64)
+        remote_part = part + int(layout.iface_part_offset[s])
+        if 0 <= remote_part < n_parts:
+            c = layout.iface_remote_rows[s].astype(np.int64) + remote_part * m
+        else:  # physically absent: self-column no-op (coefficient is 0)
+            c = r + part * m
+        rows.append(r)
+        cols.append(c)
+    return np.concatenate(rows), np.concatenate(cols)
+
+
+def buffer_from_parts(diag, upper, lower, ifaces):
+    """Concatenate per-part coefficient arrays into stacked LDU buffers.
+
+    Args are stacked over parts: diag (P, m), upper/lower (P, F),
+    ifaces (P, S, B).  Returns (P, L) with L = m + 2F + S*B.
+    Works for numpy and jax arrays.
+    """
+    P = diag.shape[0]
+    return _concat([diag, upper, lower, ifaces.reshape(P, -1)], axis=1)
+
+
+def _concat(xs, axis):
+    if isinstance(xs[0], np.ndarray):
+        return np.concatenate(xs, axis=axis)
+    import jax.numpy as jnp
+
+    return jnp.concatenate(xs, axis=axis)

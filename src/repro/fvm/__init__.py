@@ -1,0 +1,2 @@
+"""Finite-volume substrate: structured cavity mesh, assembly, PISO (icoFOAM)."""
+from repro.fvm.mesh import CavityMesh  # noqa: F401

@@ -1,0 +1,204 @@
+"""icoFOAM PISO time loop over the repartitioned distributed system.
+
+Faithful to the paper's measured configuration (§4):
+
+* the **momentum** predictor is solved on the **fine** (CPU/assembly)
+  partition with BiCGStab — "OpenFOAM's native BiCGStab" (an alpha=1
+  repartition plan, i.e. the identity repartition, gives the fine-partition
+  DIA matrix);
+* the **pressure** equation is repartitioned with ratio **alpha** onto the
+  coarse (GPU/solve) partition and solved with CG — "Ginkgo's CG";
+* each PISO corrector re-sends the coefficients through the update pattern
+  (paper fig. 3b) — the create/update split means no symbolic work per step.
+
+The whole timestep jits into one XLA program; under pjit the part axes are
+sharded and the halo exchanges/reductions lower to collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ldu import buffer_from_parts
+from repro.core.repartition import RepartitionPlan, plan_for_mesh
+from repro.core.update import update_device_direct, update_host_buffer
+from repro.fvm.assembly import CavityAssembly
+from repro.fvm.mesh import CavityMesh
+from repro.solvers.bicgstab import bicgstab
+from repro.solvers.cg import cg
+from repro.solvers.jacobi import jacobi_preconditioner
+from repro.sparse.distributed import spmv_dia
+
+__all__ = ["PisoSolver", "PisoState", "StepStats"]
+
+
+class PisoState(NamedTuple):
+    U: jax.Array       # (P, m, 3)
+    p: jax.Array       # (P, m)
+    phi: jax.Array     # (P, F) conservative face fluxes
+    phi_if: jax.Array  # (P, 2, B)
+
+
+class StepStats(NamedTuple):
+    mom_iters: jax.Array
+    p_iters: jax.Array        # (n_correctors,)
+    continuity_err: jax.Array  # max |div(phi)| after correction
+    p_residual: jax.Array
+
+
+@dataclasses.dataclass
+class PisoSolver:
+    """Bind a mesh + repartitioning ratio alpha into a jitted PISO stepper."""
+
+    mesh: CavityMesh
+    alpha: int = 1
+    nu: float = 0.01
+    lid_speed: float = 1.0
+    n_correctors: int = 2
+    mom_tol: float = 1e-7
+    p_tol: float = 1e-8
+    update_schedule: str = "device_direct"  # or "host_buffer" (paper fig. 9)
+    dtype: jnp.dtype = jnp.float64
+    # SPMD solve-phase layout (paper-faithful vs beyond-paper, DESIGN.md §3):
+    # paper-faithful replicates solver rows over the assemble axis (C_i
+    # "inactive"); full_mesh_solve=True row-shards the fused system over the
+    # assemble axis too — every chip works during the solve.
+    spmd_mesh: object | None = None
+    full_mesh_solve: bool = False
+
+    def __post_init__(self):
+        if self.mesh.n_parts % self.alpha != 0:
+            raise ValueError("alpha must divide the number of fine parts")
+        self.asm = CavityAssembly(self.mesh, nu=self.nu,
+                                  lid_speed=self.lid_speed, dtype=self.dtype)
+        # identity repartition for the momentum (fine-partition) matrix
+        self.plan_mom: RepartitionPlan = plan_for_mesh(self.mesh, 1)
+        # alpha-repartition for the pressure (coarse-partition) matrix
+        self.plan_p: RepartitionPlan = plan_for_mesh(self.mesh, self.alpha)
+        self.n_coarse = self.mesh.n_parts // self.alpha
+        self._update = (update_device_direct
+                        if self.update_schedule == "device_direct"
+                        else update_host_buffer)
+        self._step = jax.jit(self._step_impl, static_argnames=("dt",))
+
+    # ---- helpers ------------------------------------------------------
+    def initial_state(self) -> PisoState:
+        P, m, F = self.mesh.n_parts, self.mesh.n_cells, self.mesh.n_faces
+        B = self.mesh.plane
+        return PisoState(
+            U=jnp.zeros((P, m, 3), self.dtype),
+            p=jnp.zeros((P, m), self.dtype),
+            phi=jnp.zeros((P, F), self.dtype),
+            phi_if=jnp.zeros((P, 2, B), self.dtype),
+        )
+
+    def _solve_constraint(self, x):
+        """Pin the solve-phase layout when running under an SPMD mesh."""
+        if self.spmd_mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if self.full_mesh_solve:
+            spec = P("solve", *([None] * (x.ndim - 2)), "assemble")
+        else:
+            spec = P("solve", *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.spmd_mesh, spec))
+
+    def _bands(self, plan: RepartitionPlan, diag, upper, lower, iface):
+        """LDU buffers → repartitioned DIA bands via the update pattern."""
+        buffers = buffer_from_parts(diag, upper, lower, iface)  # (P_f, L)
+        n_c = buffers.shape[0] // plan.alpha
+        grouped = buffers.reshape(n_c, plan.alpha, plan.buffer_len)
+        return self._update(plan, grouped, target="dia")
+
+    def _spmv(self, plan: RepartitionPlan, bands):
+        offsets = tuple(int(o) for o in plan.dia_offsets)
+        if (self.full_mesh_solve and self.spmd_mesh is not None
+                and plan.alpha > 1):
+            # beyond-paper mode: explicit shard_map SpMV with linear halo
+            # permutes — rows sharded over BOTH mesh axes (GSPMD alone
+            # re-gathers banded shifts; see EXPERIMENTS.md §Perf C3)
+            from repro.sparse.shardmap_spmv import make_spmv_full_mesh
+
+            fm = make_spmv_full_mesh(
+                self.spmd_mesh, offsets=offsets, plane=plan.plane,
+                n_coarse=self.n_coarse, alpha=plan.alpha,
+                m_coarse=plan.m_coarse)
+            return lambda x: fm(bands, x)
+
+        def A(x):
+            return spmv_dia(bands, x, offsets=offsets, plane=plan.plane)
+
+        return A
+
+    # ---- one timestep ---------------------------------------------------
+    def _step_impl(self, state: PisoState, dt: float):
+        asm = self.asm
+        U, p, phi, phi_if = state
+
+        # momentum predictor (fine partition, BiCGStab, Jacobi)
+        sysM = asm.assemble_momentum(U, phi, phi_if, p, dt)
+        bandsM = self._bands(self.plan_mom, sysM.diag, sysM.upper, sysM.lower,
+                             sysM.iface)
+        A_mom = self._spmv(self.plan_mom, bandsM)
+        Mj = jacobi_preconditioner(sysM.diag)
+
+        def solve_component(b, x0):
+            return bicgstab(A_mom, b, x0, M=Mj, tol=self.mom_tol, maxiter=500)
+
+        from repro.solvers.bicgstab import BiCGStabResult
+        res = jax.vmap(solve_component, in_axes=(2, 2),
+                       out_axes=BiCGStabResult(x=2, iters=0, residual=0))(
+            sysM.source, U)
+        U = res.x
+        mom_iters = jnp.max(res.iters)
+
+        p_iters = []
+        p_res = jnp.zeros((), self.dtype)
+        for _ in range(self.n_correctors):
+            # H(U)/A and face fluxes of HbyA
+            rAU = asm.V / sysM.diag
+            HbyA = (sysM.source - _offdiag3(asm, sysM, U)) / sysM.diag[..., None]
+            phiH, phiH_if = asm.face_flux(HbyA)
+            sysP = asm.assemble_pressure(rAU, phiH, phiH_if)
+            bandsP = self._solve_constraint(
+                self._bands(self.plan_p, sysP.diag, sysP.upper,
+                            sysP.lower, sysP.iface))
+            A_p = self._spmv(self.plan_p, bandsP)
+            # repartition RHS / initial guess to the coarse partition
+            b_c = self._solve_constraint(sysP.source.reshape(self.n_coarse, -1))
+            x0_c = self._solve_constraint(p.reshape(self.n_coarse, -1))
+            diag_c = sysP.diag.reshape(self.n_coarse, -1)
+            sol = cg(A_p, b_c, x0_c, M=jacobi_preconditioner(diag_c),
+                     tol=self.p_tol, maxiter=2000)
+            p = sol.x.reshape(p.shape)  # scatter back to the fine partition
+            p_iters.append(sol.iters)
+            p_res = sol.residual
+            # corrections
+            phi, phi_if = asm.correct_flux(sysP, phiH, phiH_if, p)
+            U = HbyA - rAU[..., None] * asm.grad(p)
+
+        cont = jnp.max(jnp.abs(asm.divergence(phi, phi_if))) / asm.V
+        stats = StepStats(mom_iters=mom_iters, p_iters=jnp.stack(p_iters),
+                          continuity_err=cont, p_residual=p_res)
+        return PisoState(U, p, phi, phi_if), stats
+
+    def step(self, state: PisoState, dt: float):
+        return self._step(state, dt)
+
+    def run(self, n_steps: int, dt: float, state: PisoState | None = None):
+        state = state or self.initial_state()
+        stats = None
+        for _ in range(n_steps):
+            state, stats = self.step(state, dt)
+        return state, stats
+
+
+def _offdiag3(asm: CavityAssembly, sysM, U: jax.Array) -> jax.Array:
+    """Off-diagonal apply per velocity component: (P, m, 3)."""
+    return jnp.stack([asm.offdiag_apply(sysM, U[..., c]) for c in range(3)],
+                     axis=2)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``spmv_dia`` — banded SpMV, the inner loop of the repartitioned CG/BiCGStab
+  solves (the paper's "linear solver performance" axis, figs. 4/7/8).
+* ``coef_update`` — the permutation P applied to the gathered coefficient
+  buffer (paper fig. 3, update procedure).
+* ``stencil_assembly`` — fused on-device FVM coefficient assembly (the
+  "refactoring approach" baseline the paper compares against).
+
+Each kernel directory holds ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper, interpret-mode switch) and ``ref.py``
+(pure-jnp oracle).  Kernels are validated in interpret mode on CPU and
+written for TPU as the target (8x128 VPU lanes, VMEM tiling).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.coef_update.ops import coef_update_pallas  # noqa: F401

@@ -1,0 +1,58 @@
+"""Permutation-apply kernel: solver values = buf[P∘U] (paper fig. 3a/3b).
+
+The repartitioned coefficient update is a *static* permutation of the
+concatenated LDU buffers into the solver layout (DIA bands here).  On GPU the
+paper scatters into a row-major COO view; on TPU we express the permutation
+as a blocked **gather** with the full staging buffer resident in VMEM:
+
+* the gather indices are compile-time constants (the plan), streamed in
+  row-block tiles;
+* the staging buffer (alpha * L + 1 floats) stays in VMEM across grid steps —
+  for sensible DOFs/device this is a few MB (asserted in ops.py);
+* out-of-pattern slots carry the sentinel index (last buffer slot, pinned 0).
+
+TPU note: 1-D dynamic gather from VMEM lowers via the vector permute unit;
+on very old toolchains it falls back to a scalar loop — still correct. The
+kernel is validated against ref.py in interpret mode (this container is
+CPU-only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _kernel(buf_ref, src_ref, out_ref):
+    buf = buf_ref[...]
+    idx = src_ref[...]
+    out_ref[...] = jnp.take(buf, idx, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def coef_update_single(buf: jax.Array, src: jax.Array, *,
+                       block: int = DEFAULT_BLOCK,
+                       interpret: bool = False) -> jax.Array:
+    """out[i] = buf[src[i]] for one coarse part.
+
+    buf: (alpha*L + 1,) staged coefficients (+ sentinel zero slot);
+    src: (n_out,) int32 plan indices, n_out % block == 0.
+    """
+    n_out = src.shape[0]
+    assert n_out % block == 0, (n_out, block)
+    grid = (n_out // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(buf.shape, lambda i: (0,)),   # staging buffer in VMEM
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), buf.dtype),
+        interpret=interpret,
+    )(buf, src)

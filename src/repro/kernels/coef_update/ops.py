@@ -1,0 +1,41 @@
+"""Public wrapper: apply a RepartitionPlan's P∘U with the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.repartition import RepartitionPlan
+from repro.kernels.coef_update.coef_update import (
+    coef_update_single, DEFAULT_BLOCK)
+
+VMEM_F32_BUDGET = 3_000_000
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def coef_update_pallas(plan: RepartitionPlan, buf_cat: jax.Array,
+                       target: str = "dia",
+                       block: int = DEFAULT_BLOCK) -> jax.Array:
+    """buf_cat: (n_coarse, alpha*L + 1) staged buffers → solver values.
+
+    Returns DIA bands (n_coarse, nb, m_c) or ELL values (n_coarse, m_c, K).
+    """
+    assert buf_cat.shape[1] <= VMEM_F32_BUDGET
+    src_np = plan.dia_src if target == "dia" else plan.ell_src
+    flat = src_np.reshape(-1).astype(np.int32)
+    pad = (-len(flat)) % block
+    flat = np.concatenate([flat, np.full(pad, plan.sentinel, np.int32)])
+    src = jnp.asarray(flat)
+    fn = functools.partial(coef_update_single, block=block,
+                           interpret=not _on_tpu())
+    out = jax.vmap(lambda b: fn(b, src))(buf_cat)
+    out = out[:, :src_np.size]
+    if target == "dia":
+        nb = len(plan.dia_offsets)
+        return out.reshape(-1, nb, plan.m_coarse)
+    return out.reshape(-1, plan.m_coarse, plan.K)

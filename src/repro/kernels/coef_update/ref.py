@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the coefficient-update permutation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coef_update_ref(buf: jax.Array, src: jax.Array) -> jax.Array:
+    return jnp.take(buf, src, axis=0)

@@ -1,0 +1,1 @@
+from repro.kernels.spmv_dia.ops import spmv_dia_pallas  # noqa: F401

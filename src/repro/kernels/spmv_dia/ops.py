@@ -1,0 +1,43 @@
+"""Public wrapper: stacked-part banded SpMV through the Pallas kernel.
+
+Falls back to interpret mode off-TPU (this container) — same kernel body,
+executed in Python; numerics identical to the TPU lowering path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv_dia.spmv_dia import spmv_dia_single, DEFAULT_BLOCK_ROWS
+from repro.sparse.distributed import x_pad as make_x_pad
+
+VMEM_F32_BUDGET = 3_500_000  # floats of x_pad we allow resident in VMEM
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "plane", "block_rows"))
+def spmv_dia_pallas(bands: jax.Array, x: jax.Array, *,
+                    offsets: tuple[int, ...], plane: int,
+                    block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Stacked SpMV: bands (P, nb, m), x (P, m) → y (P, m).
+
+    Pads rows to a block multiple, builds the halo'd x_pad (the shifts across
+    the part axis lower to collective-permute under pjit), then vmaps the
+    single-part Pallas kernel over parts.
+    """
+    P, nb, m = bands.shape
+    assert m + 2 * plane <= VMEM_F32_BUDGET, "x_pad exceeds the VMEM budget"
+    xp = make_x_pad(x, plane)  # (P, m + 2*plane)
+    pad = (-m) % block_rows
+    if pad:
+        bands = jnp.pad(bands, ((0, 0), (0, 0), (0, pad)))
+        xp = jnp.pad(xp, ((0, 0), (0, pad)))
+    fn = functools.partial(spmv_dia_single, offsets=offsets, plane=plane,
+                           block_rows=block_rows, interpret=not _on_tpu())
+    y = jax.vmap(fn)(bands, xp)
+    return y[:, :m]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the DIA SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_dia_ref(bands: jax.Array, x_pad: jax.Array, *,
+                 offsets: tuple[int, ...], plane: int) -> jax.Array:
+    nb, m = bands.shape
+    y = jnp.zeros((m,), bands.dtype)
+    for d, off in enumerate(offsets):
+        y = y + bands[d] * jax.lax.dynamic_slice_in_dim(
+            x_pad, plane + off, m)
+    return y

@@ -1,0 +1,1 @@
+from repro.kernels.stencil_assembly.ops import momentum_bands_pallas  # noqa: F401

@@ -1,0 +1,102 @@
+"""Public wrapper: fused on-device momentum assembly for a coarse partition.
+
+Prepares cell-indexed face-flux/conductance arrays from the velocity field
+(pure jnp: interpolation + masking + part-halo exchange), then fuses
+upwinding/diffusion/diagonal in the Pallas kernel.  This is the
+"refactoring approach" path: no CPU assembly, no repartition traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fvm.mesh import CavityMesh
+from repro.kernels.stencil_assembly.stencil_assembly import (
+    momentum_bands_single, DEFAULT_BLOCK_ROWS)
+from repro.sparse.distributed import halo_exchange
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _cell_masks(mesh: CavityMesh):
+    """Static per-cell masks (numpy): face-presence and boundary-face count."""
+    nx, ny, nzl, P = mesh.nx, mesh.ny, mesh.nzl, mesh.n_parts
+    i, j, k = np.meshgrid(np.arange(nx), np.arange(ny), np.arange(nzl),
+                          indexing="ij")
+    order = (i + nx * (j + ny * k)).ravel()
+    inv = np.argsort(order)
+
+    def field(arr):
+        return arr.ravel()[inv].astype(np.float64)
+
+    mask_x = field(i < nx - 1)                      # has +x internal face
+    mask_y = field(j < ny - 1)
+    mask_z_int = field(k < nzl - 1)                 # slab-internal +z face
+    mask_z_top = field(k == nzl - 1)                # face into the next part
+    # boundary-face count per cell (x/y walls everywhere; z walls on end parts)
+    bcount = ((i == 0).astype(int) + (i == nx - 1) + (j == 0) + (j == ny - 1))
+    bnd_xy = field(bcount)
+    bnd_bottom = field(k == 0)   # only part 0
+    bnd_top = field(k == nzl - 1)  # only part P-1 (the lid)
+    return mask_x, mask_y, mask_z_int, mask_z_top, bnd_xy, bnd_bottom, bnd_top
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "nu", "dt", "block_rows"))
+def momentum_bands_pallas(U: jax.Array, *, mesh: CavityMesh, nu: float,
+                          dt: float,
+                          block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """(P, 7, m) momentum DIA bands from U (P, m, 3) on partition `mesh`."""
+    P, m, _ = U.shape
+    assert P == mesh.n_parts and m == mesh.n_cells
+    nx, plane, A, h = mesh.nx, mesh.plane, mesh.area, mesh.h
+    g = nu * A / h
+    gb = nu * A / (0.5 * h)
+    vdt = mesh.volume / dt
+
+    mask_x, mask_y, mz_int, mz_top, bnd_xy, bnd_bot, bnd_top = [
+        jnp.asarray(a, U.dtype) for a in _cell_masks(mesh)]
+
+    u, v, w = U[..., 0], U[..., 1], U[..., 2]
+
+    def shift_left(a, s):  # a[c + s] with zero fill, within the part
+        return jnp.pad(a, ((0, 0), (0, s)))[:, s:]
+
+    phi_x = 0.5 * (u + shift_left(u, 1)) * A * mask_x
+    phi_y = 0.5 * (v + shift_left(v, nx)) * A * mask_y
+    # z faces: slab-internal plus the face into the next part (halo)
+    _, up = halo_exchange(w, plane)  # (P, plane): next part's bottom plane
+    w_up = shift_left(w, plane) + jnp.pad(up, ((0, 0), (m - plane, 0)))
+    part_has_up = jnp.arange(P) < P - 1
+    mask_z = mz_int + mz_top * part_has_up[:, None].astype(U.dtype)
+    phi_z = 0.5 * (w + w_up) * A * mask_z
+
+    gx = g * mask_x * jnp.ones((P, 1), U.dtype)
+    gy = g * mask_y * jnp.ones((P, 1), U.dtype)
+    gz = g * mask_z
+    bnd = gb * (bnd_xy * jnp.ones((P, 1), U.dtype)
+                + bnd_bot * (jnp.arange(P) == 0)[:, None].astype(U.dtype)
+                + bnd_top * (jnp.arange(P) == P - 1)[:, None].astype(U.dtype))
+
+    pad_rows = (-m) % block_rows
+
+    def padp(a):  # zero halo pad + block pad (x/y shifts never cross parts)
+        return jnp.pad(a, ((0, 0), (plane, plane + pad_rows)))
+
+    def padp_halo(a):
+        # the -plane shift at a part's first plane reads the PREVIOUS part's
+        # top z-faces — fill the left pad from the down halo exchange
+        down, _ = halo_exchange(a, plane)
+        return jnp.pad(jnp.concatenate([down, a], axis=1),
+                       ((0, 0), (0, plane + pad_rows)))
+
+    fn = functools.partial(momentum_bands_single, nx=nx, plane=plane,
+                           vdt=vdt, block_rows=block_rows,
+                           interpret=not _on_tpu())
+    bands = jax.vmap(fn)(padp(phi_x), padp(phi_y), padp_halo(phi_z),
+                         padp(gx), padp(gy), padp_halo(gz), padp(bnd))
+    return bands[:, :, :m]

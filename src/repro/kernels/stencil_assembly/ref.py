@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused momentum-assembly kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def momentum_bands_ref(phi_x, phi_y, phi_z, gx, gy, gz, bnd, *,
+                       nx: int, plane: int, vdt: float) -> jax.Array:
+    """Same math as the kernel, whole-array.  Inputs padded by `plane`."""
+    m = phi_x.shape[0] - 2 * plane
+
+    def at(a, shift):
+        return jax.lax.dynamic_slice_in_dim(a, plane + shift, m)
+
+    px, py, pz = at(phi_x, 0), at(phi_y, 0), at(phi_z, 0)
+    pxm, pym, pzm = at(phi_x, -1), at(phi_y, -nx), at(phi_z, -plane)
+    cgx, cgy, cgz = at(gx, 0), at(gy, 0), at(gz, 0)
+    cgxm, cgym, cgzm = at(gx, -1), at(gy, -nx), at(gz, -plane)
+
+    bands = jnp.stack([
+        jnp.minimum(-pzm, 0.0) - cgzm,
+        jnp.minimum(-pym, 0.0) - cgym,
+        jnp.minimum(-pxm, 0.0) - cgxm,
+        (vdt + at(bnd, 0)
+         + jnp.maximum(px, 0.0) + cgx + jnp.maximum(-pxm, 0.0) + cgxm
+         + jnp.maximum(py, 0.0) + cgy + jnp.maximum(-pym, 0.0) + cgym
+         + jnp.maximum(pz, 0.0) + cgz + jnp.maximum(-pzm, 0.0) + cgzm),
+        jnp.minimum(px, 0.0) - cgx,
+        jnp.minimum(py, 0.0) - cgy,
+        jnp.minimum(pz, 0.0) - cgz,
+    ])
+    return bands

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned LM-family architectures on one unified stack."""
+from repro.models.config import ModelConfig, LayerKind  # noqa: F401

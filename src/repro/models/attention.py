@@ -1,0 +1,230 @@
+"""Attention: GQA/MQA/MHA with RoPE, qk-norm, sliding window; flash-chunked.
+
+The score matrix is never materialized at (S, S): a scan over KV chunks keeps
+an online-softmax carry (m, l, acc) per Q chunk — the standard flash
+algorithm in pure JAX (lax.scan), so 32k prefill compiles with bounded
+transients on any backend.  Chunk sizes are tunable (perf levers, see
+EXPERIMENTS.md §Perf).
+
+Decode (single query) attends over the full cache with a positional validity
+mask; XLA turns the masked reduction over the (sharded) cache length into
+partial softmax + all-reduce — flash-decoding for free at the HLO level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    norm_eps: float = 1e-5
+    chunk_q: int = 128
+    chunk_kv: int = 1024
+    # perf lever (EXPERIMENTS.md §Perf): with a sliding window, each Q chunk
+    # only visits the KV chunks inside its window instead of all of them
+    swa_chunk_skip: bool = False
+
+
+def attention_init(key, d_model: int, spec: AttnSpec, dtype):
+    ks = jax.random.split(key, 6)
+    H, Hk, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d_model, H * hd), dtype),
+        "wk": dense_init(ks[1], (d_model, Hk * hd), dtype),
+        "wv": dense_init(ks[2], (d_model, Hk * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d_model), dtype),
+    }
+    if spec.qk_norm:
+        p["q_gamma"] = jnp.ones((hd,), dtype)
+        p["k_gamma"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, spec: AttnSpec, positions):
+    from repro.models.sharding import constrain
+    B, S, _ = x.shape
+    H, Hk, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = constrain(jnp.einsum("bsd,dh->bsh", x, p["wq"]),
+                  "dp", None, "model").reshape(B, S, H, hd)
+    k = constrain(jnp.einsum("bsd,dh->bsh", x, p["wk"]),
+                  "dp", None, "model").reshape(B, S, Hk, hd)
+    v = constrain(jnp.einsum("bsd,dh->bsh", x, p["wv"]),
+                  "dp", None, "model").reshape(B, S, Hk, hd)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_gamma"], spec.norm_eps)
+        k = rms_norm(k, p["k_gamma"], spec.norm_eps)
+    if spec.use_rope:
+        q = rope(q, positions, spec.rope_theta)
+        k = rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, kv_pos, spec: AttnSpec):
+    """(…q, …kv) additive mask from positions (-1 marks padding)."""
+    valid = (kv_pos[None, :] >= 0) & (q_pos[:, None] >= 0)
+    if spec.causal:
+        valid &= kv_pos[None, :] <= q_pos[:, None]
+    if spec.sliding_window is not None:
+        valid &= q_pos[:, None] - kv_pos[None, :] < spec.sliding_window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, spec: AttnSpec) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, Hk, hd); positions: (Sq,), (Skv,).
+    Returns (B, Sq, H, hd).
+    """
+    from repro.models.sharding import constrain
+    B, Sq, H, hd = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    q = constrain(q, "dp", None, "model", None)
+    k = constrain(k, "dp", None, "model", None)
+    v = constrain(v, "dp", None, "model", None)
+    G = H // Hk
+    cq = min(spec.chunk_q, Sq)
+    ckv = min(spec.chunk_kv, Skv)
+    pad_q = (-Sq) % cq
+    pad_kv = (-Skv) % ckv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad_kv), constant_values=-1)
+    nq, nkv = q.shape[1] // cq, k.shape[1] // ckv
+    scale = hd ** -0.5
+
+    qc = q.reshape(B, nq, cq, Hk, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # qc: (nq, B, Hk, G, cq, hd)
+    kc = k.reshape(B, nkv, ckv, Hk, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nkv, ckv, Hk, hd).transpose(1, 0, 3, 2, 4)
+    qpc = q_pos.reshape(nq, cq)
+    kpc = kv_pos.reshape(nkv, ckv)
+
+    # SWA chunk skip: a Q chunk at positions [i·cq, i·cq+cq) only needs KV
+    # chunks covering [i·cq − W + 1, i·cq + cq) — a fixed count nw per chunk
+    swa_skip = (spec.swa_chunk_skip and spec.sliding_window is not None
+                and spec.causal and Sq == Skv)
+    if swa_skip:
+        W = spec.sliding_window
+        nw = min(nkv, (W + cq - 2) // ckv + 2)
+        swa_skip = nw < nkv
+
+    def q_block(qb, qp, qi):
+        # online softmax over kv chunks
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kp = inp
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            s = s + _mask(qp, kp, spec)[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        if swa_skip:
+            lo = (qi * cq - spec.sliding_window + 1) // ckv
+            start = jnp.clip(lo, 0, nkv - nw)
+            kcs = jax.lax.dynamic_slice_in_dim(kc, start, nw, axis=0)
+            vcs = jax.lax.dynamic_slice_in_dim(vc, start, nw, axis=0)
+            kps = jax.lax.dynamic_slice_in_dim(kpc, start, nw, axis=0)
+        else:
+            kcs, vcs, kps = kc, vc, kpc
+        m0 = jnp.full((B, Hk, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kcs, vcs, kps))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, Hk, G, cq, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (qc, qpc, jnp.arange(nq, dtype=jnp.int32)))
+    # outs: (nq, B, Hk, G, cq, hd) → (B, Sq, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def attn_train(p, x, positions, spec: AttnSpec, memory=None, memory_pos=None):
+    """Self- (or cross-) attention over a full sequence (train/prefill).
+
+    Returns (y, (k, v)) so prefill can seed the decode cache.
+    """
+    q, k, v = _project_qkv(p, x, spec, positions)
+    if memory is not None:  # cross-attention: keys/values from the memory
+        km, vm = memory
+        out = flash_attention(q, km, vm, positions, memory_pos, spec)
+        kv = (km, vm)
+    else:
+        out = flash_attention(q, k, v, positions, positions, spec)
+        kv = (k, v)
+    B, S = x.shape[:2]
+    from repro.models.sharding import constrain, out_spec
+    o = constrain(out.reshape(B, S, spec.n_heads * spec.head_dim),
+                  "dp", None, "model")
+    y = constrain(jnp.einsum("bsh,hd->bsd", o, p["wo"]), *out_spec())
+    return y, kv
+
+
+def attn_decode(p, x, pos, cache, spec: AttnSpec):
+    """Single-token decode.  x: (B, 1, d); cache: dict(k, v) of
+    (B, S_cache, Hk, hd); pos: scalar current position.
+
+    Returns (y, updated cache).  The validity mask kv_pos<=pos confines
+    attention to written slots; with the cache length sharded, XLA emits
+    partial-softmax + all-reduce (flash-decoding).  Sliding-window caches
+    of exactly W slots are treated as ring buffers (slot = position mod W).
+    """
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, spec, positions)
+    S_max = cache["k"].shape[1]
+    ring = spec.sliding_window is not None and S_max == spec.sliding_window
+    slot = pos % S_max if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    j = jnp.arange(S_max, dtype=jnp.int32)
+    if ring:
+        # slot j holds the most recent position ≡ j (mod W); never-written
+        # slots resolve to negative positions and are masked out
+        kv_pos = pos - ((pos - j) % S_max)
+        kv_pos = jnp.where(kv_pos >= 0, kv_pos, -1)
+    else:
+        kv_pos = jnp.where(j <= pos, j, -1)  # only written slots
+
+    Hk, G, hd = spec.n_kv_heads, spec.n_heads // spec.n_kv_heads, spec.head_dim
+    qh = q.reshape(B, spec.n_kv_heads, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    mask = _mask(positions, kv_pos, spec)[0]  # (S_max,)
+    s = s + mask[None, None, None, :]
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    y = jnp.einsum("bh,hd->bd",
+                   out.reshape(B, spec.n_heads * hd).astype(x.dtype), p["wo"])
+    return y[:, None, :], {"k": k, "v": v}

@@ -1,0 +1,206 @@
+"""Shared building blocks: RMSNorm, RoPE, gated MLP, top-k MoE.
+
+Conventions: params are plain dicts of jnp arrays; compute dtype follows the
+input; reductions (norms, softmax, router) accumulate in f32.  Weight layouts
+keep the TP dimension trailing/leading as the sharding policy expects
+(models/sharding.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    xr2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "geglu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (gated or plain)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, ff), dtype),
+         "w_down": dense_init(ks[1], (ff, d), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, act: str) -> jax.Array:
+    from repro.models.sharding import constrain, out_spec
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    up = constrain(up, "dp", None, "model")
+    if "w_gate" in p:
+        up = up * act_fn(act)(jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    else:
+        up = act_fn(act)(up)
+    out = jnp.einsum("...f,fd->...d", up, p["w_down"])
+    return constrain(out, *out_spec())
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, dropless einsum dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, d: int, ff: int, n_experts: int, gated: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"router": dense_init(ks[0], (d, n_experts), jnp.float32, scale=0.02),
+         "w_up": dense_init(ks[1], (n_experts, d, ff), dtype),
+         "w_down": dense_init(ks[2], (n_experts, ff, d), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[3], (n_experts, d, ff), dtype)
+    return p
+
+
+def moe_apply(p, x: jax.Array, *, top_k: int, act: str) -> jax.Array:
+    """Dropless top-k MoE, expert-looped dense dispatch.
+
+    x: (B, S, d).  Routing in f32; every expert processes every token,
+    masked by its combine weight — the unrolled loop keeps the transient at
+    one (B, S, ff) per expert instead of the (E, B, S, ff) a fused dispatch
+    einsum would materialize (~1 TB/device at Mixtral train shapes).  The
+    compute overhead is E/top_k vs an ideal sorted dispatch — the recorded
+    baseline trade-off (see EXPERIMENTS.md §Perf for the hillclimbed
+    alternative).
+    """
+    from repro.models.sharding import constrain
+    E = p["w_up"].shape[0]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    weights, idx = jax.lax.top_k(logits, top_k)            # (B,S,k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    combine = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32)
+                      * weights[..., None], axis=2)        # (B,S,E)
+    combine = combine.astype(x.dtype)
+    def block(args):
+        xb, cb = args  # (B, cs, d), (B, cs, E)
+        ob = jnp.zeros_like(xb)
+        for e in range(E):
+            up = jnp.einsum("bsd,df->bsf", xb, p["w_up"][e])
+            up = constrain(up, "dp", None, "model")
+            if "w_gate" in p:
+                up = up * act_fn(act)(
+                    jnp.einsum("bsd,df->bsf", xb, p["w_gate"][e]))
+            else:
+                up = act_fn(act)(up)
+            y = jnp.einsum("bsf,fd->bsd", up, p["w_down"][e])
+            ob = ob + cb[..., e, None] * y
+        return ob
+
+    B, S, d = x.shape
+    cs = 4096  # seq-chunk the pointwise expert loop: per-chunk transients
+    if S > cs and S % cs == 0:
+        nc = S // cs
+        xc = x.reshape(B, nc, cs, d).swapaxes(0, 1)
+        cc = combine.reshape(B, nc, cs, E).swapaxes(0, 1)
+        out = jax.lax.map(block, (xc, cc)).swapaxes(0, 1).reshape(B, S, d)
+    else:
+        out = block((x, combine))
+    return constrain(out, "dp", None, None)
+
+
+def moe_apply_sorted(p, x: jax.Array, *, top_k: int, act: str,
+                     capacity_factor: float = 1.25) -> jax.Array:
+    """Capacity-based sorted MoE dispatch (the hillclimbed alternative).
+
+    Flattens tokens, sorts the (token, expert) assignments by expert, packs
+    each expert's tokens into a fixed-capacity buffer (E, C, d), runs E
+    batched matmuls, and combines.  Compute scales with N·top_k·cf instead
+    of the dense loop's N·E — a (E / top_k·cf)x FLOP cut (6.4x for phi-3.5's
+    16e top-2 at cf=1.25) at the cost of dropping tokens past capacity
+    (standard on TPU) and a sort + two gathers.  Long sequences are chunked
+    like the dense path (the dispatch buffers are otherwise O(S)).
+    """
+    cs = 2048
+    B, S, d = x.shape
+    if S > cs and S % cs == 0:
+        nc = S // cs
+        xc = x.reshape(B, nc, cs, d).swapaxes(0, 1)
+        out = jax.lax.map(
+            lambda xb: _moe_sorted_block(p, xb, top_k=top_k, act=act,
+                                         capacity_factor=capacity_factor),
+            xc)
+        return out.swapaxes(0, 1).reshape(B, S, d)
+    return _moe_sorted_block(p, x, top_k=top_k, act=act,
+                             capacity_factor=capacity_factor)
+
+
+def _moe_sorted_block(p, x, *, top_k, act, capacity_factor):
+    from repro.models.sharding import constrain
+    B, S, d = x.shape
+    E = p["w_up"].shape[0]
+    N = B * S
+    xf = x.reshape(N, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    weights, idx = jax.lax.top_k(logits, top_k)          # (N, k)
+    weights = jax.nn.softmax(weights, axis=-1).astype(x.dtype)
+
+    C = int(capacity_factor * N * top_k / E + 0.999)
+    # sort assignments by expert; position-in-expert via a cumulative count
+    flat_e = idx.reshape(-1)                              # (N*k,)
+    order = jnp.argsort(flat_e)                           # stable
+    sorted_e = flat_e[order]
+    # rank within expert group
+    pos_in_e = jnp.arange(N * top_k) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")
+    keep = pos_in_e < C
+    slot = sorted_e * C + jnp.where(keep, pos_in_e, 0)    # (N*k,)
+    token_of = order // top_k
+
+    # dispatch: (E*C, d) buffer gathered from tokens (dropped slots → 0)
+    disp = jnp.zeros((E * C, d), x.dtype)
+    disp = disp.at[jnp.where(keep, slot, E * C - 1)].add(
+        jnp.where(keep[:, None], xf[token_of], 0.0).astype(x.dtype),
+        mode="drop")
+    disp = disp.reshape(E, C, d)
+
+    up = jnp.einsum("ecd,edf->ecf", disp, p["w_up"])
+    up = constrain(up, None, None, "model")
+    if "w_gate" in p:
+        up = up * act_fn(act)(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]))
+    else:
+        up = act_fn(act)(up)
+    y = jnp.einsum("ecf,efd->ecd", up, p["w_down"]).reshape(E * C, d)
+
+    # combine: gather each kept assignment's output, weight, scatter-add
+    w_flat = weights.reshape(-1)[order]
+    contrib = jnp.where(keep[:, None], y[slot] * w_flat[:, None], 0.0)
+    out = jnp.zeros((N, d), x.dtype).at[token_of].add(contrib.astype(x.dtype))
+    return constrain(out.reshape(B, S, d), "dp", None, None)

@@ -1,0 +1,231 @@
+"""Divisibility-aware sharding policy engine (DP/TP/SP/EP + FSDP).
+
+Maps every parameter / cache / activation leaf to a PartitionSpec on the
+production mesh:
+
+* **TP** — matmul contraction-free dims (flattened head dim, d_ff, vocab)
+  shard over ``model``;
+* **FSDP/ZeRO** — the remaining large dim shards over the data-parallel axes
+  (``("pod","data")`` on the multi-pod mesh) so parameters + optimizer states
+  scale with the fleet;
+* **EP** — expert dims shard over the data axes when divisible (phi-3.5's 16
+  experts on a 16-way axis), else fall back to FSDP on d_model;
+* every rule checks divisibility and falls back to ``None`` (replication) —
+  this is what absorbs awkward configs (starcoder2's 36 heads, paligemma's
+  257 216 vocab) without per-arch special cases.
+
+Batch dims shard over the data axes; cache sequence dims shard over
+``model`` (flash-decoding via XLA partial softmax); the period/stack leading
+dim is never sharded.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["dp_axes", "param_shardings", "cache_shardings",
+           "batch_shardings", "make_sharding", "set_activation_mesh",
+           "constrain"]
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hints.  GSPMD propagates from FSDP-sharded weights and,
+# left alone, may shard activations on contraction dims and REPLICATE batch
+# (observed: full-batch logits/attention transients).  Launch code installs
+# the mesh here; the model then pins activations at layer boundaries:
+# batch → data axes, head/ff/vocab dims → model axis.  With no mesh installed
+# (unit tests, single device) constraints are no-ops.
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: Mesh | None = None
+_SP_OUTPUTS = False
+
+
+def set_activation_mesh(mesh: Mesh | None):
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def set_sp_outputs(on: bool):
+    """Collective lever: resolve row-parallel sublayer outputs directly into
+    the sequence-sharded domain (reduce-scatter) instead of replicating them
+    (all-reduce) — halves the boundary collective payload per ring step and
+    shrinks the parsed per-device result bytes by the model-axis factor."""
+    global _SP_OUTPUTS
+    _SP_OUTPUTS = on
+
+
+def out_spec() -> tuple:
+    return ("dp", "model", None) if _SP_OUTPUTS else ("dp", None, None)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against the installed mesh, with per-dim
+    divisibility fallback.  ``axes``: one entry per dim ('dp' = data axes)."""
+    if _ACT_MESH is None:
+        return x
+    entries = []
+    for i, a in enumerate(axes):
+        if a == "dp":
+            a = dp_axes(_ACT_MESH)
+        entries.append(_fit(_ACT_MESH, x.shape[i], a))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*entries)))
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Return `axes` if they evenly divide dim, else progressively shrink."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    while axes:
+        if dim % _axsize(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[1:]  # drop the leading (pod) axis first
+    return None
+
+
+def make_sharding(mesh: Mesh, *dim_axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*dim_axes))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules, keyed by leaf name (path suffix)
+# ---------------------------------------------------------------------------
+
+def _param_rule(name: str, shape: tuple[int, ...], mesh: Mesh,
+                stack_dims: int):
+    """PartitionSpec entries for the non-stack dims of one parameter."""
+    dp = dp_axes(mesh)
+    dims = shape[stack_dims:]
+    nd = len(dims)
+
+    def spec(*entries):
+        fitted = [_fit(mesh, dims[i], entries[i]) for i in range(nd)]
+        return P(*([None] * stack_dims), *fitted)
+
+    if name in ("embed",):            # (V, d): vocab TP; d replicated —
+        # FSDP on d would put the data axis on the head-matmul contraction
+        # dim and force batch regathers (see module docstring)
+        return spec("model", None)
+    if name in ("lm_head",):          # (d, V)
+        return spec(None, "model")
+    if name in ("wq", "wk", "wv"):    # (d, H*hd): TP on flattened heads
+        return spec(dp, "model")
+    if name in ("wo",):               # (H*hd, d)
+        return spec("model", dp)
+    if name in ("w_up", "w_gate"):
+        if nd == 3:                   # MoE (E, d, ff)
+            if _fit(mesh, dims[0], dp):      # EP: experts over data axes
+                return spec(dp, None, "model")
+            return spec(None, dp, "model")   # else FSDP on d (mixtral: E=8)
+        return spec(dp, "model")      # dense (d, ff)
+    if name in ("w_down",):
+        if nd == 3:                   # (E, ff, d)
+            if _fit(mesh, dims[0], dp):
+                return spec(dp, "model", None)
+            return spec(None, "model", dp)
+        return spec("model", dp)      # (ff, d)
+    if name in ("router",):           # (d, E) small
+        return spec(None, None)
+    if name in ("in_proj",):          # mamba (d, 2*di)
+        return spec(dp, "model")
+    if name in ("x_proj",):           # (di, dt_rank + 2 ds)
+        return spec("model", None)
+    if name in ("dt_proj",):          # (r, di)
+        return spec(None, "model")
+    if name in ("out_proj",):         # (di, d)
+        return spec("model", dp)
+    if name in ("conv_w",):           # (k, di)
+        return spec(None, "model")
+    if name in ("A_log", "D", "conv_b", "dt_bias"):  # (di, ...) vectors
+        return spec("model", *(None,) * (nd - 1))
+    if name in ("wr", "wk6", "wv6", "wg"):  # rwkv square mats
+        return spec(dp, "model")
+    if name in ("wA",):               # (d, r)
+        return spec(dp, None)
+    if name in ("wB",):               # (r, d)
+        return spec(None, "model")
+    # norms, biases, mus, u, w0, ln_g, small leftovers: replicate
+    return P(*([None] * stack_dims), *([None] * nd))
+
+
+_STACKED_PREFIXES = ("blocks", "encoder")
+
+
+def param_shardings(mesh: Mesh, param_specs) -> dict:
+    """NamedSharding tree matching ``lm.param_specs(cfg)`` / init_params."""
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        stack = 1 if (names and names[0] in _STACKED_PREFIXES) else 0
+        name = names[-1] if names else ""
+        # rwkv shares wk/wv names with attention — same rule applies (d, d)
+        pspec = _param_rule(name, leaf.shape, mesh, stack)
+        return NamedSharding(mesh, pspec)
+
+    return jax.tree_util.tree_map_with_path(visit, param_specs)
+
+
+# ---------------------------------------------------------------------------
+# cache / activation rules
+# ---------------------------------------------------------------------------
+
+def cache_shardings(mesh: Mesh, cache_specs) -> dict:
+    dp = dp_axes(mesh)
+
+    def visit(path, leaf):
+        name = getattr(path[-1], "key", "")
+        dims = leaf.shape  # leading dim = n_periods (never sharded)
+        if name in ("k", "v"):       # (np, B, S, Hk, hd): batch DP + seq TP
+            return NamedSharding(mesh, P(None, _fit(mesh, dims[1], dp),
+                                         _fit(mesh, dims[2], "model"),
+                                         None, None))
+        if name in ("ck", "cv"):     # (np, B, M, Hk, hd)
+            return NamedSharding(mesh, P(None, _fit(mesh, dims[1], dp),
+                                         None, None, None))
+        if name == "ssm":            # (np, B, di, ds)
+            return NamedSharding(mesh, P(None, _fit(mesh, dims[1], dp),
+                                         _fit(mesh, dims[2], "model"), None))
+        if name == "conv":           # (np, B, k, di)
+            return NamedSharding(mesh, P(None, _fit(mesh, dims[1], dp),
+                                         None, _fit(mesh, dims[3], "model")))
+        if name == "S":              # (np, B, H, hd, hd)
+            return NamedSharding(mesh, P(None, _fit(mesh, dims[1], dp),
+                                         _fit(mesh, dims[2], "model"),
+                                         None, None))
+        if name in ("last", "ffn_last"):  # (np, B, d)
+            return NamedSharding(mesh, P(None, _fit(mesh, dims[1], dp),
+                                         _fit(mesh, dims[2], "model")))
+        return NamedSharding(mesh, P(*([None] * len(dims))))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_specs)
+
+
+def batch_shardings(mesh: Mesh, batch_specs) -> dict:
+    """tokens/labels (B, S) → batch over DP axes; frontend (B, F, d) same."""
+    dp = dp_axes(mesh)
+
+    def visit(path, leaf):
+        if leaf.shape == ():  # scalars (pos)
+            return NamedSharding(mesh, P())
+        entries = [_fit(mesh, leaf.shape[0], dp)] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(visit, batch_specs)

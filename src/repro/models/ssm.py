@@ -1,0 +1,107 @@
+"""Mamba (S6) selective state-space block — used standalone and in Jamba.
+
+Faithful structure: in_proj → depthwise causal conv1d → selective
+(input-dependent) dt/B/C → diagonal SSM scan → gated out_proj.  The scan is
+``lax.scan`` over time (compile-size O(1) in sequence length); the state
+``(B, d_inner, d_state)`` is the decode cache.  A chunked parallel scan is a
+recorded perf lever (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.scan_utils import chunked_scan
+from repro.models.sharding import constrain
+
+
+def mamba_init(key, d_model: int, d_inner: int, d_state: int, d_conv: int,
+               dtype):
+    ks = jax.random.split(key, 7)
+    dt_rank = max(1, math.ceil(d_model / 16))
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), dtype, scale=0.1),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32) - 4.0,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def _selective(p, xin, dtype):
+    """dt, B, C from the post-conv activations.  xin: (B, S, d_inner)."""
+    d_state = p["A_log"].shape[1]
+    dt_rank = p["x_proj"].shape[1] - 2 * d_state
+    proj = jnp.einsum("bsd,dk->bsk", xin, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _conv_step(w, b, window):
+    """Depthwise causal conv over a (B, d_conv, d_inner) window."""
+    return jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w) + b)
+
+
+def mamba_apply(p, x: jax.Array, state=None):
+    """x: (B, S, d) → (y, new_state).
+
+    state (decode cache): {"conv": (B, d_conv-1, d_inner),
+    "ssm": (B, d_inner, d_state)}; pass None for a fresh sequence (train).
+    """
+    Bt, S, _ = x.shape
+    dtype = x.dtype
+    d_inner = p["D"].shape[0]
+    d_state = p["A_log"].shape[1]
+    d_conv = p["conv_w"].shape[0]
+
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # d_inner is embarrassingly parallel through the whole recurrence —
+    # shard channels over the model axis (TP for SSMs)
+    xin = constrain(xin, "dp", None, "model")
+    z = constrain(z, "dp", None, "model")
+
+    if state is None:
+        conv_prev = jnp.zeros((Bt, d_conv - 1, d_inner), dtype)
+        ssm0 = jnp.zeros((Bt, d_inner, d_state), jnp.float32)
+    else:
+        conv_prev, ssm0 = state["conv"], state["ssm"]
+
+    # causal depthwise conv via stacked shifts (d_conv is tiny)
+    xpad = jnp.concatenate([conv_prev, xin], axis=1)  # (B, S+c-1, di)
+    conv_out = sum(
+        xpad[:, i:i + S, :] * p["conv_w"][i] for i in range(d_conv))
+    xin = jax.nn.silu(conv_out + p["conv_b"])
+    new_conv = xpad[:, -(d_conv - 1):, :] if d_conv > 1 else conv_prev
+
+    dt, Bm, Cm = _selective(p, xin, dtype)          # (B,S,di),(B,S,ds)x2
+    dt = constrain(dt, "dp", None, "model")
+    A = -jnp.exp(p["A_log"])                         # (di, ds)
+    xf = xin.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt_, Ct = inp                      # (B,di),(B,di),(B,ds),(B,ds)
+        da = jnp.exp(dtt[..., None] * A)            # (B, di, ds)
+        h = da * h + (dtt * xt)[..., None] * Bt_[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Ct)
+        return h, y
+
+    xs = (xf.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    h_last, ys = chunked_scan(step, ssm0, xs)
+    y = ys.swapaxes(0, 1) + xf * p["D"]              # (B, S, di)
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,dk->bsk", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": h_last}

@@ -1,0 +1,56 @@
+"""Batched serving engine: prefill, greedy decode loop, simple scheduler.
+
+``serve_step`` is the unit the dry-run lowers for decode shapes: one new
+token for every sequence in the batch against a KV cache of ``seq_len``.
+``generate`` drives it for real batches (examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+class ServeState(NamedTuple):
+    cache: dict
+    last_tokens: jax.Array  # (B, 1)
+    pos: jax.Array          # scalar int32 — next write position
+
+
+def serve_step(cfg: ModelConfig, params, state: ServeState):
+    """One greedy decode step for the whole batch."""
+    logits, cache = lm.decode_step(cfg, params, state.cache,
+                                   state.last_tokens, state.pos)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return ServeState(cache=cache, last_tokens=nxt, pos=state.pos + 1), nxt
+
+
+def start(cfg: ModelConfig, params, prompts: jax.Array, max_len: int,
+          frontend=None) -> tuple[ServeState, jax.Array]:
+    """Prefill the prompts and return the initial serve state."""
+    logits, cache = lm.prefill(cfg, params, prompts, max_len,
+                               frontend=frontend)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    n_prefix = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+    pos = jnp.asarray(prompts.shape[1] + n_prefix, jnp.int32)
+    return ServeState(cache=cache, last_tokens=first, pos=pos), first
+
+
+def generate(cfg: ModelConfig, params, prompts: jax.Array, n_new: int,
+             frontend=None) -> jax.Array:
+    """Greedy generation of ``n_new`` tokens.  Returns (B, n_new)."""
+    max_len = prompts.shape[1] + n_new + (
+        cfg.frontend_len if cfg.frontend == "vision_stub" else 0)
+    state, first = start(cfg, params, prompts, max_len, frontend)
+    step = jax.jit(functools.partial(serve_step, cfg))
+
+    outs = [first]
+    for _ in range(n_new - 1):
+        state, nxt = step(params, state)
+        outs.append(nxt)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,81 @@
+"""The paper's alpha-fusion repartitioning applied to disaggregated serving.
+
+The over/under-subscription mismatch the paper solves for CFD (fine assembly
+partition vs coarse solve partition) recurs in LLM serving: **prefill** wants
+maximal parallelism over many chips (compute-bound, like matrix assembly);
+**decode** wants few, memory-bound parts per sequence group (like the linear
+solve).  We reuse the identical machinery:
+
+* a *blockwise alpha-fusion connection* over the batch dimension: decode
+  group ``k`` owns the sequences of the alpha prefill groups
+  ``{alpha*k, ..., alpha*k + alpha - 1}`` (paper §3's DOF ownership rule);
+* a *create-once / update-often split*: the repartition plan (pure layout)
+  is built from the cache specs; per handoff only the KV values move;
+* the grouped gather lowers to one collective over the fine axis — the
+  device-direct schedule; a two-hop host-buffer variant mirrors fig. 9.
+
+On one mesh this is expressed as resharding stacked cache arrays from a
+fine batch partition (B over (data, model) — prefill layout) to the coarse
+decode layout (B over data, S over model) — XLA emits exactly the grouped
+all-gather/all-to-all the paper implements with MPI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.partition import BlockPartition, alpha_fusion
+
+
+@dataclasses.dataclass(frozen=True)
+class KVRepartitionPlan:
+    """Blockwise batch-fusion plan between prefill and decode partitions."""
+
+    alpha: int
+    n_fine: int      # prefill groups
+    n_coarse: int    # decode groups
+    batch: int
+
+    @staticmethod
+    def build(batch: int, n_fine: int, alpha: int) -> "KVRepartitionPlan":
+        fine = BlockPartition.uniform(batch, n_fine)
+        conn = alpha_fusion(fine, alpha)
+        return KVRepartitionPlan(alpha=alpha, n_fine=n_fine,
+                                 n_coarse=conn.n_coarse, batch=batch)
+
+    def fine_spec(self) -> P:
+        """Prefill-side cache layout: batch sharded over both mesh axes."""
+        return P(None, ("data", "model"), None, None, None)
+
+    def coarse_spec(self) -> P:
+        """Decode-side layout: batch over data, cache length over model."""
+        return P(None, "data", "model", None, None)
+
+
+def repartition_cache(plan: KVRepartitionPlan, mesh: Mesh, cache,
+                      schedule: str = "device_direct"):
+    """Reshard a stacked KV cache pytree from prefill to decode layout.
+
+    schedule='host_buffer' inserts an intermediate fully-batch-gathered
+    layout (two hops — the paper's fig. 9 'HB' path) instead of the single
+    fused reshard.
+    """
+
+    def move(leaf):
+        if leaf.ndim != 5:  # mamba/rwkv states etc.: just batch-shard
+            spec = P(None, "data", *([None] * (leaf.ndim - 2)))
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+        if schedule == "host_buffer":
+            staged = jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, P(None, "data", None, None, None)))
+            staged = jax.lax.optimization_barrier(staged)
+            return jax.lax.with_sharding_constraint(
+                staged, NamedSharding(mesh, plan.coarse_spec()))
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, plan.coarse_spec()))
+
+    return jax.tree.map(move, cache)

@@ -1,0 +1,3 @@
+"""Distributed Krylov solvers (CG / BiCGStab) with Jacobi preconditioning."""
+from repro.solvers.cg import cg  # noqa: F401
+from repro.solvers.bicgstab import bicgstab  # noqa: F401

@@ -1,0 +1,63 @@
+"""BiCGStab for the (non-symmetric) momentum systems — OpenFOAM's choice.
+
+Same conventions as :mod:`repro.solvers.cg`: stacked part arrays, global
+vdots, ``lax.while_loop``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bicgstab", "BiCGStabResult"]
+
+
+class BiCGStabResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array
+    residual: jax.Array
+
+
+def _vdot(a, b):
+    return jnp.vdot(a, b, precision=jax.lax.Precision.HIGHEST)
+
+
+def bicgstab(A: Callable[[jax.Array], jax.Array], b: jax.Array, x0: jax.Array,
+             *, M: Callable[[jax.Array], jax.Array] | None = None,
+             tol: float = 1e-8, atol: float = 0.0,
+             maxiter: int = 1000) -> BiCGStabResult:
+    if M is None:
+        M = lambda r: r
+
+    b_norm = jnp.sqrt(_vdot(b, b))
+    threshold = jnp.maximum(tol * b_norm, atol)
+
+    r0 = b - A(x0)
+    rhat = r0  # shadow residual
+
+    def cond(state):
+        x, r, p, v, rho, alpha, omega, k = state
+        return (jnp.sqrt(_vdot(r, r)) > threshold) & (k < maxiter)
+
+    def body(state):
+        x, r, p, v, rho, alpha, omega, k = state
+        rho_new = _vdot(rhat, r)
+        beta = (rho_new / rho) * (alpha / omega)
+        p = r + beta * (p - omega * v)
+        phat = M(p)
+        v = A(phat)
+        alpha = rho_new / _vdot(rhat, v)
+        s = r - alpha * v
+        shat = M(s)
+        t = A(shat)
+        omega = _vdot(t, s) / _vdot(t, t)
+        x = x + alpha * phat + omega * shat
+        r = s - omega * t
+        return (x, r, p, v, rho_new, alpha, omega, k + 1)
+
+    one = jnp.ones((), b.dtype)
+    init = (x0, r0, jnp.zeros_like(b), jnp.zeros_like(b), one, one, one,
+            jnp.array(0, jnp.int32))
+    x, r, *_, k = jax.lax.while_loop(cond, body, init)
+    return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(_vdot(r, r)))

@@ -1,0 +1,16 @@
+"""Jacobi (diagonal) preconditioner for the distributed solvers."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["jacobi_preconditioner"]
+
+
+def jacobi_preconditioner(diag: jax.Array):
+    """Return M(r) = r / diag.  ``diag``: stacked (P, m) matrix diagonal."""
+    inv = 1.0 / diag
+
+    def M(r: jax.Array) -> jax.Array:
+        return r * inv
+
+    return M

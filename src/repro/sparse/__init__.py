@@ -1,0 +1,2 @@
+"""Sparse formats and distributed SpMV."""
+from repro.sparse.distributed import spmv_dia, spmv_ell, halo_exchange  # noqa: F401

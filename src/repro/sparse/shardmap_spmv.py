@@ -1,0 +1,59 @@
+"""Explicit shard_map DIA SpMV for the beyond-paper full-mesh solve.
+
+GSPMD cannot keep a banded SpMV row-sharded through misaligned static
+shifts — it re-gathers the operands inside the CG loop, defeating the
+full-mesh layout (measured: EXPERIMENTS.md §Perf C3).  This kernel takes
+manual control: rows are sharded over BOTH mesh axes (solve x assemble);
+each device holds an ``m_loc``-row slice and exchanges one halo plane with
+its linear neighbours via ``collective_permute`` — including across solve-
+group boundaries (the fine-linearized order (solve, assemble) makes the
+neighbour of the last shard in group k the first shard of group k+1).
+
+Requires m_loc >= plane (one halo plane per side), i.e. each device holds
+at least one z-plane of the fused block — true for all production configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.comm import ASSEMBLE_AXIS, SOLVE_AXIS
+
+
+def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
+                        n_coarse: int, alpha: int, m_coarse: int):
+    """Returns A(bands, x) with rows sharded over (solve, assemble).
+
+    bands: (n_c, nb, m_c) global; x: (n_c, m_c) global.  Out like x.
+    """
+    m_loc = m_coarse // alpha
+    assert m_loc >= plane, (m_loc, plane)
+    n_shards = n_coarse * alpha
+    axes = (SOLVE_AXIS, ASSEMBLE_AXIS)
+    fwd = [(i, i + 1) for i in range(n_shards - 1)]   # send up-halo forward
+    bwd = [(i + 1, i) for i in range(n_shards - 1)]   # send down-halo back
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(SOLVE_AXIS, None, ASSEMBLE_AXIS),
+                  P(SOLVE_AXIS, ASSEMBLE_AXIS)),
+        out_specs=P(SOLVE_AXIS, ASSEMBLE_AXIS), check_vma=False)
+    def spmv(b_loc, x_loc):
+        # b_loc: (1, nb, m_loc); x_loc: (1, m_loc)
+        xv = x_loc[0]
+        down = jax.lax.ppermute(xv[-plane:], axes, fwd)
+        up = jax.lax.ppermute(xv[:plane], axes, bwd)
+        lid = jax.lax.axis_index(axes)
+        down = jnp.where(lid == 0, 0.0, down)
+        up = jnp.where(lid == n_shards - 1, 0.0, up)
+        xp = jnp.concatenate([down, xv, up])  # (m_loc + 2*plane,)
+        y = jnp.zeros((m_loc,), xv.dtype)
+        for d, off in enumerate(offsets):
+            y = y + b_loc[0, d] * jax.lax.dynamic_slice_in_dim(
+                xp, plane + off, m_loc)
+        return y[None, :]
+
+    return spmv

@@ -1,0 +1,43 @@
+"""int8 gradient compression with error feedback for the DP all-reduce.
+
+A distributed-optimization trick for scale-out (DESIGN.md §5): before the
+data-parallel gradient reduction, each leaf is quantized to int8 with a
+per-leaf f32 scale; the quantization error is carried in an error-feedback
+buffer added to the next step's gradient (EF-SGD), which keeps convergence.
+
+Under pjit the quantized tensors are what cross the pod-level links (the
+all-reduce happens over int8 + one scalar), cutting cross-pod gradient bytes
+4x vs f32 / 2x vs bf16.  Enabled per-config (``train_step(compress=...)``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jax.Array, err: jax.Array):
+    """Quantize g+err to int8 (symmetric), return (q, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def compress_tree(grads, err_tree):
+    qs, scales, errs = {}, {}, {}
+    flat, tdef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(err_tree)
+    out = [compress_leaf(g, e) for g, e in zip(flat, eflat)]
+    q = tdef.unflatten([o[0] for o in out])
+    s = tdef.unflatten([o[1] for o in out])
+    e = tdef.unflatten([o[2] for o in out])
+    return q, s, e
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, s)
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,72 @@
+"""AdamW with f32 moments over (possibly bf16) parameters.
+
+Moments inherit each parameter's sharding (ZeRO: with FSDP-sharded params the
+optimizer state is automatically sharded over the data axes — no separate
+partitioner needed).  Implemented from scratch (no optax in this
+environment); update math in f32, cast back to the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def init_specs(self, param_specs):
+        """eval_shape version for the dry-run."""
+        return jax.eval_shape(self.init, param_specs)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip (all-reduce over every sharded leaf)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * gf
+            v = self.b2 * v + (1 - self.b2) * gf * gf
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

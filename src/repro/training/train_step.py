@@ -1,0 +1,96 @@
+"""The jitted train step: loss → grads → (optional int8 DP compression) →
+AdamW.  Shardings come from models/sharding.py; donated params/opt state."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.training.grad_compress import compress_tree, decompress_tree
+from repro.training.optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    err: Any | None  # error-feedback buffers (None if compression off)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW,
+                    compress: bool = False, accum: int | None = None,
+                    grad_shardings=None):
+    """Returns train_step(state, batch) → (state, metrics).
+
+    ``accum`` microbatches run as a gradient-accumulation scan: live
+    activation memory scales with B/accum while the f32 grad accumulator
+    shares the parameters' (FSDP) sharding.  Default: cfg.train_accum.
+    ``grad_shardings`` (a params-shaped NamedSharding tree) pins each
+    microbatch's gradients before accumulation — forcing the EP/FSDP
+    reduce-scatter eagerly instead of leaving full-size grad partials live.
+    """
+    accum = cfg.train_accum if accum is None else accum
+
+    def loss(p, b):
+        return lm.loss_fn(cfg, p, b["tokens"], b["labels"],
+                          b.get("frontend"))
+
+    def pin(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(state: TrainState, batch: dict):
+        if accum == 1:
+            loss_val, grads = jax.value_and_grad(loss)(state.params, batch)
+            grads = pin(grads)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def micro(carry, b):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss)(state.params, b)
+                g = pin(g)
+                gacc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / accum,
+                    gacc, g)
+                return (gacc, lacc + l / accum), None
+
+            (grads, loss_val), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), mb)
+        err = state.err
+        if compress:
+            q, s, err = compress_tree(grads, state.err)
+            grads = decompress_tree(q, s)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss_val, "grad_norm": gnorm,
+                   "step": opt.step}
+        return TrainState(params, opt, err), metrics
+
+    return train_step
+
+
+def init_state(cfg: ModelConfig, optimizer: AdamW, key,
+               compress: bool = False) -> TrainState:
+    params = lm.init_params(cfg, key)
+    opt = optimizer.init(params)
+    err = None
+    if compress:
+        from repro.training.grad_compress import init_error
+        err = init_error(params)
+    return TrainState(params, opt, err)
+
+
+def state_specs(cfg: ModelConfig, optimizer: AdamW, compress: bool = False):
+    """Allocation-free TrainState specs for the dry-run."""
+    return jax.eval_shape(
+        functools.partial(init_state, cfg, optimizer, compress=compress),
+        jax.random.key(0))

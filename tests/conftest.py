@@ -1,0 +1,4 @@
+import jax
+
+# CFD correctness tests need f64; model smoke tests pass explicit dtypes.
+jax.config.update("jax_enable_x64", True)

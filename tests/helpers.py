@@ -1,0 +1,64 @@
+"""Shared test utilities: dense reference reconstructions."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ldu import LDULayout, ldu_entries
+from repro.core.repartition import RepartitionPlan
+
+
+def global_dense(layout: LDULayout, buffers: np.ndarray) -> np.ndarray:
+    """Assemble the GLOBAL dense matrix from per-part LDU buffers (P, L)."""
+    P = buffers.shape[0]
+    m = layout.n_cells
+    N = P * m
+    A = np.zeros((N, N))
+    for part in range(P):
+        rows, cols = ldu_entries(layout, part, P)
+        np.add.at(A, (rows + part * m, cols), buffers[part])
+    return A
+
+
+def fused_dense_from_ell(plan: RepartitionPlan, ell_vals: np.ndarray,
+                         coarse_part: int, n_coarse: int) -> np.ndarray:
+    """Fused coarse-part matrix (m_c x N_global) reconstructed from ELL."""
+    m_c, K = plan.ell_cols.shape
+    N = n_coarse * m_c
+    A = np.zeros((m_c, N))
+    base = coarse_part * m_c
+    for i in range(m_c):
+        for k in range(K):
+            src = plan.ell_src[i, k]
+            if src == plan.sentinel:
+                continue
+            c = plan.ell_cols[i, k]
+            if c < m_c:  # local
+                gc = base + c
+            elif c < m_c + plan.plane:  # down halo
+                gc = base - plan.plane + (c - m_c)
+            else:  # up halo
+                gc = base + m_c + (c - m_c - plan.plane)
+            if 0 <= gc < N:
+                A[i, gc] += ell_vals[i, k]
+            else:
+                # physically absent interface: coefficient must be zero
+                assert ell_vals[i, k] == 0.0, (i, k, gc, ell_vals[i, k])
+    return A
+
+
+def fused_dense_from_dia(plan: RepartitionPlan, bands: np.ndarray,
+                         coarse_part: int, n_coarse: int) -> np.ndarray:
+    """Fused coarse-part matrix (m_c x N_global) reconstructed from DIA."""
+    m_c = plan.m_coarse
+    N = n_coarse * m_c
+    A = np.zeros((m_c, N))
+    base = coarse_part * m_c
+    for d, off in enumerate(plan.dia_offsets):
+        for i in range(m_c):
+            gc = base + i + int(off)
+            v = bands[d, i]
+            if 0 <= gc < N:
+                A[i, gc] += v
+            else:
+                assert v == 0.0
+    return A

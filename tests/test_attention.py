@@ -1,0 +1,145 @@
+"""Attention correctness: flash-chunked vs naive reference, RoPE properties,
+chunked-scan equivalence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import AttnSpec, flash_attention, _mask
+from repro.models.layers import rope
+from repro.models.scan_utils import chunked_scan
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, spec):
+    B, Sq, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hk, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * hd ** -0.5
+    s = s + _mask(q_pos, kv_pos, spec)[None, None, None]
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vf)
+    return out.reshape(B, Sq, H, hd)
+
+
+def make_spec(**kw):
+    base = dict(n_heads=4, n_kv_heads=2, head_dim=8, causal=True,
+                use_rope=False, qk_norm=False, sliding_window=None,
+                chunk_q=4, chunk_kv=4)
+    base.update(kw)
+    return AttnSpec(**base)
+
+
+@pytest.mark.parametrize("Sq,Skv,causal,window,cq,ckv", [
+    (16, 16, True, None, 4, 4),
+    (16, 16, True, 5, 4, 8),
+    (8, 24, False, None, 8, 8),   # cross-attention shape
+    (1, 16, True, None, 1, 4),    # decode-like
+    (13, 13, True, None, 4, 8),   # ragged: padding path
+])
+def test_flash_matches_naive(Sq, Skv, causal, window, cq, ckv):
+    spec = make_spec(causal=causal, sliding_window=window, chunk_q=cq,
+                     chunk_kv=ckv)
+    rng = np.random.default_rng(0)
+    B, H, Hk, hd = 2, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Skv, Hk, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Skv, Hk, hd)), jnp.float32)
+    q_pos = jnp.arange(Skv - Sq, Skv, dtype=jnp.int32) if causal else \
+        jnp.arange(Sq, dtype=jnp.int32)
+    kv_pos = jnp.arange(Skv, dtype=jnp.int32)
+    out = flash_attention(q, k, v, q_pos, kv_pos, spec)
+    ref = naive_attention(q, k, v, q_pos, kv_pos, spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    Sq=st.integers(1, 24), Hk=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2, 3]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 3, 7]),
+    seed=st.integers(0, 1000),
+)
+def test_property_flash_matches_naive(Sq, Hk, G, causal, window, seed):
+    spec = make_spec(n_heads=Hk * G, n_kv_heads=Hk, causal=causal,
+                     sliding_window=window, chunk_q=5, chunk_kv=6)
+    rng = np.random.default_rng(seed)
+    B, hd = 1, 8
+    q = jnp.asarray(rng.standard_normal((B, Sq, Hk * G, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sq, Hk, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sq, Hk, hd)), jnp.float32)
+    pos = jnp.arange(Sq, dtype=jnp.int32)
+    out = flash_attention(q, k, v, pos, pos, spec)
+    ref = naive_attention(q, k, v, pos, pos, spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 6, 2, 16)), jnp.float32)
+    pos = jnp.arange(6, dtype=jnp.int32)
+    y = rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(p, d):
+        rq = rope(q, jnp.array([p], jnp.int32), 100.0)
+        rk = rope(k, jnp.array([p + d], jnp.int32), 100.0)
+        return float(jnp.vdot(rq, rk))
+
+    assert abs(dot_at(0, 3) - dot_at(7, 3)) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(T=st.integers(1, 40), chunk=st.sampled_from([3, 8, 256]),
+       seed=st.integers(0, 100))
+def test_chunked_scan_equals_plain_scan(T, chunk, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (T, 4)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((T, 4)), jnp.float32)
+
+    def step(h, inp):
+        ai, bi = inp
+        h = ai * h + bi
+        return h, h * 2.0
+
+    init = jnp.zeros((4,), jnp.float32)
+    c_ref, y_ref = jax.lax.scan(step, init, (a, b))
+    c_chk, y_chk = chunked_scan(step, init, (a, b), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(c_chk), np.asarray(c_ref),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=1e-6)
+
+
+def test_chunked_scan_gradients_match():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (17, 3)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((17, 3)), jnp.float32)
+
+    def loss_with(scan_fn):
+        def f(b_):
+            def step(h, inp):
+                ai, bi = inp
+                h = ai * h + bi
+                return h, jnp.sum(h)
+
+            _, ys = scan_fn(step, jnp.zeros((3,)), (a, b_))
+            return jnp.sum(ys)
+
+        return jax.grad(f)(b)
+
+    g_ref = loss_with(jax.lax.scan)
+    g_chk = loss_with(lambda s, i, xs: chunked_scan(s, i, xs, chunk=5))
+    np.testing.assert_allclose(np.asarray(g_chk), np.asarray(g_ref),
+                               rtol=1e-5)

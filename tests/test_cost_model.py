@@ -1,0 +1,70 @@
+"""Paper §2 cost model: the qualitative claims the paper makes must hold."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel, HOREKA_A100, TPU_V5E
+
+
+def model(n_dofs=74e6, hw=HOREKA_A100):
+    return CostModel(hw, n_dofs=n_dofs)
+
+
+def test_oversubscription_is_catastrophic():
+    """Paper fig. 7: GPUOSR1 (n_CPU ranks on n_GPU devices) degrades up to
+    ~140x vs the repartitioned case."""
+    cm = model()
+    n_gpu, n_cpu = 4, 64
+    t_oversub = cm.T_single(n_cpu, n_gpu)           # 16 ranks per GPU
+    t_repart = cm.T_repartitioned(n_cpu, n_gpu)     # alpha = 16
+    assert t_oversub / t_repart > 10
+
+
+def test_undersubscription_wastes_host_parallelism():
+    """Paper: n = n_GPU leaves CPU cores idle → assembly slower than with
+    repartitioning at the same number of GPUs."""
+    cm = model()
+    t_under = cm.T_single(4, 4)        # 4 ranks only (GPUURR1)
+    t_repart = cm.T_repartitioned(64, 4)
+    assert t_repart < t_under
+
+
+def test_repartition_beats_both_extremes():
+    cm = model()
+    t_r = cm.T_repartitioned(64, 4)
+    assert t_r < cm.T_single(64, 4) and t_r < cm.T_single(4, 4)
+
+
+def test_optimal_alpha_grows_with_assembly_share():
+    """Heavier assembly → larger optimal alpha (more host parallelism)."""
+    light = CostModel(HOREKA_A100, n_dofs=74e6, assembly_flops_per_dof=50,
+                      assembly_bytes_per_dof=80)
+    heavy = CostModel(HOREKA_A100, n_dofs=74e6, assembly_flops_per_dof=2500,
+                      assembly_bytes_per_dof=4000)
+    a_light = light.optimal_alpha(n_cpu=64, n_gpu=4)
+    a_heavy = heavy.optimal_alpha(n_cpu=64, n_gpu=4)
+    assert a_heavy >= a_light
+
+
+def test_device_direct_beats_host_buffer():
+    """Paper fig. 9: GPU-aware updates are 25–50% better end-to-end; the
+    repartition term itself is >=2x better."""
+    cm = model()
+    t_dd = cm.t_repartition(64, 4, device_direct=True)
+    t_hb = cm.t_repartition(64, 4, device_direct=False)
+    assert t_hb > 2 * t_dd
+
+
+def test_tpu_has_no_oversubscription_penalty():
+    cm = model(hw=TPU_V5E)
+    assert cm.T_single(64, 4) == pytest.approx(
+        cm.t_assembly(64) + cm.t_solver(4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_dofs=st.floats(1e6, 5e8), n_gpu=st.sampled_from([2, 4, 8]))
+def test_property_repartitioned_never_worse_than_undersub(n_dofs, n_gpu):
+    """T(n_AS*, n_LS*) <= T(n_LS*, n_LS*) + T_R — eq. (3) dominance."""
+    cm = model(n_dofs=n_dofs)
+    t_r = cm.T_repartitioned(16 * n_gpu, n_gpu)
+    t_u = cm.T_single(n_gpu, n_gpu) + cm.t_repartition(16 * n_gpu, n_gpu)
+    assert t_r <= t_u + 1e-9

@@ -1,0 +1,126 @@
+"""Repartition-plan invariants (paper §3): the fused matrix must EQUAL the
+global matrix restricted to the coarse part's rows, for every alpha."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ldu import LDULayout, buffer_from_parts
+from repro.core.repartition import build_plan, plan_for_mesh, fuse_parts_coo
+from repro.fvm.mesh import CavityMesh
+
+from helpers import global_dense, fused_dense_from_dia, fused_dense_from_ell
+
+
+def random_buffers(mesh, rng):
+    """Random LDU coefficients with physically-absent interfaces zeroed."""
+    P = mesh.n_parts
+    layout = LDULayout.from_mesh(mesh)
+    diag = rng.standard_normal((P, layout.n_cells))
+    upper = rng.standard_normal((P, layout.n_faces))
+    lower = rng.standard_normal((P, layout.n_faces))
+    iface = rng.standard_normal((P, layout.n_ifaces, layout.iface_size))
+    iface *= mesh.iface_mask()[:, :, None]
+    return layout, buffer_from_parts(diag, upper, lower, iface)
+
+
+@pytest.mark.parametrize("n,parts,alpha", [
+    (4, 2, 1), (4, 2, 2), (4, 4, 2), (4, 4, 4), (6, 6, 3), (6, 6, 2),
+])
+def test_fused_equals_global(n, parts, alpha):
+    mesh = CavityMesh.cube(n, parts)
+    rng = np.random.default_rng(0)
+    layout, buffers = random_buffers(mesh, rng)
+    A_global = global_dense(layout, buffers)
+    plan = plan_for_mesh(mesh, alpha)
+    n_coarse = parts // alpha
+
+    grouped = buffers.reshape(n_coarse, alpha, -1)
+    for k in range(n_coarse):
+        buf_cat = np.concatenate([grouped[k].reshape(-1), [0.0]])
+        # ELL target
+        ell_vals = buf_cat[plan.ell_src]
+        A_ell = fused_dense_from_ell(plan, ell_vals, k, n_coarse)
+        ref = A_global[k * plan.m_coarse:(k + 1) * plan.m_coarse]
+        np.testing.assert_allclose(A_ell, ref, atol=1e-14)
+        # DIA target
+        bands = buf_cat[plan.dia_src]
+        A_dia = fused_dense_from_dia(plan, bands, k, n_coarse)
+        np.testing.assert_allclose(A_dia, ref, atol=1e-14)
+
+
+def test_permutation_covers_every_entry_once():
+    """P∘U is injective: every buffer entry lands in exactly one solver slot."""
+    mesh = CavityMesh.cube(4, 4)
+    plan = plan_for_mesh(mesh, 2)
+    src = plan.ell_src.reshape(-1)
+    used = src[src != plan.sentinel]
+    assert len(used) == len(np.unique(used)), "duplicate scatter target"
+    assert len(used) == plan.alpha * plan.buffer_len, "dropped entries"
+    d = plan.dia_src.reshape(-1)
+    used_d = d[d != plan.sentinel]
+    assert len(used_d) == plan.alpha * plan.buffer_len
+    assert len(used_d) == len(np.unique(used_d))
+
+
+def test_localization_counts():
+    """Paper §3 step 3: in-group interfaces are localized; nnz is conserved."""
+    mesh = CavityMesh.cube(4, 4)
+    layout = LDULayout.from_mesh(mesh)
+    for alpha in (1, 2, 4):
+        plan = build_plan(layout, alpha, nx=mesh.nx, plane=mesh.plane)
+        B = layout.iface_size
+        # per coarse group: 2*alpha iface arrays, of which 2*(alpha-1) localize
+        assert plan.nnz_localized == 2 * (alpha - 1) * B
+        assert plan.nnz_halo == 2 * B
+        total = plan.nnz_local + plan.nnz_localized + plan.nnz_halo
+        assert total == alpha * layout.buffer_len
+
+
+def test_halo_shrinks_with_alpha():
+    """The paper's motivation: fewer parts ⇒ fewer non-local coefficients."""
+    mesh = CavityMesh.cube(8, 8)
+    layout = LDULayout.from_mesh(mesh)
+    halo = {a: build_plan(layout, a, nx=mesh.nx, plane=mesh.plane).nnz_halo
+            / (build_plan(layout, a, nx=mesh.nx, plane=mesh.plane).m_coarse)
+            for a in (1, 2, 4, 8)}
+    assert halo[2] < halo[1] and halo[4] < halo[2] and halo[8] < halo[4]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 6]),
+    parts_pow=st.integers(0, 2),
+    alpha_pow=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_fused_equals_global(n, parts_pow, alpha_pow, seed):
+    """Property: for random coefficients, any divisor alpha, fused == global."""
+    parts = 2 ** parts_pow
+    alpha = 2 ** min(alpha_pow, parts_pow)
+    n = max(n, parts)  # nz divisible by parts
+    if n % parts:
+        n = parts * ((n + parts - 1) // parts)
+    mesh = CavityMesh.cube(n, parts)
+    rng = np.random.default_rng(seed)
+    layout, buffers = random_buffers(mesh, rng)
+    plan = plan_for_mesh(mesh, alpha)
+    A_global = global_dense(layout, buffers)
+    n_coarse = parts // alpha
+    k = int(rng.integers(n_coarse))
+    grouped = buffers.reshape(n_coarse, alpha, -1)
+    buf_cat = np.concatenate([grouped[k].reshape(-1), [0.0]])
+    bands = buf_cat[plan.dia_src]
+    A_dia = fused_dense_from_dia(plan, bands, k, n_coarse)
+    ref = A_global[k * plan.m_coarse:(k + 1) * plan.m_coarse]
+    np.testing.assert_allclose(A_dia, ref, atol=1e-14)
+
+
+def test_fuse_parts_coo_localization_criterion():
+    """Generic COO fusion: is_local ⇔ column owned by the coarse part."""
+    rng = np.random.default_rng(1)
+    m, alpha = 10, 3
+    rows = [rng.integers(0, m, 20) for _ in range(alpha)]
+    cols = [rng.integers(-5, alpha * m + 5, 20) for _ in range(alpha)]
+    r, c, is_local = fuse_parts_coo(rows, cols, m, alpha)
+    np.testing.assert_array_equal(is_local, (c >= 0) & (c < alpha * m))
+    assert len(r) == alpha * 20
