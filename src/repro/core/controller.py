@@ -1,0 +1,358 @@
+"""Adaptive repartitioning controller — closing the paper's open loop.
+
+The paper (§2) picks the fusion factor alpha *once*, from a cost model with
+spec-sheet machine constants.  That leaves two gaps this module closes:
+
+1. **Model error** — real assembly/solve/update rates differ from the specs
+   (and drift: turbulence models switch on, meshes refine, co-tenants appear).
+   :class:`OnlineCalibration` fits multiplicative corrections to the model's
+   machine constants from measured per-phase times, EMA-smoothed in log space.
+2. **Re-planning cost** — re-selecting alpha means building a new
+   :class:`~repro.core.repartition.RepartitionPlan` (symbolic fusion, gather
+   indices) and re-compiling the update.  :class:`PlanCache` amortizes both:
+   an LRU keyed by ``(mesh fingerprint, alpha, target)`` reuses the symbolic
+   plan, and a shared :class:`~repro.core.update.UpdaterPool` reuses compiled
+   update executables across plans of equal shape.
+
+:class:`RepartitionController` ties them together as a feedback loop around
+the PISO pressure solve (``PisoSolver.timed_step`` produces the per-phase
+:class:`~repro.core.cost_model.PhaseBreakdown` samples):
+
+.. code-block:: text
+
+      measure phases ──> calibrate model ──> argmin_alpha T(alpha)
+            ^                                     │ (hysteresis: switch only
+            │                                     │  on persistent, material
+      apply plan  <── PlanCache lookup  <─────────┘  predicted gain)
+
+Switching is guarded by **hysteresis** so measurement noise cannot thrash
+plans: a candidate alpha must (a) be predicted to beat the incumbent by at
+least ``config.hysteresis`` relative margin, (b) win ``config.patience``
+observations in a row, and (c) not arrive within ``config.min_dwell`` steps
+of the previous switch.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+from repro.core.cost_model import CostModel, PhaseBreakdown
+from repro.core.repartition import (RepartitionPlan, layout_fingerprint,
+                                    mesh_fingerprint, plan_for_mesh)
+from repro.core.update import UpdaterPool
+
+__all__ = [
+    "OnlineCalibration",
+    "PlanCache",
+    "ControllerConfig",
+    "RepartitionController",
+]
+
+
+# ---------------------------------------------------------------------------
+# Online calibration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OnlineCalibration:
+    """Log-space EMA fit of the cost model's machine-constant corrections.
+
+    Each observation yields raw measured-over-modelled ratios per phase
+    group (assembly / solve / comm).  Ratios are multiplicative and noise is
+    roughly multiplicative too, so the EMA runs on ``log`` ratios: the
+    estimate is a geometric moving average, immune to the bias an arithmetic
+    mean of ratios picks up from outliers.
+
+    ``decay`` is the weight of history: 0 trusts only the latest sample,
+    →1 freezes the fit.  The default 0.6 reaches ~95% of a step change in
+    about 6 observations while averaging ±20% noise down to a few percent.
+    """
+
+    decay: float = 0.6
+    _log_scales: list[float] = dataclasses.field(
+        default_factory=lambda: [0.0, 0.0, 0.0])
+    n_obs: int = 0
+
+    def observe(self, model: CostModel, measured: PhaseBreakdown,
+                n_as: int, n_ls: int, device_direct: bool = True) -> None:
+        raw = model.scales_from_measurement(measured, n_as, n_ls,
+                                            device_direct)
+        # first observation seeds the fit exactly; later ones blend
+        w = self.decay if self.n_obs else 0.0
+        self._log_scales = [
+            w * s + (1.0 - w) * math.log(max(r, 1e-30))
+            for s, r in zip(self._log_scales, raw)
+        ]
+        self.n_obs += 1
+
+    @property
+    def scales(self) -> tuple[float, float, float]:
+        """(assembly, solve, comm) multiplicative corrections."""
+        return tuple(math.exp(s) for s in self._log_scales)
+
+    def apply(self, model: CostModel) -> CostModel:
+        a, s, c = self.scales
+        return model.with_scales(assembly=a, solve=s, comm=c)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _CacheEntry:
+    plan: RepartitionPlan
+    updaters: dict = dataclasses.field(default_factory=dict)
+
+
+class PlanCache:
+    """LRU cache of repartition plans keyed by ``(fingerprint, alpha, target)``.
+
+    Building a plan is symbolic numpy work that scales with nnz; compiling
+    its update scales with trace+XLA time.  Revisiting an alpha (the common
+    case for an adapting controller oscillating between neighbours) must pay
+    neither.  The cache is safe to share across solvers and serving sessions:
+    plans are immutable, and the fingerprint covers the full sparsity
+    structure, so equal keys imply interchangeable plans.
+
+    ``updaters`` memoizes plan-bound update callables per (target, schedule);
+    the shared :class:`UpdaterPool` additionally reuses the *compiled*
+    program across different plans of equal shape.
+    """
+
+    def __init__(self, capacity: int = 16, pool: UpdaterPool | None = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.pool = UpdaterPool() if pool is None else pool
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    # -- plan lookup ------------------------------------------------------
+    def plan_for_mesh(self, mesh, alpha: int, target: str = "dia"
+                      ) -> RepartitionPlan:
+        return self.get(mesh_fingerprint(mesh), alpha, target,
+                        lambda: plan_for_mesh(mesh, alpha))
+
+    def plan_for_layout(self, layout, alpha: int, *, nx=None, plane=None,
+                        target: str = "dia") -> RepartitionPlan:
+        from repro.core.repartition import build_plan
+
+        return self.get(layout_fingerprint(layout), alpha, target,
+                        lambda: build_plan(layout, alpha, nx=nx, plane=plane))
+
+    def get(self, fingerprint: str, alpha: int, target: str,
+            builder) -> RepartitionPlan:
+        """Return the cached plan for the key, building via ``builder`` on miss."""
+        key = (fingerprint, alpha, target)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry.plan
+        self.misses += 1
+        plan = builder()
+        self._entries[key] = _CacheEntry(plan=plan)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return plan
+
+    # -- compiled-update reuse -------------------------------------------
+    def updater(self, fingerprint: str, alpha: int, target: str = "dia",
+                schedule: str = "device_direct"):
+        """Plan-bound ``buffers -> values`` callable (memoized per entry)."""
+        key = (fingerprint, alpha, target)
+        entry = self._entries.get(key)
+        if entry is None:
+            raise KeyError(
+                f"no cached plan for {key}: it was evicted or never built — "
+                "fetch it first via plan_for_mesh/plan_for_layout/get")
+        self._entries.move_to_end(key)  # an updater access is a use
+        ukey = (target, schedule)
+        fn = entry.updaters.get(ukey)
+        if fn is None:
+            fn = entry.updaters[ukey] = self.pool.updater(
+                entry.plan, target, schedule)
+        return fn
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "pool_hits": self.pool.hits,
+            "pool_misses": self.pool.misses,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Controller
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Adaptation policy knobs (see module doc for the switching rule)."""
+
+    alphas: tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    hysteresis: float = 0.10   # min relative predicted gain to switch
+    patience: int = 3          # consecutive wins a challenger needs
+    min_dwell: int = 5         # steps between switches (re-plan cool-down)
+    ema_decay: float = 0.6     # calibration memory (OnlineCalibration.decay)
+    warmup: int = 2            # observations before adapting at all
+    device_direct: bool = True
+
+
+@dataclasses.dataclass
+class SwitchEvent:
+    step: int
+    old_alpha: int
+    new_alpha: int
+    predicted_gain: float      # relative predicted improvement
+
+
+class RepartitionController:
+    """Feedback-driven alpha selection with hysteresis and plan caching.
+
+    One controller instance governs one simulation (serving sessions get one
+    each, see :mod:`repro.serving.engine`); the :class:`PlanCache` may be
+    shared freely across controllers.
+    """
+
+    def __init__(self, model: CostModel, n_cpu: int, n_gpu: int,
+                 alpha0: int | None = None,
+                 config: ControllerConfig = ControllerConfig(),
+                 cache: PlanCache | None = None,
+                 fixed_fine: bool = False):
+        """``fixed_fine`` selects the partition parametrization:
+
+        * ``False`` (paper §2): the solve side is pinned to ``n_gpu``
+          devices and alpha recruits assembly ranks, ``n_as = alpha*n_gpu``.
+        * ``True`` (the SPMD reproduction): the fine part count ``n_cpu``
+          is the chip count and alpha *fuses*, ``n_ls = n_cpu / alpha`` —
+          fewer, denser solve parts (paper fig. 4's DOFs/device knee).
+        """
+        self.base_model = model
+        self.n_cpu = n_cpu
+        self.n_gpu = n_gpu
+        self.fixed_fine = fixed_fine
+        self.config = config
+        # explicit None test: an empty PlanCache is falsy (it has __len__)
+        self.cache = PlanCache() if cache is None else cache
+        self.calibration = OnlineCalibration(decay=config.ema_decay)
+        self.step_count = 0
+        self.last_switch_step = 0
+        self.switches: list[SwitchEvent] = []
+        self.history: list[PhaseBreakdown] = []
+        self._challenger: int | None = None
+        self._challenger_wins = 0
+        self.alpha = alpha0 if alpha0 is not None else self.recommend()
+
+    # -- model views ------------------------------------------------------
+    @property
+    def model(self) -> CostModel:
+        """The cost model with the current online calibration applied."""
+        return self.calibration.apply(self.base_model)
+
+    def partition_counts(self, alpha: int) -> tuple[int, int]:
+        """(n_as, n_ls) realized by ``alpha`` under the parametrization."""
+        if self.fixed_fine:
+            return self.n_cpu, max(self.n_cpu // alpha, 1)
+        return self.n_gpu * alpha, self.n_gpu
+
+    def feasible_alphas(self) -> tuple[int, ...]:
+        if self.fixed_fine:
+            return tuple(a for a in self.config.alphas
+                         if a <= self.n_cpu and self.n_cpu % a == 0)
+        return tuple(a for a in self.config.alphas
+                     if self.n_gpu * a <= self.n_cpu)
+
+    def predicted_phases(self, alpha: int | None = None) -> PhaseBreakdown:
+        a = self.alpha if alpha is None else alpha
+        n_as, n_ls = self.partition_counts(a)
+        return self.model.predict_phases(n_as, n_ls,
+                                         self.config.device_direct)
+
+    def recommend(self) -> int:
+        """Unfiltered argmin over feasible alphas on the calibrated model."""
+        return min(self.feasible_alphas(),
+                   key=lambda a: self.predicted_phases(a).total)
+
+    # -- the feedback step ------------------------------------------------
+    def observe(self, measured: PhaseBreakdown) -> None:
+        """Fold one measured per-phase sample into the calibration."""
+        n_as, n_ls = self.partition_counts(self.alpha)
+        self.calibration.observe(
+            self.base_model, measured, n_as, n_ls,
+            self.config.device_direct)
+        self.history.append(measured)
+
+    def step(self, measured: PhaseBreakdown) -> int:
+        """Observe one sample, maybe switch alpha; returns the alpha to use.
+
+        The predicted-vs-measured imbalance drives re-selection, but a
+        switch happens only when the hysteresis conditions hold (module
+        doc) — noisy measurements around a near-tie must not thrash plans.
+        """
+        self.observe(measured)
+        self.step_count += 1
+        cfg = self.config
+        if self.calibration.n_obs < cfg.warmup:
+            return self.alpha
+        if self.step_count - self.last_switch_step < cfg.min_dwell:
+            # cool-down: a fresh plan's transients would pollute the fit
+            self._challenger, self._challenger_wins = None, 0
+            return self.alpha
+
+        best = self.recommend()
+        if best == self.alpha:
+            self._challenger, self._challenger_wins = None, 0
+            return self.alpha
+
+        t_now = self.predicted_phases(self.alpha).total
+        t_best = self.predicted_phases(best).total
+        gain = (t_now - t_best) / max(t_now, 1e-30)
+        if gain < cfg.hysteresis:
+            self._challenger, self._challenger_wins = None, 0
+            return self.alpha
+
+        if best == self._challenger:
+            self._challenger_wins += 1
+        else:
+            self._challenger, self._challenger_wins = best, 1
+        if self._challenger_wins < cfg.patience:
+            return self.alpha
+
+        self.switches.append(SwitchEvent(
+            step=self.step_count, old_alpha=self.alpha, new_alpha=best,
+            predicted_gain=gain))
+        self.alpha = best
+        self.last_switch_step = self.step_count
+        self._challenger, self._challenger_wins = None, 0
+        return self.alpha
+
+    # -- plan access ------------------------------------------------------
+    def plan(self, mesh, target: str = "dia") -> RepartitionPlan:
+        """The current alpha's plan for ``mesh``, through the cache."""
+        return self.cache.plan_for_mesh(mesh, self.alpha, target)
+
+    def stats(self) -> dict:
+        a, s, c = self.calibration.scales
+        return {
+            "alpha": self.alpha,
+            "steps": self.step_count,
+            "switches": [dataclasses.asdict(e) for e in self.switches],
+            "scales": {"assembly": a, "solve": s, "comm": c},
+            "cache": self.cache.stats(),
+        }

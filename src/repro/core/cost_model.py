@@ -23,7 +23,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
-__all__ = ["HardwareSpec", "CostModel", "TPU_V5E", "HOREKA_A100"]
+__all__ = [
+    "HardwareSpec", "CostModel", "PhaseBreakdown", "TPU_V5E", "HOREKA_A100",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +41,12 @@ class HardwareSpec:
     h2d_bw: float              # B/s host→device staging (non-direct path)
     dofs_sat: float            # DOFs/device for full solver efficiency
     oversub_penalty: float     # slowdown factor per extra rank sharing a device
+    # per-message latency of the grouped coefficient update: each coarse part
+    # receives one buffer per fused fine part, so the update pays
+    # ``msg_latency * alpha`` on top of the bandwidth term.  This is what makes
+    # the optimal alpha an *interior* point (more fine parts: faster assembly
+    # but a costlier update) — paper fig. 5/6's phi growth with alpha.
+    msg_latency: float = 5e-6
 
 
 TPU_V5E = HardwareSpec(
@@ -58,6 +66,36 @@ HOREKA_A100 = HardwareSpec(
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class PhaseBreakdown:
+    """Per-phase time prediction/measurement for one outer iteration (s).
+
+    Mirrors the controller's four instrumented PISO phases
+    (:mod:`repro.core.controller`): host-side matrix **assembly**, the
+    repartitioning coefficient **update** (paper fig. 3b), the per-iteration
+    **halo** exchange of the solve, and the Krylov **solve** itself.
+    """
+
+    assembly: float
+    update: float
+    halo: float
+    solve: float
+
+    @property
+    def total(self) -> float:
+        return self.assembly + self.update + self.halo + self.solve
+
+    @property
+    def imbalance(self) -> float:
+        """CPU-side over GPU-side share — the controller's balance signal.
+
+        1.0 means assembly exactly hides behind the accelerator phases;
+        >1 is undersubscribed assembly (raise alpha), <1 oversubscribed.
+        """
+        gpu_side = self.solve + self.halo + self.update
+        return self.assembly / max(gpu_side, 1e-30)
+
+
 @dataclasses.dataclass
 class CostModel:
     """Paper §2 model for one linear system of ``n_dofs`` unknowns.
@@ -65,6 +103,11 @@ class CostModel:
     ``assembly_flops_per_dof`` / ``solver_flops_per_dof`` are per outer
     iteration; ``solver_iters`` the Krylov iteration count; ``nnz_per_row``
     the matrix stencil (7 for the cavity).
+
+    The ``*_scale`` fields are multiplicative calibration factors
+    (measured-over-modelled time ratios) fitted online by the adaptive
+    controller (:mod:`repro.core.controller`); 1.0 means "trust the
+    spec-sheet machine constants".
     """
 
     hw: HardwareSpec
@@ -77,6 +120,10 @@ class CostModel:
     solver_iters: int = 120
     nnz_per_row: int = 7
     bytes_per_val: int = 8
+    # online-calibrated machine-constant corrections (controller-owned)
+    assembly_scale: float = 1.0
+    solve_scale: float = 1.0
+    comm_scale: float = 1.0
 
     # ---- speed-up laws (paper §2: S_AS, S_LS) -------------------------------
     def t_assembly(self, n_ranks: int) -> float:
@@ -86,7 +133,7 @@ class CostModel:
         t_bw = self.assembly_bytes_per_dof * per_rank / self.hw.host_bw
         t_fl = self.assembly_flops_per_dof * per_rank / self.hw.host_flops
         t1 = self.assembly_bytes_per_dof * self.n_dofs / self.hw.host_bw
-        return serial * t1 + max(t_bw, t_fl)
+        return self.assembly_scale * (serial * t1 + max(t_bw, t_fl))
 
     def solver_flops(self) -> float:
         # CG: SpMV (2*nnz) + 5 axpy/dot-like ops (2 flops/dof) per iteration
@@ -97,17 +144,24 @@ class CostModel:
         per_iter = (self.nnz_per_row + 8) * self.n_dofs * self.bytes_per_val
         return per_iter * self.solver_iters
 
-    def t_solver(self, n_dev: int, ranks_per_dev: int = 1) -> float:
-        """Device solve; memory-bound SpMV with DOFs/device efficiency knee."""
+    def t_solve_core(self, n_dev: int, ranks_per_dev: int = 1) -> float:
+        """Device solve sans halo; memory-bound SpMV with DOFs/device knee."""
         dofs_per_dev = self.n_dofs / n_dev
         eff = min(1.0, dofs_per_dev / self.hw.dofs_sat) ** 0.5
         t = self.solver_bytes() / (n_dev * self.hw.hbm_bw * eff)
         if ranks_per_dev > 1 and self.hw.oversub_penalty > 0:
             t *= 1.0 + self.hw.oversub_penalty * (ranks_per_dev - 1)
-        # halo exchange per iteration: one plane per neighbour
+        return self.solve_scale * t
+
+    def t_halo(self, n_dev: int) -> float:
+        """Per-solve halo traffic: one plane per neighbour per iteration."""
         plane = (self.n_dofs / n_dev) ** (2 / 3)
-        t += 2 * plane * self.bytes_per_val * self.solver_iters / self.hw.link_bw
-        return t
+        t = 2 * plane * self.bytes_per_val * self.solver_iters / self.hw.link_bw
+        return self.comm_scale * t
+
+    def t_solver(self, n_dev: int, ranks_per_dev: int = 1) -> float:
+        """Device solve; memory-bound SpMV with DOFs/device efficiency knee."""
+        return self.t_solve_core(n_dev, ranks_per_dev) + self.t_halo(n_dev)
 
     def t_solver_cpu(self, n_ranks: int) -> float:
         """Unaccelerated reference: PCG on the host ranks (paper's 'CPU').
@@ -127,13 +181,19 @@ class CostModel:
 
     def t_repartition(self, n_as: int, n_ls: int, device_direct: bool = True
                       ) -> float:
-        """T_R: ship all LDU coefficients fine→coarse once per assembly."""
+        """T_R: ship all LDU coefficients fine→coarse once per assembly.
+
+        Bandwidth term plus ``msg_latency * alpha`` per coarse part — one
+        message per fused fine buffer (paper fig. 5/6: the update share phi
+        grows with alpha), which bounds how far raising alpha can pay off.
+        """
         bytes_total = (self.nnz_per_row + 1) * self.n_dofs * self.bytes_per_val
         bw = self.hw.link_bw if device_direct else self.hw.h2d_bw
         t = bytes_total / (n_ls * bw)
         if not device_direct:
             t *= 2.0  # two-hop host-buffer staging (paper fig. 9)
-        return t
+        t += self.hw.msg_latency * (n_as / max(n_ls, 1))
+        return self.comm_scale * t
 
     # ---- paper equations ----------------------------------------------------
     def T_single(self, n: int, n_dev: int) -> float:
@@ -159,3 +219,62 @@ class CostModel:
             if t < best_t:
                 best, best_t = a, t
         return best
+
+    # ---- controller API (calibration + inverse model) -----------------------
+    def predict_phases(self, n_as: int, n_ls: int,
+                       device_direct: bool = True) -> PhaseBreakdown:
+        """Eq. (3) split into the controller's four instrumented phases."""
+        return PhaseBreakdown(
+            assembly=self.t_assembly(n_as),
+            update=self.t_repartition(n_as, n_ls, device_direct),
+            halo=self.t_halo(n_ls),
+            solve=self.t_solve_core(n_ls),
+        )
+
+    def with_scales(self, assembly: float | None = None,
+                    solve: float | None = None,
+                    comm: float | None = None) -> "CostModel":
+        """A copy with replaced calibration factors (None keeps current)."""
+        return dataclasses.replace(
+            self,
+            assembly_scale=self.assembly_scale if assembly is None else assembly,
+            solve_scale=self.solve_scale if solve is None else solve,
+            comm_scale=self.comm_scale if comm is None else comm,
+        )
+
+    def scales_from_measurement(self, measured: PhaseBreakdown, n_as: int,
+                                n_ls: int, device_direct: bool = True
+                                ) -> tuple[float, float, float]:
+        """Raw measured-over-modelled ratios (assembly, solve, comm).
+
+        The *base* prediction (scales forced to 1) is the reference, so the
+        returned ratios are absolute machine-constant corrections rather than
+        increments on the current calibration — the controller EMA-smooths
+        them in log space (:class:`repro.core.controller.OnlineCalibration`).
+        """
+        base = self.with_scales(1.0, 1.0, 1.0).predict_phases(
+            n_as, n_ls, device_direct)
+        comm_meas = measured.update + measured.halo
+        comm_base = base.update + base.halo
+        eps = 1e-30
+        return (max(measured.assembly, eps) / max(base.assembly, eps),
+                max(measured.solve, eps) / max(base.solve, eps),
+                max(comm_meas, eps) / max(comm_base, eps))
+
+    def alpha_star(self, n_cpu: int, n_gpu: int) -> float:
+        """Continuous inverse model: the alpha balancing assembly vs update.
+
+        With the bandwidth-bound assembly term ``C_a / alpha`` and the
+        latency term ``lat * alpha`` of the update, the unconstrained
+        optimum is ``alpha* = sqrt(C_a / lat)``; clamped to the feasible
+        range ``[1, n_cpu / n_gpu]``.  ``optimal_alpha`` is the discrete
+        argmin over a candidate set; this closed form is its seed and the
+        controller's analytic sanity check.
+        """
+        per_dof = max(
+            self.assembly_bytes_per_dof / self.hw.host_bw,
+            self.assembly_flops_per_dof / self.hw.host_flops)
+        c_a = self.assembly_scale * per_dof * self.n_dofs / n_gpu
+        lat = self.comm_scale * self.hw.msg_latency
+        a = math.sqrt(c_a / max(lat, 1e-30))
+        return min(max(a, 1.0), n_cpu / n_gpu)

@@ -33,13 +33,15 @@ Everything here is numpy and runs once; runtime application lives in
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
 from repro.core.ldu import LDULayout
 from repro.fvm.mesh import CavityMesh
 
-__all__ = ["RepartitionPlan", "build_plan", "fuse_parts_coo"]
+__all__ = ["RepartitionPlan", "build_plan", "fuse_parts_coo",
+           "layout_fingerprint", "mesh_fingerprint"]
 
 ELL_K = 8  # max row degree of a fused 7-point-stencil matrix (see build_plan)
 
@@ -183,6 +185,35 @@ def build_plan(layout: LDULayout, alpha: int, *, nx: int | None = None,
 def plan_for_mesh(mesh: CavityMesh, alpha: int) -> RepartitionPlan:
     layout = LDULayout.from_mesh(mesh)
     return build_plan(layout, alpha, nx=mesh.nx, plane=mesh.plane)
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints — stable keys for the controller's plan cache.
+# ---------------------------------------------------------------------------
+
+def layout_fingerprint(layout: LDULayout) -> str:
+    """Stable content hash of the symbolic sparsity structure.
+
+    Two layouts with the same fingerprint produce identical plans for any
+    alpha, so the plan cache (:class:`repro.core.controller.PlanCache`) can
+    key on ``(fingerprint, alpha, target)`` and share plans across solver
+    instances, sessions, and re-created mesh objects.
+    """
+    h = hashlib.sha256()
+    h.update(f"n_cells={layout.n_cells};".encode())
+    for arr in (layout.owner, layout.neigh, layout.iface_rows,
+                layout.iface_remote_rows, layout.iface_part_offset):
+        h.update(np.ascontiguousarray(arr).tobytes())
+        h.update(b";")
+    return h.hexdigest()[:16]
+
+
+def mesh_fingerprint(mesh: CavityMesh) -> str:
+    """Structural mesh hash: geometry + decomposition (not field values)."""
+    h = hashlib.sha256(
+        f"cavity;{mesh.nx};{mesh.ny};{mesh.nz};{mesh.n_parts};{mesh.h}"
+        .encode())
+    return h.hexdigest()[:16]
 
 
 # ---------------------------------------------------------------------------

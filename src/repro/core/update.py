@@ -34,6 +34,8 @@ __all__ = [
     "dia_values",
     "update_device_direct",
     "update_host_buffer",
+    "plan_shape_signature",
+    "UpdaterPool",
 ]
 
 
@@ -92,3 +94,61 @@ def update_host_buffer(plan: RepartitionPlan, buffers: jax.Array,
     # hop 2: broadcast staged buffer group-wide, then permute
     buf_cat = concat_group_buffers(staged)
     return dia_values(plan, buf_cat) if target == "dia" else ell_values(plan, buf_cat)
+
+
+# ---------------------------------------------------------------------------
+# Updater pool — compiled-update reuse across plans of equal shape.
+#
+# `ell_values`/`dia_values` bake the plan's index arrays into the trace as
+# constants, so every plan switch (a new alpha) re-traces and re-compiles the
+# update inside whatever jit encloses it.  The pool is the JAX analogue of the
+# paper's "reuse the receive buffers across updates": the expensive artifact
+# on a plan switch is not the numpy index array but the compiled gather
+# executable and its device allocations.  Plans with an equal *shape
+# signature* lower to the identical program with different index operands, so
+# the pool jits one executable per (schedule, target, shapes) with the index
+# array as a runtime argument and rebinds it per plan.
+# ---------------------------------------------------------------------------
+
+def plan_shape_signature(plan: RepartitionPlan, target: str = "dia") -> tuple:
+    """Shapes that determine the compiled update program (not its indices)."""
+    src = plan.dia_src if target == "dia" else plan.ell_src
+    return (target, plan.alpha, plan.buffer_len, src.shape)
+
+
+def _pooled_update(schedule: str):
+    def fn(src: jax.Array, buffers: jax.Array) -> jax.Array:
+        if schedule == "host_buffer":
+            buffers = jax.lax.optimization_barrier(buffers)
+        buf_cat = concat_group_buffers(buffers)
+        return jnp.take(buf_cat, src.reshape(-1), axis=1).reshape(
+            buf_cat.shape[0], *src.shape)
+    return jax.jit(fn)
+
+
+class UpdaterPool:
+    """Shared jitted coefficient-update executables, keyed by plan shape.
+
+    ``updater(plan)`` returns a ``buffers -> values`` callable bound to the
+    plan's index array; two plans with equal :func:`plan_shape_signature`
+    share one underlying compiled program (pool *hit*), so revisiting an
+    alpha — or switching between equal-shape plans of different meshes —
+    skips trace + compile and reuses the executable's buffers.
+    """
+
+    def __init__(self):
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def updater(self, plan: RepartitionPlan, target: str = "dia",
+                schedule: str = "device_direct"):
+        key = (schedule,) + plan_shape_signature(plan, target)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = _pooled_update(schedule)
+        else:
+            self.hits += 1
+        src = jnp.asarray(plan.dia_src if target == "dia" else plan.ell_src)
+        return lambda buffers: fn(src, buffers)

@@ -50,6 +50,15 @@ class PressureSystem:
     g_if: jax.Array    # (P, 2, B)
 
 
+# pytree registration lets the systems cross jit boundaries — the
+# instrumented PISO step (piso.timed_step) passes them between phase-jitted
+# functions instead of fusing the whole timestep into one program.
+for _cls in (MomentumSystem, PressureSystem):
+    jax.tree_util.register_dataclass(
+        _cls, data_fields=[f.name for f in dataclasses.fields(_cls)],
+        meta_fields=[])
+
+
 class CavityAssembly:
     """Precomputed static addressing + assembly routines for one mesh."""
 

@@ -17,11 +17,14 @@ sharded and the halo exchanges/reductions lower to collectives.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost_model import PhaseBreakdown
 from repro.core.ldu import buffer_from_parts
 from repro.core.repartition import RepartitionPlan, plan_for_mesh
 from repro.core.update import update_device_direct, update_host_buffer
@@ -30,7 +33,7 @@ from repro.fvm.mesh import CavityMesh
 from repro.solvers.bicgstab import bicgstab
 from repro.solvers.cg import cg
 from repro.solvers.jacobi import jacobi_preconditioner
-from repro.sparse.distributed import spmv_dia
+from repro.sparse.distributed import spmv_dia, x_pad
 
 __all__ = ["PisoSolver", "PisoState", "StepStats"]
 
@@ -68,6 +71,9 @@ class PisoSolver:
     # assemble axis too — every chip works during the solve.
     spmd_mesh: object | None = None
     full_mesh_solve: bool = False
+    # optional shared PlanCache (repro.core.controller) — plans and compiled
+    # steppers are then reused when alpha is rebound to a previously seen value
+    plan_cache: object | None = None
 
     def __post_init__(self):
         if self.mesh.n_parts % self.alpha != 0:
@@ -75,14 +81,39 @@ class PisoSolver:
         self.asm = CavityAssembly(self.mesh, nu=self.nu,
                                   lid_speed=self.lid_speed, dtype=self.dtype)
         # identity repartition for the momentum (fine-partition) matrix
-        self.plan_mom: RepartitionPlan = plan_for_mesh(self.mesh, 1)
-        # alpha-repartition for the pressure (coarse-partition) matrix
-        self.plan_p: RepartitionPlan = plan_for_mesh(self.mesh, self.alpha)
-        self.n_coarse = self.mesh.n_parts // self.alpha
+        self.plan_mom: RepartitionPlan = self._plan_for(1)
         self._update = (update_device_direct
                         if self.update_schedule == "device_direct"
                         else update_host_buffer)
-        self._step = jax.jit(self._step_impl, static_argnames=("dt",))
+        # compiled artifacts per alpha: revisiting an alpha (adaptive
+        # controller oscillating between neighbours) reuses trace + XLA work
+        self._step_by_alpha: dict[int, object] = {}
+        self._timed_by_alpha: dict[int, dict] = {}
+        self.rebind_alpha(self.alpha)
+
+    def _plan_for(self, alpha: int) -> RepartitionPlan:
+        if self.plan_cache is not None:
+            return self.plan_cache.plan_for_mesh(self.mesh, alpha)
+        return plan_for_mesh(self.mesh, alpha)
+
+    def rebind_alpha(self, alpha: int) -> None:
+        """Swap the pressure-side repartitioning ratio (controller hook).
+
+        The velocity/pressure state is alpha-independent (fine-partition
+        layout), so a running simulation can switch plans between steps.
+        Plans come from ``plan_cache`` when present; jitted steppers are
+        memoized per alpha so a revisited alpha pays zero re-plan cost.
+        """
+        if self.mesh.n_parts % alpha != 0:
+            raise ValueError("alpha must divide the number of fine parts")
+        self.alpha = alpha
+        self.plan_p: RepartitionPlan = self._plan_for(alpha)
+        self.n_coarse = self.mesh.n_parts // alpha
+        step = self._step_by_alpha.get(alpha)
+        if step is None:
+            step = self._step_by_alpha[alpha] = jax.jit(
+                self._step_impl, static_argnames=("dt",))
+        self._step = step
 
     # ---- helpers ------------------------------------------------------
     def initial_state(self) -> PisoState:
@@ -189,6 +220,154 @@ class PisoSolver:
 
     def step(self, state: PisoState, dt: float):
         return self._step(state, dt)
+
+    # ---- instrumented step (adaptive-controller hook) --------------------
+    def _timed_fns(self) -> dict:
+        """Per-phase jitted functions for the current alpha (memoized)."""
+        fns = self._timed_by_alpha.get(self.alpha)
+        if fns is not None:
+            return fns
+        asm, plan_m, plan_p = self.asm, self.plan_mom, self.plan_p
+        n_c = self.n_coarse
+
+        def assemble_mom(U, phi, phi_if, p, dt):
+            return asm.assemble_momentum(U, phi, phi_if, p, dt)
+
+        def update_mom(sysM):
+            return self._bands(plan_m, sysM.diag, sysM.upper, sysM.lower,
+                               sysM.iface)
+
+        def group(plan, sys):
+            buffers = buffer_from_parts(sys.diag, sys.upper, sys.lower,
+                                        sys.iface)
+            n = buffers.shape[0] // plan.alpha
+            return buffers.reshape(n, plan.alpha, plan.buffer_len)
+
+        def solve_mom(bandsM, sysM, U):
+            from repro.solvers.bicgstab import BiCGStabResult
+
+            A_mom = self._spmv(plan_m, bandsM)
+            Mj = jacobi_preconditioner(sysM.diag)
+            res = jax.vmap(
+                lambda b, x0: bicgstab(A_mom, b, x0, M=Mj, tol=self.mom_tol,
+                                       maxiter=500),
+                in_axes=(2, 2),
+                out_axes=BiCGStabResult(x=2, iters=0, residual=0),
+            )(sysM.source, U)
+            return res.x, jnp.max(res.iters)
+
+        def assemble_p(sysM, U):
+            rAU = asm.V / sysM.diag
+            HbyA = (sysM.source - _offdiag3(asm, sysM, U)) / sysM.diag[..., None]
+            phiH, phiH_if = asm.face_flux(HbyA)
+            sysP = asm.assemble_pressure(rAU, phiH, phiH_if)
+            return rAU, HbyA, phiH, phiH_if, sysP
+
+        def update_p(sysP):
+            return self._solve_constraint(
+                self._bands(plan_p, sysP.diag, sysP.upper, sysP.lower,
+                            sysP.iface))
+
+        def solve_p(bandsP, sysP, p):
+            A_p = self._spmv(plan_p, bandsP)
+            b_c = self._solve_constraint(sysP.source.reshape(n_c, -1))
+            x0_c = self._solve_constraint(p.reshape(n_c, -1))
+            diag_c = sysP.diag.reshape(n_c, -1)
+            sol = cg(A_p, b_c, x0_c, M=jacobi_preconditioner(diag_c),
+                     tol=self.p_tol, maxiter=2000)
+            return sol.x.reshape(p.shape), sol.iters, sol.residual
+
+        def halo_probe(p):
+            return x_pad(p.reshape(n_c, -1), plan_p.plane)
+
+        def correct(sysP, phiH, phiH_if, p, HbyA, rAU):
+            phi, phi_if = asm.correct_flux(sysP, phiH, phiH_if, p)
+            U = HbyA - rAU[..., None] * asm.grad(p)
+            cont = jnp.max(jnp.abs(asm.divergence(phi, phi_if))) / asm.V
+            return phi, phi_if, U, cont
+
+        fns = {name: jax.jit(fn) for name, fn in [
+            ("assemble_mom", assemble_mom), ("update_mom", update_mom),
+            ("solve_mom", solve_mom), ("assemble_p", assemble_p),
+            ("update_p", update_p), ("solve_p", solve_p),
+            ("halo_probe", halo_probe), ("correct", correct)]}
+        if self.plan_cache is not None:
+            # route the value updates through the shared compiled-update
+            # pool: the gather executable is reused by every solver/session
+            # whose plan has the same shape signature (PlanCache.pool)
+            pool = self.plan_cache.pool
+            pooled_m = pool.updater(plan_m, "dia", self.update_schedule)
+            pooled_p = pool.updater(plan_p, "dia", self.update_schedule)
+            group_m = jax.jit(functools.partial(group, plan_m))
+            group_p = jax.jit(functools.partial(group, plan_p))
+            constrain = (jax.jit(self._solve_constraint)
+                         if self.spmd_mesh is not None else (lambda x: x))
+            fns["update_mom"] = lambda sysM: pooled_m(group_m(sysM))
+            fns["update_p"] = lambda sysP: constrain(pooled_p(group_p(sysP)))
+        self._timed_by_alpha[self.alpha] = fns
+        return fns
+
+    def timed_step(self, state: PisoState, dt: float):
+        """One PISO step with per-phase wall timers (controller feedback).
+
+        Phase attribution follows the paper's two partitions: **assembly**
+        is the whole fine-partition share (momentum predictor including its
+        BiCGStab solve, pressure assembly, flux/velocity corrections);
+        **update** is the repartitioning coefficient update into the coarse
+        plan; **solve** the coarse-partition pressure CG; **halo** the
+        estimated per-iteration neighbour exchange inside that solve (one
+        probed exchange x iteration count — the exchange cannot be timed
+        from inside the jitted CG loop).
+
+        Numerically identical to :meth:`step` (same math, jitted per phase
+        rather than fused); the first call after construction or
+        :meth:`rebind_alpha` to a new alpha includes trace+compile time, so
+        controllers should discard warm-up samples
+        (``ControllerConfig.warmup``).  Returns
+        ``(state, stats, PhaseBreakdown)``.
+        """
+        fns = self._timed_fns()
+        t = dict.fromkeys(("assembly", "update", "halo", "solve"), 0.0)
+
+        def clock(key, fn, *args):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*args))
+            t[key] += time.perf_counter() - t0
+            return out
+
+        U, p, phi, phi_if = state
+        sysM = clock("assembly", fns["assemble_mom"], U, phi, phi_if, p, dt)
+        bandsM = clock("assembly", fns["update_mom"], sysM)
+        U, mom_iters = clock("assembly", fns["solve_mom"], bandsM, sysM, U)
+
+        p_iters = []
+        p_res = jnp.zeros((), self.dtype)
+        cont = jnp.zeros((), self.dtype)
+        for _ in range(self.n_correctors):
+            rAU, HbyA, phiH, phiH_if, sysP = clock(
+                "assembly", fns["assemble_p"], sysM, U)
+            bandsP = clock("update", fns["update_p"], sysP)
+            # probe one halo exchange to apportion the CG time
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns["halo_probe"](p))
+            probe = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            p, iters, p_res = jax.block_until_ready(
+                fns["solve_p"](bandsP, sysP, p))
+            t_cg = time.perf_counter() - t0
+            # the standalone probe pays per-call dispatch the fused CG loop
+            # does not, so it is an upper bound at small sizes — never let
+            # the estimate claim more than half the measured solve
+            halo_est = min(float(iters) * probe, 0.5 * t_cg)
+            t["halo"] += halo_est
+            t["solve"] += t_cg - halo_est
+            p_iters.append(iters)
+            phi, phi_if, U, cont = clock(
+                "assembly", fns["correct"], sysP, phiH, phiH_if, p, HbyA, rAU)
+
+        stats = StepStats(mom_iters=mom_iters, p_iters=jnp.stack(p_iters),
+                          continuity_err=cont, p_residual=p_res)
+        return PisoState(U, p, phi, phi_if), stats, PhaseBreakdown(**t)
 
     def run(self, n_steps: int, dt: float, state: PisoState | None = None):
         state = state or self.initial_state()

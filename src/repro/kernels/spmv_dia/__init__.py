@@ -1,1 +1,26 @@
+"""Banded (DIA) SpMV Pallas kernel — the repartitioned solver's hot loop.
+
+TPU adaptation of the paper's GPU row-major COO SpMV: the fused FVM matrix is
+7-banded (``RepartitionPlan.dia_offsets = [-plane, -nx, -1, 0, +1, +nx,
++plane]``), so ``y = A x`` is seven shifted fused multiply-adds over
+``x_pad = [down-halo | x | up-halo]`` — no gather, no atomics, pure VPU work.
+
+Layout & tiling contract (``spmv_dia.py``):
+
+* ``bands``: ``(n_bands, m)`` per part; the grid walks row blocks of
+  ``block_rows`` (default 2048, must divide ``m`` — ``ops.py`` pads rows to a
+  block multiple and unpads the result).
+* ``x_pad``: ``(m + 2*plane,)`` resident in VMEM for the whole grid
+  (``ops.py`` asserts the fp32 budget, ``VMEM_F32_BUDGET``); band tiles
+  stream through VMEM and double-buffer via the Pallas pipeline.
+* halo planes are zero at physical boundaries, matching the zero interface
+  coefficients there, so no masking is needed.
+
+Entry points: :func:`~repro.kernels.spmv_dia.ops.spmv_dia_pallas` (stacked
+parts ``(P, nb, m)``, falls back to interpret mode off-TPU) and
+``spmv_dia_single`` (one part).  ``ref.py`` holds the pure-jnp oracle
+``spmv_dia_ref`` — the contract is bit-exact agreement per dtype, enforced by
+``tests/test_kernels.py`` and timed by ``benchmarks/kernels_bench.py``
+(see docs/kernels.md).
+"""
 from repro.kernels.spmv_dia.ops import spmv_dia_pallas  # noqa: F401

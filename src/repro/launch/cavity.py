@@ -1,6 +1,13 @@
 """CFD launcher: lidDrivenCavity3D with the repartitioned PISO solver.
 
   python -m repro.launch.cavity --n 12 --parts 4 --alpha 2 --steps 10
+
+Adaptive mode closes the loop: per-phase timers feed the repartitioning
+controller, which recalibrates the cost model online and rebinds alpha when
+the predicted gain clears the hysteresis threshold (plan switches are served
+from the LRU plan cache):
+
+  python -m repro.launch.cavity --n 12 --parts 4 --adaptive --steps 20
 """
 from __future__ import annotations
 
@@ -9,6 +16,8 @@ import time
 
 import jax
 
+from repro.core.controller import (ControllerConfig, PlanCache,
+                                   RepartitionController)
 from repro.core.cost_model import CostModel, TPU_V5E
 from repro.fvm.mesh import CavityMesh
 from repro.fvm.piso import PisoSolver
@@ -25,19 +34,59 @@ def main():
     ap.add_argument("--nu", type=float, default=0.01)
     ap.add_argument("--schedule", default="device_direct",
                     choices=["device_direct", "host_buffer"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="feedback-driven alpha (overrides --alpha)")
+    ap.add_argument("--hysteresis", type=float, default=0.10,
+                    help="min relative predicted gain to switch alpha")
     args = ap.parse_args()
 
     jax.config.update("jax_enable_x64", True)
+    cm = CostModel(TPU_V5E, n_dofs=args.n ** 3)
     alpha = args.alpha
-    if alpha == 0:
-        cm = CostModel(TPU_V5E, n_dofs=args.n ** 3)
-        alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
-        print(f"cost model picked alpha={alpha}")
+    if alpha == 0 or args.adaptive:
+        alpha = None  # let the controller/cost model pick
 
     mesh = CavityMesh.cube(args.n, args.parts)
+    dt = args.co * mesh.h  # lid speed 1 → dt = Co*h
+
+    if args.adaptive:
+        cache = PlanCache()
+        # fixed_fine feasibility keeps only divisors of --parts
+        cfg = ControllerConfig(hysteresis=args.hysteresis)
+        ctl = RepartitionController(cm, n_cpu=args.parts, n_gpu=1,
+                                    alpha0=alpha, config=cfg, cache=cache,
+                                    fixed_fine=True)
+        solver = PisoSolver(mesh, alpha=ctl.alpha, nu=args.nu,
+                            update_schedule=args.schedule, plan_cache=cache)
+        print(f"controller start: alpha={ctl.alpha}")
+        state = solver.initial_state()
+        t0 = time.time()
+        for step in range(args.steps):
+            state, stats, sample = solver.timed_step(state, dt)
+            new_alpha = ctl.step(sample)
+            if new_alpha != solver.alpha:
+                print(f"step {step}: controller switch alpha "
+                      f"{solver.alpha} -> {new_alpha}")
+                solver.rebind_alpha(new_alpha)
+            print(f"step {step}: alpha={solver.alpha} "
+                  f"p_iters={[int(i) for i in stats.p_iters]} "
+                  f"continuity={float(stats.continuity_err):.2e} "
+                  f"phases(ms)=[as {sample.assembly*1e3:.1f} "
+                  f"up {sample.update*1e3:.1f} ha {sample.halo*1e3:.1f} "
+                  f"so {sample.solve*1e3:.1f}]")
+        s = ctl.stats()
+        print(f"{args.steps} steps in {time.time() - t0:.2f}s "
+              f"({mesh.n_cells_global} cells); final alpha={ctl.alpha}, "
+              f"{len(s['switches'])} switch(es), "
+              f"plan cache {s['cache']['hits']} hits / "
+              f"{s['cache']['misses']} misses")
+        return
+
+    if alpha is None:
+        alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
+        print(f"cost model picked alpha={alpha}")
     solver = PisoSolver(mesh, alpha=alpha, nu=args.nu,
                         update_schedule=args.schedule)
-    dt = args.co * mesh.h  # lid speed 1 → dt = Co*h
     state = solver.initial_state()
     t0 = time.time()
     for step in range(args.steps):

@@ -3,15 +3,30 @@
 ``serve_step`` is the unit the dry-run lowers for decode shapes: one new
 token for every sequence in the batch against a KV cache of ``seq_len``.
 ``generate`` drives it for real batches (examples/serve_lm.py).
+
+The second half of the module is the CFD serving analogue:
+:class:`SimulationEngine` hosts many concurrent PISO simulations
+("solver-as-a-service"), each with its **own**
+:class:`~repro.core.controller.RepartitionController` — per-session
+calibration state, so a session on a coarse mesh with heavy assembly and a
+session on a fine mesh with a dominant solve adapt their alpha
+independently — while all sessions share one process-wide
+:class:`~repro.core.controller.PlanCache` (plans are immutable and keyed by
+mesh fingerprint, so a newly opened session on an already-seen mesh starts
+with warm plans).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.controller import (ControllerConfig, PlanCache,
+                                   RepartitionController)
+from repro.core.cost_model import CostModel, TPU_V5E
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -54,3 +69,94 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, n_new: int,
         state, nxt = step(params, state)
         outs.append(nxt)
     return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# CFD simulation serving — multi-tenant PISO with per-session adaptation.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimulationSession:
+    """One tenant: a solver, its private controller, and its flow state."""
+
+    sid: str
+    solver: object                      # PisoSolver
+    controller: RepartitionController
+    state: object                       # PisoState
+    dt: float
+    adaptive: bool = True
+    steps_done: int = 0
+
+
+class SimulationEngine:
+    """Concurrent PISO simulations with independent adaptive repartitioning.
+
+    Controller state (calibration EMA, hysteresis counters, switch history)
+    is strictly per session; the :class:`PlanCache` — symbolic plans plus the
+    compiled-update pool — is shared, which is safe because plans are
+    immutable and keyed by ``(mesh fingerprint, alpha, target)``.
+    """
+
+    def __init__(self, plan_cache: PlanCache | None = None,
+                 config: ControllerConfig = ControllerConfig()):
+        # explicit None test: an empty PlanCache is falsy (it has __len__)
+        self.plan_cache = PlanCache() if plan_cache is None else plan_cache
+        self.config = config
+        self.sessions: dict[str, SimulationSession] = {}
+
+    def open_session(self, sid: str, mesh, *, dt: float,
+                     alpha0: int | None = None, nu: float = 0.01,
+                     model: CostModel | None = None,
+                     adaptive: bool = True) -> SimulationSession:
+        """Admit a simulation; its controller starts from the cost model's
+        static pick (``alpha0=None``) exactly like the non-adaptive launcher,
+        then departs from it as measurements arrive."""
+        from repro.fvm.piso import PisoSolver
+
+        if sid in self.sessions:
+            raise ValueError(f"session {sid!r} already open")
+        model = model or CostModel(TPU_V5E, n_dofs=mesh.n_cells_global)
+        # fixed_fine feasibility already restricts alphas to divisors of
+        # n_cpu = mesh.n_parts, i.e. to plans realizable on the mesh
+        controller = RepartitionController(
+            model, n_cpu=mesh.n_parts, n_gpu=1, alpha0=alpha0,
+            config=self.config, cache=self.plan_cache, fixed_fine=True)
+        solver = PisoSolver(mesh, alpha=controller.alpha, nu=nu,
+                            plan_cache=self.plan_cache)
+        sess = SimulationSession(sid=sid, solver=solver,
+                                 controller=controller,
+                                 state=solver.initial_state(), dt=dt,
+                                 adaptive=adaptive)
+        self.sessions[sid] = sess
+        return sess
+
+    def step_session(self, sid: str, n_steps: int = 1):
+        """Advance one tenant; other sessions' controllers are untouched."""
+        sess = self.sessions[sid]
+        stats = None
+        for _ in range(n_steps):
+            if sess.adaptive:
+                sess.state, stats, sample = sess.solver.timed_step(
+                    sess.state, sess.dt)
+                alpha = sess.controller.step(sample)
+                if alpha != sess.solver.alpha:
+                    sess.solver.rebind_alpha(alpha)
+            else:
+                sess.state, stats = sess.solver.step(sess.state, sess.dt)
+            sess.steps_done += 1
+        return stats
+
+    def close_session(self, sid: str) -> dict:
+        """Evict the tenant; returns its final controller stats."""
+        sess = self.sessions.pop(sid)
+        return sess.controller.stats()
+
+    def stats(self) -> dict:
+        return {
+            "sessions": {
+                sid: {"steps": s.steps_done, "alpha": s.controller.alpha,
+                      "switches": len(s.controller.switches)}
+                for sid, s in self.sessions.items()
+            },
+            "plan_cache": self.plan_cache.stats(),
+        }

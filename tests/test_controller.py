@@ -1,0 +1,297 @@
+"""Adaptive repartitioning controller: calibration, hysteresis, plan cache.
+
+The controller is exercised against *synthetic* measurements drawn from a
+hidden ground-truth cost model (possibly noisy, possibly drifting) — the
+same harness as benchmarks/fig10_adaptive.py, shrunk for test time.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import (ControllerConfig, OnlineCalibration,
+                                   PlanCache, RepartitionController)
+from repro.core.cost_model import CostModel, HOREKA_A100, PhaseBreakdown
+from repro.core.repartition import (layout_fingerprint, mesh_fingerprint,
+                                    plan_for_mesh)
+from repro.core.update import UpdaterPool, plan_shape_signature
+from repro.fvm.mesh import CavityMesh
+from repro.core.ldu import LDULayout
+
+N_GPU, N_CPU = 4, 64
+ALPHAS = (1, 2, 4, 8, 16)
+
+
+def make_controller(truth_kw=None, **cfg_kw):
+    base = CostModel(HOREKA_A100, n_dofs=2e4)
+    cfg = ControllerConfig(alphas=ALPHAS, **cfg_kw)
+    ctl = RepartitionController(base, n_cpu=N_CPU, n_gpu=N_GPU, config=cfg)
+    truth = CostModel(HOREKA_A100, n_dofs=2e4, **(truth_kw or {}))
+    return ctl, truth
+
+
+def measured(truth: CostModel, alpha: int, rng=None, sigma=0.0):
+    clean = truth.predict_phases(N_GPU * alpha, N_GPU)
+    if rng is None:
+        return clean
+    f = rng.lognormal(0.0, sigma, size=4)
+    return PhaseBreakdown(clean.assembly * f[0], clean.update * f[1],
+                          clean.halo * f[2], clean.solve * f[3])
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibration_converges_exactly_on_clean_samples():
+    """Noise-free samples: the fitted scales must recover the truth."""
+    ctl, truth = make_controller(
+        truth_kw=dict(assembly_scale=3.0, solve_scale=0.5, comm_scale=1.7))
+    for _ in range(12):
+        ctl.observe(measured(truth, ctl.alpha))
+    a, s, c = ctl.calibration.scales
+    assert a == pytest.approx(3.0, rel=1e-6)
+    assert s == pytest.approx(0.5, rel=1e-6)
+    assert c == pytest.approx(1.7, rel=1e-6)
+    # and the calibrated model predicts the measured phases
+    pred = ctl.predicted_phases()
+    meas = measured(truth, ctl.alpha)
+    assert pred.total == pytest.approx(meas.total, rel=1e-6)
+
+
+def test_calibration_averages_noise():
+    """±20% multiplicative noise must average down to a few percent."""
+    ctl, truth = make_controller(truth_kw=dict(assembly_scale=2.0))
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        ctl.observe(measured(truth, ctl.alpha, rng, sigma=0.2))
+    a, _, _ = ctl.calibration.scales
+    assert a == pytest.approx(2.0, rel=0.15)
+
+
+def test_calibration_tracks_step_change():
+    """EMA forgets: after a regime shift the fit follows within ~10 obs."""
+    ctl, truth = make_controller()
+    for _ in range(5):
+        ctl.observe(measured(truth, ctl.alpha))
+    shifted = truth.with_scales(assembly=4.0)
+    for _ in range(15):
+        ctl.observe(measured(shifted, ctl.alpha))
+    a, _, _ = ctl.calibration.scales
+    assert a == pytest.approx(4.0, rel=0.05)
+
+
+def test_inverse_model_alpha_star_monotone_in_assembly_share():
+    light = CostModel(HOREKA_A100, n_dofs=2e4, assembly_flops_per_dof=60)
+    heavy = CostModel(HOREKA_A100, n_dofs=2e4, assembly_flops_per_dof=2400)
+    assert heavy.alpha_star(N_CPU, N_GPU) > light.alpha_star(N_CPU, N_GPU)
+    # the closed form seeds the discrete argmin: they agree within a notch
+    for m in (light, heavy):
+        a_disc = m.optimal_alpha(N_CPU, N_GPU, candidates=ALPHAS)
+        a_cont = m.alpha_star(N_CPU, N_GPU)
+        assert 0.5 * a_disc <= a_cont <= 2.0 * a_disc
+
+
+# ---------------------------------------------------------------------------
+# hysteresis / switching
+# ---------------------------------------------------------------------------
+
+def test_no_thrash_under_noise():
+    """Noisy measurements around a stable optimum: at most one switch
+    (the initial correction), never oscillation."""
+    ctl, truth = make_controller(
+        truth_kw=dict(assembly_scale=1.3),
+        hysteresis=0.10, patience=3, min_dwell=5)
+    rng = np.random.default_rng(3)
+    for _ in range(150):
+        ctl.step(measured(truth, ctl.alpha, rng, sigma=0.25))
+    assert len(ctl.switches) <= 1
+    if ctl.switches:  # whatever it settled on, it stayed there
+        assert ctl.switches[-1].step < 50
+
+
+def test_switches_on_real_drift():
+    """A 40x assembly-cost ramp must move alpha up — and only forward."""
+    ctl, _ = make_controller(hysteresis=0.10, patience=3, min_dwell=5)
+    alpha_first = ctl.alpha
+    for step in range(120):
+        f = 60.0 if step < 40 else 2400.0
+        truth = CostModel(HOREKA_A100, n_dofs=2e4, assembly_flops_per_dof=f)
+        ctl.step(measured(truth, ctl.alpha))
+    assert ctl.alpha > alpha_first
+    seen = [s.new_alpha for s in ctl.switches]
+    assert seen == sorted(seen), "alpha should only ratchet up on this drift"
+
+
+def test_dwell_blocks_immediate_reswitch():
+    ctl, _ = make_controller(hysteresis=0.05, patience=1, min_dwell=50,
+                             warmup=1)
+    heavy = CostModel(HOREKA_A100, n_dofs=2e4, assembly_flops_per_dof=2400)
+    for _ in range(30):
+        ctl.step(measured(heavy, ctl.alpha))
+    assert len(ctl.switches) <= 1
+
+
+def test_converges_near_oracle_on_drifting_sweep():
+    """The fig10 acceptance bar: total time within 10% of the best static
+    alpha chosen in hindsight."""
+    ctl, _ = make_controller(hysteresis=0.10, patience=3, min_dwell=5)
+    rng = np.random.default_rng(0)
+    t_ctl = 0.0
+    static = dict.fromkeys(ALPHAS, 0.0)
+    for step in range(120):
+        f = 60.0 * (40.0 ** min(1.0, max(0.0, (step - 40) / 40)))
+        truth = CostModel(HOREKA_A100, n_dofs=2e4, assembly_flops_per_dof=f)
+        t_ctl += truth.predict_phases(N_GPU * ctl.alpha, N_GPU).total
+        for a in ALPHAS:
+            static[a] += truth.predict_phases(N_GPU * a, N_GPU).total
+        ctl.step(measured(truth, ctl.alpha, rng, sigma=0.15))
+    assert t_ctl <= 1.10 * min(static.values())
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_miss_and_identity():
+    cache = PlanCache(capacity=8)
+    mesh = CavityMesh.cube(4, 4)
+    p1 = cache.plan_for_mesh(mesh, 2)
+    assert (cache.hits, cache.misses) == (0, 1)
+    p2 = cache.plan_for_mesh(mesh, 2)
+    assert p2 is p1, "revisited alpha must reuse the symbolic plan"
+    assert (cache.hits, cache.misses) == (1, 1)
+    cache.plan_for_mesh(mesh, 4)
+    assert (cache.hits, cache.misses) == (1, 2)
+    # a re-created but structurally identical mesh hits the same entry
+    assert cache.plan_for_mesh(CavityMesh.cube(4, 4), 2) is p1
+    # a different decomposition is a different key
+    cache.plan_for_mesh(CavityMesh.cube(4, 2), 2)
+    assert cache.misses == 3
+
+
+def test_plan_cache_repeated_alpha_sequence():
+    """The controller's oscillation pattern: re-plans are all cache hits."""
+    cache = PlanCache()
+    mesh = CavityMesh.cube(4, 4)
+    seq = [1, 2, 4, 2, 1, 2, 4, 4, 2, 1]
+    for a in seq:
+        cache.plan_for_mesh(mesh, a)
+    assert cache.misses == 3          # one per distinct alpha
+    assert cache.hits == len(seq) - 3
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(capacity=2)
+    mesh = CavityMesh.cube(4, 4)
+    cache.plan_for_mesh(mesh, 1)
+    cache.plan_for_mesh(mesh, 2)
+    cache.plan_for_mesh(mesh, 1)      # refresh 1 → 2 becomes LRU
+    cache.plan_for_mesh(mesh, 4)      # evicts 2
+    assert cache.evictions == 1
+    key2 = (mesh_fingerprint(mesh), 2, "dia")
+    key1 = (mesh_fingerprint(mesh), 1, "dia")
+    assert key2 not in cache and key1 in cache
+
+
+def test_fingerprints_are_structural():
+    m = CavityMesh.cube(6, 3)
+    assert mesh_fingerprint(m) == mesh_fingerprint(CavityMesh.cube(6, 3))
+    assert mesh_fingerprint(m) != mesh_fingerprint(CavityMesh.cube(6, 6))
+    la = LDULayout.from_mesh(m)
+    lb = LDULayout.from_mesh(CavityMesh.cube(6, 3))
+    assert layout_fingerprint(la) == layout_fingerprint(lb)
+    assert layout_fingerprint(la) != layout_fingerprint(
+        LDULayout.from_mesh(CavityMesh.cube(4, 2)))
+
+
+def test_updater_pool_shares_compiled_program_across_equal_shapes():
+    pool = UpdaterPool()
+    mesh = CavityMesh.cube(4, 4)
+    plan_a = plan_for_mesh(mesh, 2)
+    plan_b = plan_for_mesh(CavityMesh.cube(4, 4), 2)  # equal-shape plan
+    assert plan_shape_signature(plan_a) == plan_shape_signature(plan_b)
+    pool.updater(plan_a)
+    assert (pool.hits, pool.misses) == (0, 1)
+    pool.updater(plan_b)
+    assert (pool.hits, pool.misses) == (1, 1), \
+        "equal-shape plans must share one compiled update"
+    pool.updater(plan_for_mesh(mesh, 4))  # different shape → new program
+    assert pool.misses == 2
+
+
+def test_cached_updater_matches_direct_update():
+    """The pooled/jitted update path is numerically the plain path."""
+    import jax.numpy as jnp
+
+    from repro.core.ldu import buffer_from_parts
+    from repro.core.update import update_device_direct
+
+    mesh = CavityMesh.cube(4, 4)
+    layout = LDULayout.from_mesh(mesh)
+    rng = np.random.default_rng(0)
+    P = mesh.n_parts
+    diag = rng.standard_normal((P, layout.n_cells))
+    upper = rng.standard_normal((P, layout.n_faces))
+    lower = rng.standard_normal((P, layout.n_faces))
+    iface = rng.standard_normal((P, layout.n_ifaces, layout.iface_size))
+    iface *= mesh.iface_mask()[:, :, None]
+    buffers = jnp.asarray(buffer_from_parts(diag, upper, lower, iface))
+
+    cache = PlanCache()
+    plan = cache.plan_for_mesh(mesh, 2)
+    grouped = buffers.reshape(2, 2, -1)
+    ref = update_device_direct(plan, grouped, target="dia")
+    got = cache.updater(mesh_fingerprint(mesh), 2)(grouped)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-14)
+
+
+# ---------------------------------------------------------------------------
+# PISO integration
+# ---------------------------------------------------------------------------
+
+def test_piso_rebind_alpha_reuses_plans_and_steppers():
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.fvm.piso import PisoSolver
+
+    cache = PlanCache()
+    mesh = CavityMesh.cube(4, 4)
+    solver = PisoSolver(mesh, alpha=2, plan_cache=cache)
+    state = solver.initial_state()
+    state, _ = solver.step(state, 1e-3)
+    step2 = solver._step
+    plan2 = solver.plan_p
+
+    solver.rebind_alpha(4)
+    state, _ = solver.step(state, 1e-3)
+    assert solver.n_coarse == 1
+
+    solver.rebind_alpha(2)   # revisit: plan AND compiled stepper reused
+    assert solver.plan_p is plan2
+    assert solver._step is step2
+    state, stats = solver.step(state, 1e-3)
+    assert float(stats.continuity_err) < 1e-6
+    s = cache.stats()
+    assert s["hits"] >= 1 and s["misses"] == 3  # alpha 1 (mom), 2, 4
+
+
+def test_piso_timed_step_matches_fused_step():
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.fvm.piso import PisoSolver
+
+    mesh = CavityMesh.cube(4, 2)
+    s_a = PisoSolver(mesh, alpha=2)
+    s_b = PisoSolver(mesh, alpha=2)
+    st_a = s_a.initial_state()
+    st_b = s_b.initial_state()
+    for _ in range(2):
+        st_a, stats_a = s_a.step(st_a, 1e-3)
+        st_b, stats_b, sample = s_b.timed_step(st_b, 1e-3)
+    np.testing.assert_allclose(np.asarray(st_a.U), np.asarray(st_b.U),
+                               atol=1e-12)
+    np.testing.assert_allclose(np.asarray(st_a.p), np.asarray(st_b.p),
+                               atol=1e-12)
+    assert sample.total > 0.0
+    assert min(sample.assembly, sample.update, sample.solve) >= 0.0

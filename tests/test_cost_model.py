@@ -1,6 +1,6 @@
 """Paper §2 cost model: the qualitative claims the paper makes must hold."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core.cost_model import CostModel, HOREKA_A100, TPU_V5E
 

@@ -2,7 +2,7 @@
 global matrix restricted to the coarse part's rows, for every alpha."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core.ldu import LDULayout, buffer_from_parts
 from repro.core.repartition import build_plan, plan_for_mesh, fuse_parts_coo

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Docs link/reference checker (CI: keeps README + docs honest).
+
+Verifies, across README.md and docs/*.md:
+
+* local markdown links ``[text](path)`` point at existing files;
+* backticked file references (anything with a ``/`` ending in ``.py`` or
+  ``.md``, e.g. ``src/repro/core/controller.py``, ``benchmarks/fig10_adaptive.py``,
+  possibly with a trailing ``::test_name``) exist;
+* backticked dotted modules under our package (``repro.launch.cavity``,
+  ``repro.core.update.UpdaterPool``) resolve to a module file under src/
+  (a trailing attribute segment is allowed).
+
+Exit code 1 with a per-reference report on any dangling reference.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")
+TICKED = re.compile(r"`([^`\n]+)`")
+
+
+def module_exists(dotted: str) -> bool:
+    """True if ``dotted`` is a repro module, or a module + one attribute."""
+    parts = dotted.split(".")
+    for cut in (len(parts), len(parts) - 1):  # with and without attr tail
+        if cut < 1:
+            continue
+        rel = pathlib.Path("src", *parts[:cut])
+        if (ROOT / rel).with_suffix(".py").exists() or \
+                (ROOT / rel / "__init__.py").exists():
+            return True
+    return False
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    for target in MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (md.parent / target).exists() and not (ROOT / target).exists():
+            errors.append(f"{md.relative_to(ROOT)}: dead link ({target})")
+    for ref in TICKED.findall(text):
+        ref = ref.split("::")[0].strip()
+        if "/" in ref and ref.endswith((".py", ".md")):
+            # bare refs may be written relative to src/repro/ (docs convention)
+            candidates = (ROOT / ref, ROOT / "src" / "repro" / ref)
+            if not any(c.exists() for c in candidates):
+                errors.append(f"{md.relative_to(ROOT)}: missing file (`{ref}`)")
+        elif re.fullmatch(r"repro(\.\w+)+", ref):
+            if not module_exists(ref):
+                errors.append(
+                    f"{md.relative_to(ROOT)}: unresolvable module (`{ref}`)")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors = []
+    for md in files:
+        if md.exists():
+            errors += check_file(md)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} dangling)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
