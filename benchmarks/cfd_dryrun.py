@@ -57,7 +57,8 @@ with m:
                       in_shardings=(shardings,)).lower(arg_specs, 1e-4)
     compiled = lowered.compile()
 mem = compiled.memory_analysis()
-cost = compiled.cost_analysis()
+from repro.compat import cost_analysis_dict
+cost = cost_analysis_dict(compiled)
 rec = {
     "arch": "cfd-lidDrivenCavity3D", "shape": f"n{n}_alpha{alpha}",
     "mesh": "multi_pod" if multi else "single_pod", "status": "ok",

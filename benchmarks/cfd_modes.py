@@ -32,8 +32,8 @@ n = int(sys.argv[2])
 n_solve, alpha = 14, 15
 parts = n_solve * alpha
 m = make_cfd_mesh(n_coarse=n_solve, alpha=alpha)
-solver = PisoSolver(CavityMesh.cube(n, parts), alpha=alpha,
-                    spmd_mesh=m, full_mesh_solve=full)
+solver = PisoSolver(CavityMesh.cube(n, parts), alpha=alpha, spmd_mesh=m,
+                    solve_mode="full_mesh" if full else "stacked")
 
 def fine_sh(x):
     return NamedSharding(m, P(*((("solve", "assemble"),)
@@ -45,7 +45,8 @@ args = PisoState(*[jax.ShapeDtypeStruct(s.shape, s.dtype) for s in specs])
 with m:
     compiled = jax.jit(solver._step_impl, static_argnums=(1,),
                        in_shardings=(shardings,)).lower(args, 1e-4).compile()
-cost = compiled.cost_analysis()
+from repro.compat import cost_analysis_dict
+cost = cost_analysis_dict(compiled)
 mem = compiled.memory_analysis()
 hlo = compiled.as_text()
 col = parse_collectives(hlo)
@@ -64,7 +65,7 @@ print(json.dumps({
     "collective_bytes": col["total_bytes"],
     "collective_count": col["total_count"],
     "solve_bands_bytes_per_device": bands_bytes,
-    "solve_rows_sharded": bool(shard_rows and not full_rows),
+    "solve_rows_sharded": bool(shard_rows),
 }))
 """
 

@@ -47,7 +47,8 @@ if don is not None: jk["donate_argnums"] = don
 if osh is not None: jk["out_shardings"] = osh
 with mesh:
     comp = jax.jit(fn, **jk).lower(*args).compile()
-cost = comp.cost_analysis()
+from repro.compat import cost_analysis_dict
+cost = cost_analysis_dict(comp)
 mem = comp.memory_analysis()
 col = parse_collectives(comp.as_text())
 fr = analytical_flops(cfg, shape)

@@ -13,7 +13,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (cfd_dryrun, cfd_modes, fig4_lsp_vs_alpha,
-                            fig5_host_time, fig6_phi_ratio,
+                            fig5_host_time, fig6_phi_ratio, fig7_full_mesh,
                             fig7_strong_scaling, fig8_speedup,
                             fig9_gpu_aware, hillclimb, kernels_bench,
                             roofline)
@@ -23,6 +23,7 @@ def main() -> None:
         "fig5": fig5_host_time.run,
         "fig6": fig6_phi_ratio.run,
         "fig7": fig7_strong_scaling.run,
+        "fig7fm": fig7_full_mesh.run,
         "fig8": fig8_speedup.run,
         "fig9": fig9_gpu_aware.run,
         "kernels": kernels_bench.run,
@@ -31,7 +32,7 @@ def main() -> None:
         "cfd_modes": cfd_modes.run,
         "hillclimb": hillclimb.run,
     }
-    heavy = {"cfd_dryrun", "cfd_modes", "hillclimb"}
+    heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm"}
     picked = sys.argv[1:] or [k for k in suites if k not in heavy]
     print("name,us_per_call,derived")
     failures = []

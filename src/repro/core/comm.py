@@ -15,14 +15,18 @@ statement is about **sharding**:
 
 ``solve_sharding``/``assembly_sharding`` encode the convention; the
 beyond-paper "full-mesh solve" mode (DESIGN.md §3) simply swaps the solver
-spec to shard rows over both axes.
+spec to shard rows over both axes.  :func:`solve_constraint` pins a
+solve-phase tensor to the convention between the update and the solve —
+the point where GSPMD would otherwise be free to re-replicate the freshly
+updated bands before the Krylov loop consumes them.
 """
 from __future__ import annotations
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["make_cfd_mesh", "assembly_sharding", "solve_sharding"]
+__all__ = ["make_cfd_mesh", "assembly_sharding", "solve_sharding",
+           "solve_constraint"]
 
 SOLVE_AXIS = "solve"
 ASSEMBLE_AXIS = "assemble"
@@ -54,13 +58,30 @@ def assembly_sharding(mesh: Mesh, extra_dims: int = 1) -> NamedSharding:
 
 def solve_sharding(mesh: Mesh, extra_dims: int = 1,
                    full_mesh: bool = False) -> NamedSharding:
-    """Coarse-partition arrays (n_coarse, ...).
+    """Coarse-partition arrays (n_coarse, ..., m_coarse).
 
     paper-faithful (default): rows on 'solve', replicated over 'assemble'
     (= C_a active, C_i idle).  ``full_mesh=True`` is the beyond-paper mode:
-    fused rows additionally sharded over 'assemble' (second trailing dim).
+    the trailing fused-row dim additionally sharded over 'assemble' — the
+    layout :func:`repro.sparse.shardmap_spmv.make_spmv_full_mesh` consumes
+    (bands ``(n_c, nb, m_c)`` and vectors ``(n_c, m_c)`` alike).
     """
     if full_mesh and extra_dims >= 1:
-        return NamedSharding(mesh, P(SOLVE_AXIS, ASSEMBLE_AXIS,
-                                     *(None,) * (extra_dims - 1)))
+        return NamedSharding(mesh, P(SOLVE_AXIS, *(None,) * (extra_dims - 1),
+                                     ASSEMBLE_AXIS))
     return NamedSharding(mesh, P(SOLVE_AXIS, *(None,) * extra_dims))
+
+
+def solve_constraint(mesh: Mesh | None, x: jax.Array, *,
+                     full_mesh: bool = False) -> jax.Array:
+    """Constrain a solve-phase tensor to the solve layout (no-op off-mesh).
+
+    Applied between the coefficient *update* (which produces fused bands in
+    the assembly layout) and the *solve* (which iterates on them): without
+    the constraint XLA may materialize the solver operands replicated,
+    silently reverting full-mesh mode to the stacked layout.
+    """
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, solve_sharding(mesh, extra_dims=x.ndim - 1, full_mesh=full_mesh))

@@ -138,22 +138,35 @@ class PlanCache:
         return key in self._entries
 
     # -- plan lookup ------------------------------------------------------
-    def plan_for_mesh(self, mesh, alpha: int, target: str = "dia"
-                      ) -> RepartitionPlan:
+    @staticmethod
+    def _key(fingerprint: str, alpha: int, target: str, mode: str):
+        """Cache key.  ``mode`` is the SPMD solve layout ("stacked" |
+        "full_mesh"): a separate key *component*, never folded into the
+        target string — ``target`` also dispatches the DIA-vs-ELL source
+        arrays in :class:`UpdaterPool` and must stay a clean target name.
+        The stacked key keeps its historical 3-tuple shape."""
+        if mode == "stacked":
+            return (fingerprint, alpha, target)
+        return (fingerprint, alpha, target, mode)
+
+    def plan_for_mesh(self, mesh, alpha: int, target: str = "dia",
+                      mode: str = "stacked") -> RepartitionPlan:
         return self.get(mesh_fingerprint(mesh), alpha, target,
-                        lambda: plan_for_mesh(mesh, alpha))
+                        lambda: plan_for_mesh(mesh, alpha), mode=mode)
 
     def plan_for_layout(self, layout, alpha: int, *, nx=None, plane=None,
-                        target: str = "dia") -> RepartitionPlan:
+                        target: str = "dia",
+                        mode: str = "stacked") -> RepartitionPlan:
         from repro.core.repartition import build_plan
 
         return self.get(layout_fingerprint(layout), alpha, target,
-                        lambda: build_plan(layout, alpha, nx=nx, plane=plane))
+                        lambda: build_plan(layout, alpha, nx=nx, plane=plane),
+                        mode=mode)
 
     def get(self, fingerprint: str, alpha: int, target: str,
-            builder) -> RepartitionPlan:
+            builder, mode: str = "stacked") -> RepartitionPlan:
         """Return the cached plan for the key, building via ``builder`` on miss."""
-        key = (fingerprint, alpha, target)
+        key = self._key(fingerprint, alpha, target, mode)
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
@@ -169,9 +182,9 @@ class PlanCache:
 
     # -- compiled-update reuse -------------------------------------------
     def updater(self, fingerprint: str, alpha: int, target: str = "dia",
-                schedule: str = "device_direct"):
+                schedule: str = "device_direct", mode: str = "stacked"):
         """Plan-bound ``buffers -> values`` callable (memoized per entry)."""
-        key = (fingerprint, alpha, target)
+        key = self._key(fingerprint, alpha, target, mode)
         entry = self._entries.get(key)
         if entry is None:
             raise KeyError(
@@ -234,7 +247,8 @@ class RepartitionController:
                  alpha0: int | None = None,
                  config: ControllerConfig = ControllerConfig(),
                  cache: PlanCache | None = None,
-                 fixed_fine: bool = False):
+                 fixed_fine: bool = False,
+                 solve_mode: str = "stacked"):
         """``fixed_fine`` selects the partition parametrization:
 
         * ``False`` (paper §2): the solve side is pinned to ``n_gpu``
@@ -242,11 +256,20 @@ class RepartitionController:
         * ``True`` (the SPMD reproduction): the fine part count ``n_cpu``
           is the chip count and alpha *fuses*, ``n_ls = n_cpu / alpha`` —
           fewer, denser solve parts (paper fig. 4's DOFs/device knee).
+
+        ``solve_mode`` ("stacked" or "full_mesh") selects the SPMD solve
+        layout this controller governs; it becomes part of the plan-cache
+        key so stacked and full-mesh sessions never alias each other's
+        cached artifacts (the compiled full-mesh steppers are additionally
+        memoized per mode inside ``PisoSolver``).
         """
+        if solve_mode not in ("stacked", "full_mesh"):
+            raise ValueError(f"unknown solve_mode {solve_mode!r}")
         self.base_model = model
         self.n_cpu = n_cpu
         self.n_gpu = n_gpu
         self.fixed_fine = fixed_fine
+        self.solve_mode = solve_mode
         self.config = config
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.cache = PlanCache() if cache is None else cache
@@ -344,13 +367,22 @@ class RepartitionController:
 
     # -- plan access ------------------------------------------------------
     def plan(self, mesh, target: str = "dia") -> RepartitionPlan:
-        """The current alpha's plan for ``mesh``, through the cache."""
-        return self.cache.plan_for_mesh(mesh, self.alpha, target)
+        """The current alpha's plan for ``mesh``, through the cache.
+
+        The solve mode is a separate cache-key component, so a full-mesh
+        session's plans and the updaters hung off them stay disjoint from a
+        stacked session's on the same mesh; the symbolic plan contents are
+        mode-independent, so the only cost is one extra build per
+        (mesh, alpha) on first full-mesh use.
+        """
+        return self.cache.plan_for_mesh(mesh, self.alpha, target,
+                                        mode=self.solve_mode)
 
     def stats(self) -> dict:
         a, s, c = self.calibration.scales
         return {
             "alpha": self.alpha,
+            "solve_mode": self.solve_mode,
             "steps": self.step_count,
             "switches": [dataclasses.asdict(e) for e in self.switches],
             "scales": {"assembly": a, "solve": s, "comm": c},

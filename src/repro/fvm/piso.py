@@ -66,11 +66,18 @@ class PisoSolver:
     update_schedule: str = "device_direct"  # or "host_buffer" (paper fig. 9)
     dtype: jnp.dtype = jnp.float64
     # SPMD solve-phase layout (paper-faithful vs beyond-paper, DESIGN.md §3):
-    # paper-faithful replicates solver rows over the assemble axis (C_i
-    # "inactive"); full_mesh_solve=True row-shards the fused system over the
-    # assemble axis too — every chip works during the solve.
+    # solve_mode="stacked" (paper-faithful) replicates solver rows over the
+    # assemble axis (C_i "inactive"); solve_mode="full_mesh" row-shards the
+    # fused system over the assemble axis too — every chip works during the
+    # solve (the paper's oversubscription fix, SPMD-rendered).  When
+    # full_mesh is requested without an explicit spmd_mesh, the
+    # (solve, assemble) mesh is built from the visible devices via
+    # core/comm.make_cfd_mesh and rebuilt on every rebind_alpha (the mesh
+    # shape (n_coarse, alpha) follows alpha; the device count n_parts
+    # does not).
+    solve_mode: str = "stacked"
     spmd_mesh: object | None = None
-    full_mesh_solve: bool = False
+    full_mesh_solve: bool = False  # legacy alias for solve_mode="full_mesh"
     # optional shared PlanCache (repro.core.controller) — plans and compiled
     # steppers are then reused when alpha is rebound to a previously seen value
     plan_cache: object | None = None
@@ -78,6 +85,14 @@ class PisoSolver:
     def __post_init__(self):
         if self.mesh.n_parts % self.alpha != 0:
             raise ValueError("alpha must divide the number of fine parts")
+        if self.full_mesh_solve and self.solve_mode == "stacked":
+            self.solve_mode = "full_mesh"
+        if self.solve_mode not in ("stacked", "full_mesh"):
+            raise ValueError(f"unknown solve_mode {self.solve_mode!r}")
+        self.full_mesh_solve = self.solve_mode == "full_mesh"
+        # an explicitly supplied mesh is honoured; otherwise full_mesh mode
+        # owns (and re-shapes) its mesh across rebind_alpha
+        self._auto_mesh = self.spmd_mesh is None
         self.asm = CavityAssembly(self.mesh, nu=self.nu,
                                   lid_speed=self.lid_speed, dtype=self.dtype)
         # identity repartition for the momentum (fine-partition) matrix
@@ -85,15 +100,20 @@ class PisoSolver:
         self._update = (update_device_direct
                         if self.update_schedule == "device_direct"
                         else update_host_buffer)
-        # compiled artifacts per alpha: revisiting an alpha (adaptive
-        # controller oscillating between neighbours) reuses trace + XLA work
-        self._step_by_alpha: dict[int, object] = {}
-        self._timed_by_alpha: dict[int, dict] = {}
+        # compiled artifacts per (alpha, solve_mode): revisiting a layout
+        # (adaptive controller oscillating between neighbours, or a mode
+        # A/B) reuses trace + XLA work
+        self._step_by_alpha: dict[tuple, object] = {}
+        self._timed_by_alpha: dict[tuple, dict] = {}
         self.rebind_alpha(self.alpha)
 
     def _plan_for(self, alpha: int) -> RepartitionPlan:
         if self.plan_cache is not None:
-            return self.plan_cache.plan_for_mesh(self.mesh, alpha)
+            # same key convention as RepartitionController.plan(): the solve
+            # mode is its own cache-key component, so stacked and full-mesh
+            # sessions sharing one PlanCache never alias cached artifacts
+            return self.plan_cache.plan_for_mesh(self.mesh, alpha, "dia",
+                                                 mode=self.solve_mode)
         return plan_for_mesh(self.mesh, alpha)
 
     def rebind_alpha(self, alpha: int) -> None:
@@ -109,10 +129,32 @@ class PisoSolver:
         self.alpha = alpha
         self.plan_p: RepartitionPlan = self._plan_for(alpha)
         self.n_coarse = self.mesh.n_parts // alpha
-        step = self._step_by_alpha.get(alpha)
+        if self.solve_mode == "full_mesh":
+            from repro.core.comm import make_cfd_mesh
+
+            if self._auto_mesh:
+                self.spmd_mesh = make_cfd_mesh(self.n_coarse, alpha)
+            elif tuple(self.spmd_mesh.devices.shape) != (self.n_coarse,
+                                                         alpha):
+                # an explicitly supplied mesh no longer fits the new alpha:
+                # reshape it over the same devices (the shard_map SpMV
+                # splits by the mesh axis sizes — a stale shape would crash
+                # or, worse, silently mis-slice)
+                self.spmd_mesh = make_cfd_mesh(
+                    self.n_coarse, alpha,
+                    devices=list(self.spmd_mesh.devices.flat))
+        key = (alpha, self.solve_mode)
+        step = self._step_by_alpha.get(key)
         if step is None:
-            step = self._step_by_alpha[alpha] = jax.jit(
-                self._step_impl, static_argnames=("dt",))
+            # wrap in a fresh function object: jax.jit keys its trace cache
+            # on the (eq-comparable) bound method, so two jax.jit(
+            # self._step_impl) wrappers alias one trace and a rebind would
+            # silently keep running the first alpha's compiled program
+            def _fresh_step(state, dt, _impl=self._step_impl):
+                return _impl(state, dt)
+
+            step = self._step_by_alpha[key] = jax.jit(
+                _fresh_step, static_argnames=("dt",))
         self._step = step
 
     # ---- helpers ------------------------------------------------------
@@ -128,16 +170,25 @@ class PisoSolver:
 
     def _solve_constraint(self, x):
         """Pin the solve-phase layout when running under an SPMD mesh."""
-        if self.spmd_mesh is None:
-            return x
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.comm import solve_constraint
 
-        if self.full_mesh_solve:
-            spec = P("solve", *([None] * (x.ndim - 2)), "assemble")
-        else:
-            spec = P("solve", *([None] * (x.ndim - 1)))
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(self.spmd_mesh, spec))
+        return solve_constraint(self.spmd_mesh, x,
+                                full_mesh=self.full_mesh_solve)
+
+    def _use_full_mesh(self, plan: RepartitionPlan) -> bool:
+        """Full-mesh SpMV applies to multi-part fused systems only: the
+        momentum (alpha=1, fine-partition) solve keeps the stacked path."""
+        return (self.solve_mode == "full_mesh" and self.spmd_mesh is not None
+                and plan.alpha > 1)
+
+    def _pressure_precond(self, diag_c):
+        """Jacobi for the pressure CG in the active solve layout."""
+        if self._use_full_mesh(self.plan_p):
+            from repro.sparse.shardmap_spmv import make_jacobi_full_mesh
+
+            return make_jacobi_full_mesh(self.spmd_mesh,
+                                         self._solve_constraint(diag_c))
+        return jacobi_preconditioner(diag_c)
 
     def _bands(self, plan: RepartitionPlan, diag, upper, lower, iface):
         """LDU buffers → repartitioned DIA bands via the update pattern."""
@@ -148,8 +199,7 @@ class PisoSolver:
 
     def _spmv(self, plan: RepartitionPlan, bands):
         offsets = tuple(int(o) for o in plan.dia_offsets)
-        if (self.full_mesh_solve and self.spmd_mesh is not None
-                and plan.alpha > 1):
+        if self._use_full_mesh(plan):
             # beyond-paper mode: explicit shard_map SpMV with linear halo
             # permutes — rows sharded over BOTH mesh axes (GSPMD alone
             # re-gathers banded shifts; see EXPERIMENTS.md §Perf C3)
@@ -204,7 +254,7 @@ class PisoSolver:
             b_c = self._solve_constraint(sysP.source.reshape(self.n_coarse, -1))
             x0_c = self._solve_constraint(p.reshape(self.n_coarse, -1))
             diag_c = sysP.diag.reshape(self.n_coarse, -1)
-            sol = cg(A_p, b_c, x0_c, M=jacobi_preconditioner(diag_c),
+            sol = cg(A_p, b_c, x0_c, M=self._pressure_precond(diag_c),
                      tol=self.p_tol, maxiter=2000)
             p = sol.x.reshape(p.shape)  # scatter back to the fine partition
             p_iters.append(sol.iters)
@@ -224,7 +274,7 @@ class PisoSolver:
     # ---- instrumented step (adaptive-controller hook) --------------------
     def _timed_fns(self) -> dict:
         """Per-phase jitted functions for the current alpha (memoized)."""
-        fns = self._timed_by_alpha.get(self.alpha)
+        fns = self._timed_by_alpha.get((self.alpha, self.solve_mode))
         if fns is not None:
             return fns
         asm, plan_m, plan_p = self.asm, self.plan_mom, self.plan_p
@@ -273,7 +323,7 @@ class PisoSolver:
             b_c = self._solve_constraint(sysP.source.reshape(n_c, -1))
             x0_c = self._solve_constraint(p.reshape(n_c, -1))
             diag_c = sysP.diag.reshape(n_c, -1)
-            sol = cg(A_p, b_c, x0_c, M=jacobi_preconditioner(diag_c),
+            sol = cg(A_p, b_c, x0_c, M=self._pressure_precond(diag_c),
                      tol=self.p_tol, maxiter=2000)
             return sol.x.reshape(p.shape), sol.iters, sol.residual
 
@@ -304,7 +354,7 @@ class PisoSolver:
                          if self.spmd_mesh is not None else (lambda x: x))
             fns["update_mom"] = lambda sysM: pooled_m(group_m(sysM))
             fns["update_p"] = lambda sysP: constrain(pooled_p(group_p(sysP)))
-        self._timed_by_alpha[self.alpha] = fns
+        self._timed_by_alpha[(self.alpha, self.solve_mode)] = fns
         return fns
 
     def timed_step(self, state: PisoState, dt: float):

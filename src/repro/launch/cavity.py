@@ -34,6 +34,13 @@ def main():
     ap.add_argument("--nu", type=float, default=0.01)
     ap.add_argument("--schedule", default="device_direct",
                     choices=["device_direct", "host_buffer"])
+    ap.add_argument("--solve-mode", default="stacked",
+                    choices=["stacked", "full_mesh"],
+                    help="SPMD solve layout: stacked replicates solver rows "
+                         "over the assemble axis (paper-faithful C_i-idle); "
+                         "full_mesh row-shards the fused system over all "
+                         "devices (needs --parts visible devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--adaptive", action="store_true",
                     help="feedback-driven alpha (overrides --alpha)")
     ap.add_argument("--hysteresis", type=float, default=0.10,
@@ -55,10 +62,13 @@ def main():
         cfg = ControllerConfig(hysteresis=args.hysteresis)
         ctl = RepartitionController(cm, n_cpu=args.parts, n_gpu=1,
                                     alpha0=alpha, config=cfg, cache=cache,
-                                    fixed_fine=True)
+                                    fixed_fine=True,
+                                    solve_mode=args.solve_mode)
         solver = PisoSolver(mesh, alpha=ctl.alpha, nu=args.nu,
-                            update_schedule=args.schedule, plan_cache=cache)
-        print(f"controller start: alpha={ctl.alpha}")
+                            update_schedule=args.schedule, plan_cache=cache,
+                            solve_mode=args.solve_mode)
+        print(f"controller start: alpha={ctl.alpha} "
+              f"solve_mode={args.solve_mode}")
         state = solver.initial_state()
         t0 = time.time()
         for step in range(args.steps):
@@ -86,7 +96,8 @@ def main():
         alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
         print(f"cost model picked alpha={alpha}")
     solver = PisoSolver(mesh, alpha=alpha, nu=args.nu,
-                        update_schedule=args.schedule)
+                        update_schedule=args.schedule,
+                        solve_mode=args.solve_mode)
     state = solver.initial_state()
     t0 = time.time()
     for step in range(args.steps):
@@ -95,7 +106,8 @@ def main():
               f"p_iters={[int(i) for i in stats.p_iters]} "
               f"continuity={float(stats.continuity_err):.2e}")
     print(f"{args.steps} steps in {time.time() - t0:.2f}s "
-          f"({mesh.n_cells_global} cells, alpha={alpha})")
+          f"({mesh.n_cells_global} cells, alpha={alpha}, "
+          f"solve_mode={args.solve_mode})")
 
 
 if __name__ == "__main__":

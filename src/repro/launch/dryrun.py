@@ -9,6 +9,8 @@ import sys           # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 
+from repro.compat import cost_analysis_dict  # noqa: E402
+
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this:
@@ -159,7 +161,7 @@ def _measure(arch, shape_name, mesh, cfg):
         jk["out_shardings"] = out_sh
     with mesh:
         compiled = jax.jit(fn, **jk).lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         col = parse_collectives(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), col)
@@ -241,7 +243,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                 if v is not None:
                     record[attr] = int(v)
 
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         print("cost_analysis:", {k: v for k, v in sorted(cost.items())
                                  if "{" not in k})
         record["flops_per_device"] = float(cost.get("flops", 0.0))

@@ -20,6 +20,14 @@ from repro.models.sharding import constrain
 def rwkv_init(key, d_model: int, head_dim: int, dtype, lora_rank: int = 64):
     ks = jax.random.split(key, 12)
     H = d_model // head_dim
+    # Per-channel ramps (the reference RWKV-6 init).  A constant w0 with a
+    # zero bonus u is degenerate: at t=0 the WKV readout is identically
+    # zero, the readout group-norm sees zero variance, and rsqrt(eps)
+    # amplifies backward gradients ~300x — a first SGD step then *increases*
+    # the loss.  The ramps break the symmetry: decay speeds span
+    # [-6, -1] across channels and the bonus starts O(1).
+    chan = jnp.arange(d_model, dtype=jnp.float32) / max(d_model - 1, 1)
+    zigzag = (jnp.arange(d_model, dtype=jnp.float32) + 1) % 3 - 1.0
     return {
         # token-shift static mixes per channel (r,k,v,g,w)
         "mu": 0.5 * jnp.ones((5, d_model), dtype),
@@ -29,10 +37,10 @@ def rwkv_init(key, d_model: int, head_dim: int, dtype, lora_rank: int = 64):
         "wg": dense_init(ks[3], (d_model, d_model), dtype),
         "wo": dense_init(ks[4], (d_model, d_model), dtype),
         # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
-        "w0": jnp.zeros((d_model,), jnp.float32) - 6.0,
+        "w0": -6.0 + 5.0 * chan ** 1.35,
         "wA": dense_init(ks[5], (d_model, lora_rank), dtype, scale=0.01),
         "wB": dense_init(ks[6], (lora_rank, d_model), dtype, scale=0.01),
-        "u": jnp.zeros((H, head_dim), jnp.float32),     # bonus
+        "u": (0.5 * (1.0 - chan) + 0.1 * zigzag).reshape(H, head_dim),  # bonus
         "ln_g": jnp.ones((d_model,), dtype),            # readout groupnorm
     }
 
@@ -86,11 +94,13 @@ def rwkv_apply(p, x: jax.Array, state=None):
           w.swapaxes(0, 1))
     S_last, ys = chunked_scan(step, S0, xs)
     y = ys.swapaxes(0, 1).reshape(B, S, d)
-    # group-norm per head, then gate
+    # group-norm per head, then gate; eps scales with the head dim (the
+    # reference uses 64e-5 at hd=64) so near-zero-variance heads early in
+    # the sequence cannot blow up the backward pass via rsqrt
     y = y.reshape(B, S, H, hd)
     mean = y.mean(-1, keepdims=True)
     var = y.var(-1, keepdims=True)
-    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
+    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5 * hd)).reshape(B, S, d)
     y = (y.astype(dtype) * p["ln_g"]) * jax.nn.silu(g)
     out = jnp.einsum("bsd,dk->bsk", y, p["wo"])
     return out, {"S": S_last, "last": x[:, -1, :]}

@@ -107,10 +107,14 @@ class SimulationEngine:
     def open_session(self, sid: str, mesh, *, dt: float,
                      alpha0: int | None = None, nu: float = 0.01,
                      model: CostModel | None = None,
-                     adaptive: bool = True) -> SimulationSession:
+                     adaptive: bool = True,
+                     solve_mode: str = "stacked") -> SimulationSession:
         """Admit a simulation; its controller starts from the cost model's
         static pick (``alpha0=None``) exactly like the non-adaptive launcher,
-        then departs from it as measurements arrive."""
+        then departs from it as measurements arrive.  ``solve_mode``
+        ("stacked" | "full_mesh") picks the SPMD solve layout per tenant —
+        a full-mesh session needs ``mesh.n_parts`` visible devices and keys
+        its cached plans/steppers separately from stacked sessions."""
         from repro.fvm.piso import PisoSolver
 
         if sid in self.sessions:
@@ -120,9 +124,11 @@ class SimulationEngine:
         # n_cpu = mesh.n_parts, i.e. to plans realizable on the mesh
         controller = RepartitionController(
             model, n_cpu=mesh.n_parts, n_gpu=1, alpha0=alpha0,
-            config=self.config, cache=self.plan_cache, fixed_fine=True)
+            config=self.config, cache=self.plan_cache, fixed_fine=True,
+            solve_mode=solve_mode)
         solver = PisoSolver(mesh, alpha=controller.alpha, nu=nu,
-                            plan_cache=self.plan_cache)
+                            plan_cache=self.plan_cache,
+                            solve_mode=solve_mode)
         sess = SimulationSession(sid=sid, solver=solver,
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
@@ -155,6 +161,7 @@ class SimulationEngine:
         return {
             "sessions": {
                 sid: {"steps": s.steps_done, "alpha": s.controller.alpha,
+                      "solve_mode": s.controller.solve_mode,
                       "switches": len(s.controller.switches)}
                 for sid, s in self.sessions.items()
             },

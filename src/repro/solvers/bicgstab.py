@@ -23,10 +23,26 @@ def _vdot(a, b):
     return jnp.vdot(a, b, precision=jax.lax.Precision.HIGHEST)
 
 
+def _safe_div(num, den):
+    """num/den with 0 where den == 0 (breakdown guard, NaN-free in grad)."""
+    ok = den != 0
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
+
+
 def bicgstab(A: Callable[[jax.Array], jax.Array], b: jax.Array, x0: jax.Array,
              *, M: Callable[[jax.Array], jax.Array] | None = None,
              tol: float = 1e-8, atol: float = 0.0,
              maxiter: int = 1000) -> BiCGStabResult:
+    """Solve ``A x = b`` with preconditioned BiCGStab.
+
+    Breakdown-guarded: when ``rho = <rhat, r>`` or ``<rhat, v>`` vanishes
+    (Lanczos breakdown — e.g. an exact solve after one step, or ``b = 0``)
+    the iteration terminates cleanly with the current iterate instead of
+    dividing by zero inside ``lax.while_loop`` and poisoning the state with
+    NaN.  ``<t, t> = 0`` means the stabilization residual is already exact;
+    ``omega`` is then forced to 0, which reduces the update to the plain
+    BiCG half-step (also NaN-free).
+    """
     if M is None:
         M = lambda r: r
 
@@ -37,27 +53,34 @@ def bicgstab(A: Callable[[jax.Array], jax.Array], b: jax.Array, x0: jax.Array,
     rhat = r0  # shadow residual
 
     def cond(state):
-        x, r, p, v, rho, alpha, omega, k = state
-        return (jnp.sqrt(_vdot(r, r)) > threshold) & (k < maxiter)
+        x, r, p, v, rho, alpha, omega, k, brk = state
+        return (jnp.sqrt(_vdot(r, r)) > threshold) & (k < maxiter) & ~brk
 
     def body(state):
-        x, r, p, v, rho, alpha, omega, k = state
+        x, r, p, v, rho, alpha, omega, k, brk = state
         rho_new = _vdot(rhat, r)
-        beta = (rho_new / rho) * (alpha / omega)
-        p = r + beta * (p - omega * v)
-        phat = M(p)
-        v = A(phat)
-        alpha = rho_new / _vdot(rhat, v)
-        s = r - alpha * v
+        beta = _safe_div(rho_new * alpha, rho * omega)
+        p_new = r + beta * (p - omega * v)
+        phat = M(p_new)
+        v_new = A(phat)
+        rv = _vdot(rhat, v_new)
+        alpha_new = _safe_div(rho_new, rv)
+        s = r - alpha_new * v_new
         shat = M(s)
         t = A(shat)
-        omega = _vdot(t, s) / _vdot(t, t)
-        x = x + alpha * phat + omega * shat
-        r = s - omega * t
-        return (x, r, p, v, rho_new, alpha, omega, k + 1)
+        omega_new = _safe_div(_vdot(t, s), _vdot(t, t))
+        x_new = x + alpha_new * phat + omega_new * shat
+        r_new = s - omega_new * t
+        # rho or <rhat, v> hitting zero is a true breakdown: the step above
+        # is no longer a Krylov update — keep the previous iterate and stop
+        brk_new = (rho_new == 0) | (rv == 0)
+        keep = lambda old, new: jnp.where(brk_new, old, new)
+        return (keep(x, x_new), keep(r, r_new), keep(p, p_new),
+                keep(v, v_new), keep(rho, rho_new), keep(alpha, alpha_new),
+                keep(omega, omega_new), k + 1, brk_new)
 
     one = jnp.ones((), b.dtype)
     init = (x0, r0, jnp.zeros_like(b), jnp.zeros_like(b), one, one, one,
-            jnp.array(0, jnp.int32))
-    x, r, *_, k = jax.lax.while_loop(cond, body, init)
+            jnp.array(0, jnp.int32), jnp.array(False))
+    x, r, *_, k, _ = jax.lax.while_loop(cond, body, init)
     return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(_vdot(r, r)))

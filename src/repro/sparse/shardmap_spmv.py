@@ -8,9 +8,16 @@ each device holds an ``m_loc``-row slice and exchanges one halo plane with
 its linear neighbours via ``collective_permute`` — including across solve-
 group boundaries (the fine-linearized order (solve, assemble) makes the
 neighbour of the last shard in group k the first shard of group k+1).
+The first/last shard mask their outer halo to zero, which matches the
+zero interface coefficients of the boundary coarse parts exactly.
 
 Requires m_loc >= plane (one halo plane per side), i.e. each device holds
 at least one z-plane of the fused block — true for all production configs.
+
+:func:`make_jacobi_full_mesh` is the matching preconditioner apply: r/diag
+is elementwise, but routing it through the same shard_map keeps the CG
+iterates pinned to the (solve, assemble) row layout between SpMVs — GSPMD
+would otherwise be free to re-replicate the residual between the two.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.comm import ASSEMBLE_AXIS, SOLVE_AXIS
 
 
@@ -37,7 +45,7 @@ def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
     bwd = [(i + 1, i) for i in range(n_shards - 1)]   # send down-halo back
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(SOLVE_AXIS, None, ASSEMBLE_AXIS),
                   P(SOLVE_AXIS, ASSEMBLE_AXIS)),
         out_specs=P(SOLVE_AXIS, ASSEMBLE_AXIS), check_vma=False)
@@ -47,6 +55,8 @@ def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
         down = jax.lax.ppermute(xv[-plane:], axes, fwd)
         up = jax.lax.ppermute(xv[:plane], axes, bwd)
         lid = jax.lax.axis_index(axes)
+        # boundary coarse parts: the outer halo has no neighbour — mask it
+        # to zero (the interface coefficients there are zero, so exact)
         down = jnp.where(lid == 0, 0.0, down)
         up = jnp.where(lid == n_shards - 1, 0.0, up)
         xp = jnp.concatenate([down, xv, up])  # (m_loc + 2*plane,)
@@ -57,3 +67,23 @@ def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
         return y[None, :]
 
     return spmv
+
+
+def make_jacobi_full_mesh(mesh: Mesh, diag: jax.Array):
+    """Jacobi apply M(r) = r / diag on the full-mesh row layout.
+
+    ``diag``: (n_c, m_c) global fused matrix diagonal.  The division is
+    purely local per shard (no halo), but running it inside shard_map pins
+    the preconditioned residual to P(solve, assemble) so the surrounding
+    Krylov iteration never leaves the full-mesh layout.
+    """
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(SOLVE_AXIS, ASSEMBLE_AXIS),
+                  P(SOLVE_AXIS, ASSEMBLE_AXIS)),
+        out_specs=P(SOLVE_AXIS, ASSEMBLE_AXIS), check_vma=False)
+    def apply(d_loc, r_loc):
+        return r_loc / d_loc
+
+    return lambda r: apply(diag, r)

@@ -117,6 +117,115 @@ def test_kv_cache_repartition_resharding_identity():
     assert "COLLECTIVES" in out
 
 
+def test_full_mesh_spmv_matches_stacked():
+    """The shard_map full-mesh DIA SpMV (rows over BOTH mesh axes, halo via
+    collective_permute) must agree with the stacked reference on identical
+    bands/x to ~machine precision, for several alpha values."""
+    out = run_forced("""
+        import numpy as np, jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.comm import make_cfd_mesh, solve_sharding
+        from repro.core.repartition import plan_for_mesh
+        from repro.fvm.mesh import CavityMesh
+        from repro.sparse.distributed import spmv_dia
+        from repro.sparse.shardmap_spmv import (make_jacobi_full_mesh,
+                                                make_spmv_full_mesh)
+
+        mesh_cfd = CavityMesh.cube(8, 8)
+        rng = np.random.default_rng(0)
+        for alpha in (2, 4):
+            n_c = mesh_cfd.n_parts // alpha
+            plan = plan_for_mesh(mesh_cfd, alpha)
+            offsets = tuple(int(o) for o in plan.dia_offsets)
+            bands = jnp.asarray(
+                rng.standard_normal((n_c, len(offsets), plan.m_coarse)))
+            x = jnp.asarray(rng.standard_normal((n_c, plan.m_coarse)))
+            y_ref = spmv_dia(bands, x, offsets=offsets, plane=plan.plane)
+
+            m = make_cfd_mesh(n_coarse=n_c, alpha=alpha)
+            fm = make_spmv_full_mesh(m, offsets=offsets, plane=plan.plane,
+                                     n_coarse=n_c, alpha=alpha,
+                                     m_coarse=plan.m_coarse)
+            bands_sh = jax.device_put(
+                bands, solve_sharding(m, extra_dims=2, full_mesh=True))
+            x_sh = jax.device_put(
+                x, solve_sharding(m, extra_dims=1, full_mesh=True))
+            err = float(jnp.abs(jax.jit(fm)(bands_sh, x_sh) - y_ref).max())
+            assert err <= 1e-10, (alpha, err)
+
+            diag = jnp.asarray(
+                1.0 + np.abs(rng.standard_normal((n_c, plan.m_coarse))))
+            Mj = make_jacobi_full_mesh(m, diag)
+            errj = float(jnp.abs(Mj(x_sh) - x / diag).max())
+            assert errj <= 1e-10, (alpha, errj)
+            print("ALPHA", alpha, "ERR", err, "JACERR", errj)
+    """)
+    assert "ERR" in out
+
+
+def test_full_mesh_piso_step_matches_stacked():
+    """PisoSolver(solve_mode='full_mesh') builds its (solve, assemble) mesh
+    from the forced devices and must reproduce the stacked path to solver
+    tolerance (identical physics, all devices active in the solve)."""
+    out = run_forced("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+        from repro.fvm.mesh import CavityMesh
+        from repro.fvm.piso import PisoSolver
+
+        mesh_cfd = CavityMesh.cube(8, 8)
+        ref = PisoSolver(mesh_cfd, alpha=4)
+        st_ref, stats_ref = ref.run(2, 2e-4)
+
+        fm = PisoSolver(mesh_cfd, alpha=4, solve_mode="full_mesh")
+        assert dict(zip(fm.spmd_mesh.axis_names, fm.spmd_mesh.devices.shape)) \\
+            == {"solve": 2, "assemble": 4}, fm.spmd_mesh
+        st_fm, stats_fm = fm.run(2, 2e-4)
+        errU = float(jnp.abs(st_fm.U - st_ref.U).max())
+        errp = float(jnp.abs(st_fm.p - st_ref.p).max())
+        assert errU <= 1e-10 and errp <= 1e-10, (errU, errp)
+        assert [int(i) for i in stats_fm.p_iters] == \\
+            [int(i) for i in stats_ref.p_iters]
+
+        # rebinding alpha reshapes the auto-built mesh and keeps running
+        fm.rebind_alpha(2)
+        assert dict(zip(fm.spmd_mesh.axis_names, fm.spmd_mesh.devices.shape)) \\
+            == {"solve": 4, "assemble": 2}
+        st2, _ = fm.run(1, 2e-4, st_fm)
+        assert bool(jnp.isfinite(st2.U).all())
+        print("FM_MAXDIFF", errU, errp)
+    """)
+    assert "FM_MAXDIFF" in out
+
+
+def test_bicgstab_breakdown_guard_under_forced_devices():
+    """Regression for the BiCGStab zero-division breakdowns (b = 0 and an
+    exact first half-step) — NaN-free also when jitted on the forced mesh."""
+    out = run_forced("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.solvers.bicgstab import bicgstab
+
+        b0 = jnp.zeros((1, 8))
+        res = jax.jit(lambda b, x0: bicgstab(lambda v: v, b, x0,
+                                             tol=1e-12, maxiter=50))(
+            b0, jnp.ones((1, 8)))
+        assert np.isfinite(np.asarray(res.x)).all()
+        assert float(res.residual) == 0.0
+
+        rng = np.random.default_rng(1)
+        b = jnp.asarray(rng.standard_normal((1, 16)), jnp.float32)
+        res = bicgstab(lambda v: v, b, jnp.zeros_like(b), tol=1e-10,
+                       maxiter=50)
+        assert np.isfinite(np.asarray(res.x)).all()
+        assert int(res.iters) == 1
+        print("BREAKDOWN_OK")
+    """)
+    assert "BREAKDOWN_OK" in out
+
+
 def test_pipeline_forward_matches_unpipelined():
     out = run_forced("""
         import jax, numpy as np, jax.numpy as jnp

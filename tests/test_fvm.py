@@ -120,3 +120,30 @@ def test_host_buffer_schedule_identical_solution():
     st2, _ = s2.run(n_steps=2, dt=2e-4)
     np.testing.assert_allclose(np.asarray(st1.U), np.asarray(st2.U),
                                atol=1e-12)
+
+
+def test_rebind_alpha_retraces_the_stepper():
+    """Regression: jax.jit keys its trace cache on the (eq-comparable)
+    bound method, so two jit(self._step_impl) wrappers alias ONE trace —
+    rebind_alpha would silently keep executing the first alpha's compiled
+    program.  The fresh-closure stepper must retrace per (alpha, mode) and
+    still reuse the memoized stepper when an alpha is revisited."""
+
+    class CountingSolver(PisoSolver):
+        traces = 0
+
+        def _step_impl(self, state, dt):
+            type(self).traces += 1
+            return super()._step_impl(state, dt)
+
+    mesh = CavityMesh.cube(4, 4)
+    s = CountingSolver(mesh, alpha=4)
+    st = s.initial_state()
+    s.step(st, 1e-4)
+    assert CountingSolver.traces == 1
+    s.rebind_alpha(2)
+    s.step(st, 1e-4)
+    assert CountingSolver.traces == 2  # was 1: stale alpha-4 executable
+    s.rebind_alpha(4)
+    s.step(st, 1e-4)
+    assert CountingSolver.traces == 2  # revisited alpha reuses its stepper

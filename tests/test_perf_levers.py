@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.compat import cost_analysis_dict
 from repro.configs.registry import get_smoke_config
 from repro.models import lm
 from repro.models.attention import AttnSpec, flash_attention
@@ -99,7 +100,7 @@ def test_moe_sorted_cuts_flops():
 
     def flops(fn):
         c = jax.jit(fn).lower(x).compile()
-        return c.cost_analysis().get("flops", 0.0)
+        return cost_analysis_dict(c).get("flops", 0.0)
 
     f_dense = flops(lambda t: moe_apply(p, t, top_k=k, act="silu"))
     f_sorted = flops(lambda t: moe_apply_sorted(p, t, top_k=k, act="silu"))

@@ -118,3 +118,42 @@ def test_bicgstab_solves_nonsymmetric_system():
                    tol=1e-12, maxiter=500)
     np.testing.assert_allclose(np.asarray(res.x).reshape(-1), x_true,
                                rtol=0, atol=1e-6)
+
+
+# ---- BiCGStab breakdown guards (regression: NaN inside lax.while_loop) ----
+
+def test_bicgstab_b_zero_terminates_cleanly():
+    """b = 0 makes the threshold 0; the exact-solve iterate must not NaN."""
+    b = jnp.zeros((1, 8))
+    x0 = jnp.ones((1, 8))
+    res = bicgstab(lambda v: v, b, x0, tol=1e-12, maxiter=50)
+    assert np.isfinite(np.asarray(res.x)).all()
+    assert float(res.residual) == 0.0
+    assert int(res.iters) <= 2
+
+
+def test_bicgstab_exact_solve_in_one_step():
+    """With A = I the first half-step is exact: s = t = 0 hits the
+    <t, t> = 0 division — the guard must finish with the exact answer."""
+    rng = np.random.default_rng(7)
+    b = jnp.asarray(rng.standard_normal((1, 16)))
+    res = bicgstab(lambda v: v, b, jnp.zeros_like(b), tol=1e-12, maxiter=50)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(b), rtol=1e-14)
+    assert int(res.iters) == 1
+    assert np.isfinite(float(res.residual))
+
+
+def test_bicgstab_orthogonal_breakdown_keeps_iterate_finite():
+    """Rotation operator: <rhat, A p> = 0 in the first iteration (serious
+    Lanczos breakdown).  Pre-guard this divided by zero and returned NaN;
+    now the loop must stop with the last finite iterate."""
+    R = jnp.asarray([[0.0, 1.0], [-1.0, 0.0]])
+
+    def A(v):
+        return v @ R.T
+
+    b = jnp.asarray([[1.0, 0.0]])
+    res = bicgstab(A, b, jnp.zeros_like(b), tol=1e-12, maxiter=50)
+    assert np.isfinite(np.asarray(res.x)).all()
+    assert np.isfinite(float(res.residual))
+    assert int(res.iters) < 50  # terminated by the breakdown flag, not maxiter
