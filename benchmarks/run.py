@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
 
-  PYTHONPATH=src python -m benchmarks.run              # everything
-  PYTHONPATH=src python -m benchmarks.run fig4 fig9    # a subset
+  PYTHONPATH=src python -m benchmarks.run                   # everything
+  PYTHONPATH=src python -m benchmarks.run fig4 fig9         # a subset
+  PYTHONPATH=src python -m benchmarks.run --only fig4,fig9  # same, flag form
+
+``--only`` and the positional names both accept comma-separated lists and
+compose; unknown names fail fast with the available set.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -15,7 +20,8 @@ def main() -> None:
     from benchmarks import (cfd_dryrun, cfd_modes, fig4_lsp_vs_alpha,
                             fig5_host_time, fig6_phi_ratio, fig7_full_mesh,
                             fig7_strong_scaling, fig8_speedup,
-                            fig9_gpu_aware, hillclimb, kernels_bench,
+                            fig9_gpu_aware, fig10_adaptive,
+                            fig11_fused_krylov, hillclimb, kernels_bench,
                             roofline)
 
     suites = {
@@ -26,14 +32,33 @@ def main() -> None:
         "fig7fm": fig7_full_mesh.run,
         "fig8": fig8_speedup.run,
         "fig9": fig9_gpu_aware.run,
+        "fig10": fig10_adaptive.main,
+        "fig11": fig11_fused_krylov.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "cfd_dryrun": cfd_dryrun.run,
         "cfd_modes": cfd_modes.run,
         "hillclimb": hillclimb.run,
     }
-    heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm"}
-    picked = sys.argv[1:] or [k for k in suites if k not in heavy]
+    heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm", "fig10",
+             "fig11"}
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*",
+                    help="figure names (comma-separated lists accepted)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure names to run")
+    args = ap.parse_args()
+
+    picked: list[str] = []
+    for token in args.names + ([args.only] if args.only else []):
+        picked.extend(name for name in token.split(",") if name)
+    unknown = [name for name in picked if name not in suites]
+    if unknown:
+        sys.exit(f"unknown figure(s) {unknown}; available: "
+                 f"{', '.join(sorted(suites))}")
+    picked = picked or [k for k in suites if k not in heavy]
+
     print("name,us_per_call,derived")
     failures = []
     for name in picked:

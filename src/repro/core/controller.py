@@ -139,34 +139,44 @@ class PlanCache:
 
     # -- plan lookup ------------------------------------------------------
     @staticmethod
-    def _key(fingerprint: str, alpha: int, target: str, mode: str):
+    def _key(fingerprint: str, alpha: int, target: str, mode: str,
+             backend: str = "auto"):
         """Cache key.  ``mode`` is the SPMD solve layout ("stacked" |
-        "full_mesh"): a separate key *component*, never folded into the
-        target string — ``target`` also dispatches the DIA-vs-ELL source
-        arrays in :class:`UpdaterPool` and must stay a clean target name.
-        The stacked key keeps its historical 3-tuple shape."""
-        if mode == "stacked":
-            return (fingerprint, alpha, target)
-        return (fingerprint, alpha, target, mode)
+        "full_mesh") and ``backend`` the Krylov per-iteration backend
+        ("auto" | "fused" | "reference", :mod:`repro.solvers.ops`): both
+        are separate key *components*, never folded into the target
+        string — ``target`` also dispatches the DIA-vs-ELL source arrays
+        in :class:`UpdaterPool` and must stay a clean target name.  The
+        stacked/auto key keeps its historical 3-tuple shape; the two
+        optional components cannot collide (disjoint value sets)."""
+        key = (fingerprint, alpha, target)
+        if mode != "stacked":
+            key += (mode,)
+        if backend != "auto":
+            key += (backend,)
+        return key
 
     def plan_for_mesh(self, mesh, alpha: int, target: str = "dia",
-                      mode: str = "stacked") -> RepartitionPlan:
+                      mode: str = "stacked",
+                      backend: str = "auto") -> RepartitionPlan:
         return self.get(mesh_fingerprint(mesh), alpha, target,
-                        lambda: plan_for_mesh(mesh, alpha), mode=mode)
+                        lambda: plan_for_mesh(mesh, alpha), mode=mode,
+                        backend=backend)
 
     def plan_for_layout(self, layout, alpha: int, *, nx=None, plane=None,
-                        target: str = "dia",
-                        mode: str = "stacked") -> RepartitionPlan:
+                        target: str = "dia", mode: str = "stacked",
+                        backend: str = "auto") -> RepartitionPlan:
         from repro.core.repartition import build_plan
 
         return self.get(layout_fingerprint(layout), alpha, target,
                         lambda: build_plan(layout, alpha, nx=nx, plane=plane),
-                        mode=mode)
+                        mode=mode, backend=backend)
 
     def get(self, fingerprint: str, alpha: int, target: str,
-            builder, mode: str = "stacked") -> RepartitionPlan:
+            builder, mode: str = "stacked",
+            backend: str = "auto") -> RepartitionPlan:
         """Return the cached plan for the key, building via ``builder`` on miss."""
-        key = self._key(fingerprint, alpha, target, mode)
+        key = self._key(fingerprint, alpha, target, mode, backend)
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
@@ -182,9 +192,10 @@ class PlanCache:
 
     # -- compiled-update reuse -------------------------------------------
     def updater(self, fingerprint: str, alpha: int, target: str = "dia",
-                schedule: str = "device_direct", mode: str = "stacked"):
+                schedule: str = "device_direct", mode: str = "stacked",
+                backend: str = "auto"):
         """Plan-bound ``buffers -> values`` callable (memoized per entry)."""
-        key = self._key(fingerprint, alpha, target, mode)
+        key = self._key(fingerprint, alpha, target, mode, backend)
         entry = self._entries.get(key)
         if entry is None:
             raise KeyError(
@@ -248,7 +259,8 @@ class RepartitionController:
                  config: ControllerConfig = ControllerConfig(),
                  cache: PlanCache | None = None,
                  fixed_fine: bool = False,
-                 solve_mode: str = "stacked"):
+                 solve_mode: str = "stacked",
+                 solver_backend: str = "auto"):
         """``fixed_fine`` selects the partition parametrization:
 
         * ``False`` (paper §2): the solve side is pinned to ``n_gpu``
@@ -258,18 +270,36 @@ class RepartitionController:
           fewer, denser solve parts (paper fig. 4's DOFs/device knee).
 
         ``solve_mode`` ("stacked" or "full_mesh") selects the SPMD solve
-        layout this controller governs; it becomes part of the plan-cache
-        key so stacked and full-mesh sessions never alias each other's
-        cached artifacts (the compiled full-mesh steppers are additionally
-        memoized per mode inside ``PisoSolver``).
+        layout this controller governs and ``solver_backend``
+        ("auto" | "fused" | "reference", :mod:`repro.solvers.ops`) the
+        Krylov per-iteration backend; both become part of the plan-cache
+        key so sessions with different layouts/backends never alias each
+        other's cached artifacts (the compiled steppers are additionally
+        memoized per (alpha, mode, backend) inside ``PisoSolver``).  A
+        explicit ``"fused"`` request also flips the cost model's
+        fused-iteration bytes/iter term (:meth:`CostModel.with_fused_solver`)
+        so the *initial* alpha pick sees the fused path's higher arithmetic
+        intensity.  ``"auto"`` deliberately leaves a caller-supplied model
+        untouched: which backend auto resolves to is alpha-dependent (the
+        part size changes with alpha), and the online calibration absorbs
+        the constant-factor bytes difference within the warmup window —
+        launch surfaces that want the static prior right resolve auto
+        against their part size themselves (``repro.launch.cavity``).
         """
         if solve_mode not in ("stacked", "full_mesh"):
             raise ValueError(f"unknown solve_mode {solve_mode!r}")
+        from repro.solvers.ops import BACKENDS
+
+        if solver_backend not in BACKENDS:
+            raise ValueError(f"unknown solver_backend {solver_backend!r}")
+        if solver_backend == "fused" and not model.fused_solver:
+            model = model.with_fused_solver(True)
         self.base_model = model
         self.n_cpu = n_cpu
         self.n_gpu = n_gpu
         self.fixed_fine = fixed_fine
         self.solve_mode = solve_mode
+        self.solver_backend = solver_backend
         self.config = config
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.cache = PlanCache() if cache is None else cache
@@ -369,20 +399,23 @@ class RepartitionController:
     def plan(self, mesh, target: str = "dia") -> RepartitionPlan:
         """The current alpha's plan for ``mesh``, through the cache.
 
-        The solve mode is a separate cache-key component, so a full-mesh
-        session's plans and the updaters hung off them stay disjoint from a
-        stacked session's on the same mesh; the symbolic plan contents are
-        mode-independent, so the only cost is one extra build per
-        (mesh, alpha) on first full-mesh use.
+        The solve mode and solver backend are separate cache-key
+        components, so a full-mesh or fused session's plans and the
+        updaters hung off them stay disjoint from a stacked/reference
+        session's on the same mesh; the symbolic plan contents are
+        mode- and backend-independent, so the only cost is one extra
+        build per (mesh, alpha) on first use of a new combination.
         """
         return self.cache.plan_for_mesh(mesh, self.alpha, target,
-                                        mode=self.solve_mode)
+                                        mode=self.solve_mode,
+                                        backend=self.solver_backend)
 
     def stats(self) -> dict:
         a, s, c = self.calibration.scales
         return {
             "alpha": self.alpha,
             "solve_mode": self.solve_mode,
+            "solver_backend": self.solver_backend,
             "steps": self.step_count,
             "switches": [dataclasses.asdict(e) for e in self.switches],
             "scales": {"assembly": a, "solve": s, "comm": c},

@@ -33,6 +33,8 @@ from repro.fvm.mesh import CavityMesh
 from repro.solvers.bicgstab import bicgstab
 from repro.solvers.cg import cg
 from repro.solvers.jacobi import jacobi_preconditioner
+from repro.solvers.ops import (fused_stacked_ops, reference_ops,
+                               resolve_backend)
 from repro.sparse.distributed import spmv_dia, x_pad
 
 __all__ = ["PisoSolver", "PisoState", "StepStats"]
@@ -78,6 +80,16 @@ class PisoSolver:
     solve_mode: str = "stacked"
     spmd_mesh: object | None = None
     full_mesh_solve: bool = False  # legacy alias for solve_mode="full_mesh"
+    # Krylov per-iteration backend (repro.solvers.ops): "reference" is the
+    # seed's jnp op sequence; "fused" routes each iteration through the
+    # krylov_fused Pallas pair (one-pass SpMV+p.Ap, one-pass axpy-pair+
+    # Jacobi+dots); "auto" picks per part size and platform — on TPU,
+    # fused once a part fills a kernel row block (FUSED_MIN_ROWS),
+    # reference below (dispatch overhead beats the saved HBM passes);
+    # off-TPU always reference (the kernels would run via the Pallas
+    # interpreter inside the solve loop — explicit "fused" forces that
+    # for parity tests and benchmarks)
+    solver_backend: str = "auto"
     # optional shared PlanCache (repro.core.controller) — plans and compiled
     # steppers are then reused when alpha is rebound to a previously seen value
     plan_cache: object | None = None
@@ -89,6 +101,9 @@ class PisoSolver:
             self.solve_mode = "full_mesh"
         if self.solve_mode not in ("stacked", "full_mesh"):
             raise ValueError(f"unknown solve_mode {self.solve_mode!r}")
+        if self.solver_backend not in ("auto", "fused", "reference"):
+            raise ValueError(
+                f"unknown solver_backend {self.solver_backend!r}")
         self.full_mesh_solve = self.solve_mode == "full_mesh"
         # an explicitly supplied mesh is honoured; otherwise full_mesh mode
         # owns (and re-shapes) its mesh across rebind_alpha
@@ -100,9 +115,9 @@ class PisoSolver:
         self._update = (update_device_direct
                         if self.update_schedule == "device_direct"
                         else update_host_buffer)
-        # compiled artifacts per (alpha, solve_mode): revisiting a layout
-        # (adaptive controller oscillating between neighbours, or a mode
-        # A/B) reuses trace + XLA work
+        # compiled artifacts per (alpha, solve_mode, solver_backend):
+        # revisiting a layout (adaptive controller oscillating between
+        # neighbours, or a mode/backend A/B) reuses trace + XLA work
         self._step_by_alpha: dict[tuple, object] = {}
         self._timed_by_alpha: dict[tuple, dict] = {}
         self.rebind_alpha(self.alpha)
@@ -113,7 +128,8 @@ class PisoSolver:
             # mode is its own cache-key component, so stacked and full-mesh
             # sessions sharing one PlanCache never alias cached artifacts
             return self.plan_cache.plan_for_mesh(self.mesh, alpha, "dia",
-                                                 mode=self.solve_mode)
+                                                 mode=self.solve_mode,
+                                                 backend=self.solver_backend)
         return plan_for_mesh(self.mesh, alpha)
 
     def rebind_alpha(self, alpha: int) -> None:
@@ -143,7 +159,7 @@ class PisoSolver:
                 self.spmd_mesh = make_cfd_mesh(
                     self.n_coarse, alpha,
                     devices=list(self.spmd_mesh.devices.flat))
-        key = (alpha, self.solve_mode)
+        key = (alpha, self.solve_mode, self.solver_backend)
         step = self._step_by_alpha.get(key)
         if step is None:
             # wrap in a fresh function object: jax.jit keys its trace cache
@@ -181,15 +197,6 @@ class PisoSolver:
         return (self.solve_mode == "full_mesh" and self.spmd_mesh is not None
                 and plan.alpha > 1)
 
-    def _pressure_precond(self, diag_c):
-        """Jacobi for the pressure CG in the active solve layout."""
-        if self._use_full_mesh(self.plan_p):
-            from repro.sparse.shardmap_spmv import make_jacobi_full_mesh
-
-            return make_jacobi_full_mesh(self.spmd_mesh,
-                                         self._solve_constraint(diag_c))
-        return jacobi_preconditioner(diag_c)
-
     def _bands(self, plan: RepartitionPlan, diag, upper, lower, iface):
         """LDU buffers → repartitioned DIA bands via the update pattern."""
         buffers = buffer_from_parts(diag, upper, lower, iface)  # (P_f, L)
@@ -197,24 +204,47 @@ class PisoSolver:
         grouped = buffers.reshape(n_c, plan.alpha, plan.buffer_len)
         return self._update(plan, grouped, target="dia")
 
-    def _spmv(self, plan: RepartitionPlan, bands):
+    def _solver_ops(self, plan: RepartitionPlan, bands, diag):
+        """Bind the (bands, diag) system into a SolverOps bundle.
+
+        Dispatches on layout (stacked vs full-mesh) x backend (reference
+        vs fused, resolved per part size — ``plan.m_coarse`` rows stacked,
+        ``m_coarse / alpha`` per full-mesh shard).  ``diag`` is the fused
+        system's diagonal in the stacked layout; full-mesh paths constrain
+        it to the (solve, assemble) row sharding here.
+        """
         offsets = tuple(int(o) for o in plan.dia_offsets)
         if self._use_full_mesh(plan):
             # beyond-paper mode: explicit shard_map SpMV with linear halo
             # permutes — rows sharded over BOTH mesh axes (GSPMD alone
             # re-gathers banded shifts; see EXPERIMENTS.md §Perf C3)
-            from repro.sparse.shardmap_spmv import make_spmv_full_mesh
+            from repro.sparse.shardmap_spmv import (make_fused_ops_full_mesh,
+                                                    make_jacobi_full_mesh,
+                                                    make_spmv_full_mesh)
 
-            fm = make_spmv_full_mesh(
-                self.spmd_mesh, offsets=offsets, plane=plan.plane,
-                n_coarse=self.n_coarse, alpha=plan.alpha,
-                m_coarse=plan.m_coarse)
-            return lambda x: fm(bands, x)
+            backend = resolve_backend(self.solver_backend,
+                                      plan.m_coarse // plan.alpha)
+            diag_c = self._solve_constraint(diag)
+            kw = dict(offsets=offsets, plane=plan.plane,
+                      n_coarse=self.n_coarse, alpha=plan.alpha,
+                      m_coarse=plan.m_coarse)
+            if backend == "fused":
+                return make_fused_ops_full_mesh(self.spmd_mesh, bands,
+                                                diag_c, **kw)
+            fm = make_spmv_full_mesh(self.spmd_mesh, **kw)
+            return reference_ops(
+                lambda x: fm(bands, x),
+                make_jacobi_full_mesh(self.spmd_mesh, diag_c))
+
+        backend = resolve_backend(self.solver_backend, plan.m_coarse)
+        if backend == "fused":
+            return fused_stacked_ops(bands, diag, offsets=offsets,
+                                     plane=plan.plane)
 
         def A(x):
             return spmv_dia(bands, x, offsets=offsets, plane=plan.plane)
 
-        return A
+        return reference_ops(A, jacobi_preconditioner(diag))
 
     # ---- one timestep ---------------------------------------------------
     def _step_impl(self, state: PisoState, dt: float):
@@ -225,11 +255,10 @@ class PisoSolver:
         sysM = asm.assemble_momentum(U, phi, phi_if, p, dt)
         bandsM = self._bands(self.plan_mom, sysM.diag, sysM.upper, sysM.lower,
                              sysM.iface)
-        A_mom = self._spmv(self.plan_mom, bandsM)
-        Mj = jacobi_preconditioner(sysM.diag)
+        opsM = self._solver_ops(self.plan_mom, bandsM, sysM.diag)
 
         def solve_component(b, x0):
-            return bicgstab(A_mom, b, x0, M=Mj, tol=self.mom_tol, maxiter=500)
+            return bicgstab(opsM, b, x0, tol=self.mom_tol, maxiter=500)
 
         from repro.solvers.bicgstab import BiCGStabResult
         res = jax.vmap(solve_component, in_axes=(2, 2),
@@ -249,13 +278,12 @@ class PisoSolver:
             bandsP = self._solve_constraint(
                 self._bands(self.plan_p, sysP.diag, sysP.upper,
                             sysP.lower, sysP.iface))
-            A_p = self._spmv(self.plan_p, bandsP)
             # repartition RHS / initial guess to the coarse partition
             b_c = self._solve_constraint(sysP.source.reshape(self.n_coarse, -1))
             x0_c = self._solve_constraint(p.reshape(self.n_coarse, -1))
             diag_c = sysP.diag.reshape(self.n_coarse, -1)
-            sol = cg(A_p, b_c, x0_c, M=self._pressure_precond(diag_c),
-                     tol=self.p_tol, maxiter=2000)
+            opsP = self._solver_ops(self.plan_p, bandsP, diag_c)
+            sol = cg(opsP, b_c, x0_c, tol=self.p_tol, maxiter=2000)
             p = sol.x.reshape(p.shape)  # scatter back to the fine partition
             p_iters.append(sol.iters)
             p_res = sol.residual
@@ -274,7 +302,8 @@ class PisoSolver:
     # ---- instrumented step (adaptive-controller hook) --------------------
     def _timed_fns(self) -> dict:
         """Per-phase jitted functions for the current alpha (memoized)."""
-        fns = self._timed_by_alpha.get((self.alpha, self.solve_mode))
+        key = (self.alpha, self.solve_mode, self.solver_backend)
+        fns = self._timed_by_alpha.get(key)
         if fns is not None:
             return fns
         asm, plan_m, plan_p = self.asm, self.plan_mom, self.plan_p
@@ -296,10 +325,9 @@ class PisoSolver:
         def solve_mom(bandsM, sysM, U):
             from repro.solvers.bicgstab import BiCGStabResult
 
-            A_mom = self._spmv(plan_m, bandsM)
-            Mj = jacobi_preconditioner(sysM.diag)
+            opsM = self._solver_ops(plan_m, bandsM, sysM.diag)
             res = jax.vmap(
-                lambda b, x0: bicgstab(A_mom, b, x0, M=Mj, tol=self.mom_tol,
+                lambda b, x0: bicgstab(opsM, b, x0, tol=self.mom_tol,
                                        maxiter=500),
                 in_axes=(2, 2),
                 out_axes=BiCGStabResult(x=2, iters=0, residual=0),
@@ -319,12 +347,11 @@ class PisoSolver:
                             sysP.iface))
 
         def solve_p(bandsP, sysP, p):
-            A_p = self._spmv(plan_p, bandsP)
             b_c = self._solve_constraint(sysP.source.reshape(n_c, -1))
             x0_c = self._solve_constraint(p.reshape(n_c, -1))
             diag_c = sysP.diag.reshape(n_c, -1)
-            sol = cg(A_p, b_c, x0_c, M=self._pressure_precond(diag_c),
-                     tol=self.p_tol, maxiter=2000)
+            opsP = self._solver_ops(plan_p, bandsP, diag_c)
+            sol = cg(opsP, b_c, x0_c, tol=self.p_tol, maxiter=2000)
             return sol.x.reshape(p.shape), sol.iters, sol.residual
 
         def halo_probe(p):
@@ -354,7 +381,7 @@ class PisoSolver:
                          if self.spmd_mesh is not None else (lambda x: x))
             fns["update_mom"] = lambda sysM: pooled_m(group_m(sysM))
             fns["update_p"] = lambda sysP: constrain(pooled_p(group_p(sysP)))
-        self._timed_by_alpha[(self.alpha, self.solve_mode)] = fns
+        self._timed_by_alpha[key] = fns
         return fns
 
     def timed_step(self, state: PisoState, dt: float):

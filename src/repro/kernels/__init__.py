@@ -2,6 +2,9 @@
 
 * ``spmv_dia`` — banded SpMV, the inner loop of the repartitioned CG/BiCGStab
   solves (the paper's "linear solver performance" axis, figs. 4/7/8).
+* ``krylov_fused`` — the fused CG iteration core: one-pass SpMV + ``p.Ap``
+  block partials and the axpy-pair + Jacobi + ``r.z``/``r.r`` pass
+  (consumed via the ``SolverOps`` fused backend, ``repro.solvers.ops``).
 * ``coef_update`` — the permutation P applied to the gathered coefficient
   buffer (paper fig. 3, update procedure).
 * ``stencil_assembly`` — fused on-device FVM coefficient assembly (the

@@ -1,0 +1,194 @@
+"""Fused Krylov-iteration kernels: one-pass SpMV+reduce and axpy-pair+precond.
+
+The per-iteration cost of the repartitioned pressure CG is pure HBM traffic:
+each of the seed's 6-8 separate XLA ops (SpMV, Jacobi divide, three
+``HIGHEST``-precision vdots, axpys) re-streams full vectors through HBM.
+Following the fused-solver literature the paper builds on (Oliani et al.
+arXiv:2403.07882, Tomczak et al. arXiv:1207.1571), this package collapses a
+CG iteration into **two** grid passes plus one trivial axpy:
+
+* :func:`spmv_dot_single` — ``Ap = A p`` from the DIA bands **and** the
+  block-partial reductions of ``p . Ap`` in the same pass: the bands and
+  ``p_pad`` are read from HBM exactly once; each grid step writes its
+  ``Ap`` row block and one partial-sum slot (finalized by a tiny
+  ``jnp.sum`` over the ``n_blocks`` partials outside the kernel).
+* :func:`fused_axpy_precond_single` — the axpy pair ``x += alpha p``,
+  ``r -= alpha Ap``, the Jacobi inverse ``z = r * inv_diag``, and the
+  block-partials of ``r . z`` and ``r . r`` in one pass — five vector reads
+  and three writes instead of the reference's four separate kernels.
+
+The remaining per-iteration work, ``p = z + beta p``, is a single XLA
+fusion already and stays in jnp (``repro.solvers.ops``).
+
+Both wrappers pad a ragged final row block with zeros and slice the tail
+off the outputs — zero band values and zero vector tails contribute exactly
+zero to every partial sum, so no masking is needed (same contract as
+``spmv_dia`` after the ragged-tail fix).
+
+Each ``pallas_call`` carries an explicit :class:`pl.CostEstimate` built by
+:func:`spmv_dot_cost` / :func:`fused_axpy_precond_cost`: the kernel's HBM
+contract, which is what ``Compiled.cost_analysis()`` reports for the custom
+call on the TPU lowering.  ``benchmarks/fig11_fused_krylov.py`` consumes the
+same functions off-TPU, where the interpret-mode lowering un-fuses the grid
+into HLO and multiply-counts the VMEM-resident operands (~3x inflation,
+measured) and is therefore useless as a byte meter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.spmv_dia.spmv_dia import (  # noqa: F401  (re-exported)
+    DEFAULT_BLOCK_ROWS, pick_block_rows)
+
+
+def _pad_tail(m: int, block_rows: int) -> int:
+    return (-m) % block_rows
+
+
+def spmv_dot_cost(nb: int, m: int, plane: int, itemsize: int = 8,
+                  block_rows: int = DEFAULT_BLOCK_ROWS) -> dict:
+    """HBM contract of :func:`spmv_dot_single` (bytes/flops per call)."""
+    n_blocks = -(-m // block_rows)
+    return {
+        # bands once + x_pad once (VMEM-resident across the grid) + Ap out
+        # + the n_blocks partial slots
+        "bytes_accessed": float((nb * m + (m + 2 * plane) + m + n_blocks)
+                                * itemsize),
+        "flops": float(2 * nb * m + 2 * m),
+        "transcendentals": 0.0,
+    }
+
+
+def fused_axpy_precond_cost(m: int, itemsize: int = 8,
+                            block_rows: int = DEFAULT_BLOCK_ROWS) -> dict:
+    """HBM contract of :func:`fused_axpy_precond_single`."""
+    n_blocks = -(-m // block_rows)
+    return {
+        # reads x, r, p, Ap, inv_diag; writes x', r', z, 2 * partials
+        "bytes_accessed": float((5 * m + 3 * m + 2 * n_blocks) * itemsize),
+        "flops": float(9 * m),
+        "transcendentals": 0.0,
+    }
+
+
+def _cost(d: dict) -> pl.CostEstimate:
+    return pl.CostEstimate(flops=d["flops"],
+                           bytes_accessed=d["bytes_accessed"],
+                           transcendentals=d["transcendentals"])
+
+
+# ---------------------------------------------------------------------------
+# kernel 1: SpMV + p.Ap block partials
+# ---------------------------------------------------------------------------
+
+def _spmv_dot_kernel(bands_ref, xpad_ref, y_ref, dot_ref, *,
+                     offsets: tuple[int, ...], plane: int, block_rows: int):
+    i = pl.program_id(0)
+    row0 = i * block_rows
+    acc = jnp.zeros((block_rows,), bands_ref.dtype)
+    for d, off in enumerate(offsets):
+        xw = xpad_ref[pl.dslice(row0 + plane + off, block_rows)]
+        acc = acc + bands_ref[d, :] * xw
+    y_ref[:] = acc
+    # the block's rows of p itself (offset 0 window) feed the p.Ap partial
+    pw = xpad_ref[pl.dslice(row0 + plane, block_rows)]
+    dot_ref[0] = jnp.sum(pw * acc)
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "plane",
+                                             "block_rows", "interpret"))
+def spmv_dot_single(bands: jax.Array, x_pad: jax.Array, *,
+                    offsets: tuple[int, ...], plane: int,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """``(A p, p . A p)`` for one part in one grid pass.
+
+    bands: (nb, m); x_pad: (m + 2*plane,).  Ragged ``m`` is padded with
+    zeros (zero bands => zero tail contributions to both outputs).
+    """
+    nb, m = bands.shape
+    assert x_pad.shape == (m + 2 * plane,), (x_pad.shape, m, plane)
+    pad = _pad_tail(m, block_rows)
+    if pad:
+        bands = jnp.pad(bands, ((0, 0), (0, pad)))
+        x_pad = jnp.pad(x_pad, (0, pad))
+    mp = m + pad
+    grid = (mp // block_rows,)
+    y, partials = pl.pallas_call(
+        functools.partial(_spmv_dot_kernel, offsets=offsets, plane=plane,
+                          block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, block_rows), lambda i: (0, i)),
+            pl.BlockSpec(x_pad.shape, lambda i: (0,)),  # VMEM-resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), bands.dtype),
+            jax.ShapeDtypeStruct((grid[0],), bands.dtype),
+        ],
+        cost_estimate=_cost(spmv_dot_cost(nb, m, plane, bands.dtype.itemsize,
+                                          block_rows=block_rows)),
+        interpret=interpret,
+    )(bands, x_pad)
+    return y[:m], jnp.sum(partials)
+
+
+# ---------------------------------------------------------------------------
+# kernel 2: axpy pair + Jacobi inverse + (r.z, r.r) block partials
+# ---------------------------------------------------------------------------
+
+def _axpy_precond_kernel(x_ref, r_ref, p_ref, ap_ref, inv_ref, alpha_ref,
+                         xo_ref, ro_ref, zo_ref, rz_ref, rr_ref):
+    a = alpha_ref[0]
+    xn = x_ref[:] + a * p_ref[:]
+    rn = r_ref[:] - a * ap_ref[:]
+    z = rn * inv_ref[:]
+    xo_ref[:] = xn
+    ro_ref[:] = rn
+    zo_ref[:] = z
+    rz_ref[0] = jnp.sum(rn * z)
+    rr_ref[0] = jnp.sum(rn * rn)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_axpy_precond_single(x: jax.Array, r: jax.Array, p: jax.Array,
+                              Ap: jax.Array, inv_diag: jax.Array,
+                              alpha: jax.Array, *,
+                              block_rows: int = DEFAULT_BLOCK_ROWS,
+                              interpret: bool = False):
+    """``(x', r', z, r'.z, r'.r')`` for one part in one grid pass.
+
+    ``x' = x + alpha p``, ``r' = r - alpha Ap``, ``z = r' * inv_diag``.
+    All inputs (m,); ``alpha`` a scalar.  Ragged ``m`` padded with zeros
+    (zero tails contribute zero to both partials).
+    """
+    (m,) = x.shape
+    pad = _pad_tail(m, block_rows)
+    vecs = (x, r, p, Ap, inv_diag)
+    if pad:
+        vecs = tuple(jnp.pad(v, (0, pad)) for v in vecs)
+    mp = m + pad
+    grid = (mp // block_rows,)
+    blk = pl.BlockSpec((block_rows,), lambda i: (i,))
+    part = pl.BlockSpec((1,), lambda i: (i,))
+    xn, rn, z, rz, rr = pl.pallas_call(
+        _axpy_precond_kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, blk,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[blk, blk, blk, part, part],
+        out_shape=[jax.ShapeDtypeStruct((mp,), x.dtype)] * 3 + [
+            jax.ShapeDtypeStruct((grid[0],), x.dtype)] * 2,
+        cost_estimate=_cost(fused_axpy_precond_cost(m, x.dtype.itemsize,
+                                                    block_rows=block_rows)),
+        interpret=interpret,
+    )(*vecs, jnp.reshape(alpha, (1,)).astype(x.dtype))
+    return xn[:m], rn[:m], z[:m], jnp.sum(rz), jnp.sum(rr)

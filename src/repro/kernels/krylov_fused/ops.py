@@ -1,0 +1,60 @@
+"""Public stacked-part wrappers for the fused Krylov-iteration kernels.
+
+Mirrors the ``spmv_dia`` wrapper conventions: stacked ``(P, ...)`` arrays,
+the halo'd ``x_pad`` built through :func:`repro.sparse.distributed.x_pad`
+(its static part-axis shifts lower to collective-permute under pjit), vmap
+over parts, interpret-mode fallback off-TPU.  The per-part block partials
+are finalized into **global** scalars with a final ``jnp.sum`` over parts,
+which lowers to the same all-reduce the reference ``jnp.vdot`` emits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.krylov_fused.krylov_fused import (
+    fused_axpy_precond_single, pick_block_rows, spmv_dot_single)
+# one VMEM-budget constant and one backend probe for the x_pad-resident
+# kernel families — the layout contract is shared with spmv_dia
+from repro.kernels.spmv_dia.ops import VMEM_F32_BUDGET, _on_tpu
+from repro.sparse.distributed import x_pad as make_x_pad
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "plane",
+                                             "block_rows"))
+def fused_matvec_dot(bands: jax.Array, x: jax.Array, *,
+                     offsets: tuple[int, ...], plane: int,
+                     block_rows: int = 0) -> tuple[jax.Array, jax.Array]:
+    """``(A x, x . A x)`` over stacked parts: bands (P, nb, m), x (P, m).
+
+    One HBM pass over the bands and the halo'd vector per call;
+    ``block_rows=0`` picks the block size from the part size.
+    """
+    P, nb, m = bands.shape
+    assert m + 2 * plane <= VMEM_F32_BUDGET, "x_pad exceeds the VMEM budget"
+    br = block_rows or pick_block_rows(m)
+    xp = make_x_pad(x, plane)
+    fn = functools.partial(spmv_dot_single, offsets=offsets, plane=plane,
+                           block_rows=br, interpret=not _on_tpu())
+    y, part = jax.vmap(fn)(bands, xp)
+    return y, jnp.sum(part)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fused_update_step(x: jax.Array, r: jax.Array, p: jax.Array,
+                      Ap: jax.Array, inv_diag: jax.Array, alpha: jax.Array,
+                      *, block_rows: int = 0):
+    """Fused axpy pair + Jacobi inverse + global ``(r'.z, r'.r')`` dots.
+
+    All vectors stacked (P, m); ``alpha`` a global scalar.  Returns
+    ``(x', r', z, rz, rr)`` with the dots reduced over all parts.
+    """
+    P, m = x.shape
+    br = block_rows or pick_block_rows(m)
+    fn = functools.partial(fused_axpy_precond_single, block_rows=br,
+                           interpret=not _on_tpu())
+    xn, rn, z, rz, rr = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, None))(
+        x, r, p, Ap, inv_diag, alpha)
+    return xn, rn, z, jnp.sum(rz), jnp.sum(rr)

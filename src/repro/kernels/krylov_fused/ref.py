@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the fused Krylov-iteration kernels.
+
+Identical signatures and semantics to ``krylov_fused.py``; the dot products
+are exact-order block-free reductions (``jnp.vdot`` at ``HIGHEST``
+precision), which the kernels' block-partial sums must match to f64
+round-off — enforced by ``tests/test_krylov_fused.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _vdot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.vdot(a, b, precision=jax.lax.Precision.HIGHEST)
+
+
+def spmv_dot_ref(bands: jax.Array, x_pad: jax.Array, *,
+                 offsets: tuple[int, ...], plane: int):
+    """``(A p, p . A p)`` for one part."""
+    nb, m = bands.shape
+    y = jnp.zeros((m,), bands.dtype)
+    for d, off in enumerate(offsets):
+        y = y + bands[d] * jax.lax.dynamic_slice_in_dim(x_pad, plane + off, m)
+    p = jax.lax.dynamic_slice_in_dim(x_pad, plane, m)
+    return y, _vdot(p, y)
+
+
+def fused_axpy_precond_ref(x: jax.Array, r: jax.Array, p: jax.Array,
+                           Ap: jax.Array, inv_diag: jax.Array,
+                           alpha: jax.Array):
+    """``(x', r', z, r'.z, r'.r')`` for one part."""
+    xn = x + alpha * p
+    rn = r - alpha * Ap
+    z = rn * inv_diag
+    return xn, rn, z, _vdot(rn, z), _vdot(rn, rn)

@@ -8,8 +8,9 @@ TPU adaptation of the paper's GPU row-major COO SpMV: the fused FVM matrix is
 Layout & tiling contract (``spmv_dia.py``):
 
 * ``bands``: ``(n_bands, m)`` per part; the grid walks row blocks of
-  ``block_rows`` (default 2048, must divide ``m`` — ``ops.py`` pads rows to a
-  block multiple and unpads the result).
+  ``block_rows`` (default 2048; a ragged final block — any odd mesh x alpha
+  combination — is zero-padded inside ``spmv_dia_single`` and sliced off,
+  and ``pick_block_rows`` shrinks the block for sub-block parts).
 * ``x_pad``: ``(m + 2*plane,)`` resident in VMEM for the whole grid
   (``ops.py`` asserts the fp32 budget, ``VMEM_F32_BUDGET``); band tiles
   stream through VMEM and double-buffer via the Pallas pipeline.

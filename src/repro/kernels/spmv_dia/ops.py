@@ -8,7 +8,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.spmv_dia.spmv_dia import spmv_dia_single, DEFAULT_BLOCK_ROWS
 from repro.sparse.distributed import x_pad as make_x_pad
@@ -26,18 +25,14 @@ def spmv_dia_pallas(bands: jax.Array, x: jax.Array, *,
                     block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
     """Stacked SpMV: bands (P, nb, m), x (P, m) → y (P, m).
 
-    Pads rows to a block multiple, builds the halo'd x_pad (the shifts across
-    the part axis lower to collective-permute under pjit), then vmaps the
-    single-part Pallas kernel over parts.
+    Builds the halo'd x_pad (the shifts across the part axis lower to
+    collective-permute under pjit), then vmaps the single-part Pallas
+    kernel over parts.  Ragged row counts are handled inside
+    ``spmv_dia_single`` (zero-padded tail block, sliced off).
     """
     P, nb, m = bands.shape
     assert m + 2 * plane <= VMEM_F32_BUDGET, "x_pad exceeds the VMEM budget"
     xp = make_x_pad(x, plane)  # (P, m + 2*plane)
-    pad = (-m) % block_rows
-    if pad:
-        bands = jnp.pad(bands, ((0, 0), (0, 0), (0, pad)))
-        xp = jnp.pad(xp, ((0, 0), (0, pad)))
     fn = functools.partial(spmv_dia_single, offsets=offsets, plane=plane,
                            block_rows=block_rows, interpret=not _on_tpu())
-    y = jax.vmap(fn)(bands, xp)
-    return y[:, :m]
+    return jax.vmap(fn)(bands, xp)

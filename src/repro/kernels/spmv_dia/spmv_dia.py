@@ -22,6 +22,16 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_ROWS = 2048
 
 
+def pick_block_rows(m: int, cap: int = DEFAULT_BLOCK_ROWS) -> int:
+    """Row-block size for an ``m``-row part: ``cap`` when the part fills at
+    least one default block, else ``m`` rounded up to the 128-lane width so
+    small parts (full-mesh shards, tests) run a single-block grid instead
+    of padding to 2048 rows."""
+    if m >= cap:
+        return cap
+    return max(128, -(-m // 128) * 128)
+
+
 def _kernel(bands_ref, xpad_ref, y_ref, *, offsets: tuple[int, ...],
             plane: int, block_rows: int):
     i = pl.program_id(0)
@@ -42,11 +52,23 @@ def spmv_dia_single(bands: jax.Array, x_pad: jax.Array, *,
                     offsets: tuple[int, ...], plane: int,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
                     interpret: bool = False) -> jax.Array:
-    """y = A @ x for one part.  bands: (nb, m); x_pad: (m + 2*plane,)."""
+    """y = A @ x for one part.  bands: (nb, m); x_pad: (m + 2*plane,).
+
+    A ragged final row block (``m % block_rows != 0`` — any odd mesh x
+    alpha combination) is zero-padded and sliced off the result: the pad
+    rows carry zero band values, so they contribute nothing, and valid
+    rows never read the pad region (row ``i < m`` reaches at most
+    ``x_pad[m - 1 + 2*plane]``, the last real element).
+    """
     nb, m = bands.shape
-    assert m % block_rows == 0, (m, block_rows)
-    grid = (m // block_rows,)
-    return pl.pallas_call(
+    assert x_pad.shape == (m + 2 * plane,), (x_pad.shape, m, plane)
+    pad = (-m) % block_rows
+    if pad:
+        bands = jnp.pad(bands, ((0, 0), (0, pad)))
+        x_pad = jnp.pad(x_pad, (0, pad))
+    mp = m + pad
+    grid = (mp // block_rows,)
+    y = pl.pallas_call(
         functools.partial(_kernel, offsets=offsets, plane=plane,
                           block_rows=block_rows),
         grid=grid,
@@ -55,6 +77,7 @@ def spmv_dia_single(bands: jax.Array, x_pad: jax.Array, *,
             pl.BlockSpec(x_pad.shape, lambda i: (0,)),  # whole vector in VMEM
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((m,), bands.dtype),
+        out_shape=jax.ShapeDtypeStruct((mp,), bands.dtype),
         interpret=interpret,
     )(bands, x_pad)
+    return y[:m] if pad else y

@@ -41,6 +41,13 @@ def main():
                          "full_mesh row-shards the fused system over all "
                          "devices (needs --parts visible devices, e.g. "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--solver-backend", default="auto",
+                    choices=["auto", "fused", "reference"],
+                    help="Krylov per-iteration backend (repro.solvers.ops): "
+                         "fused = one-pass SpMV+dot and axpy-pair+Jacobi+"
+                         "dots Pallas kernels; reference = the plain jnp op "
+                         "sequence; auto picks fused once a part fills a "
+                         "kernel row block")
     ap.add_argument("--adaptive", action="store_true",
                     help="feedback-driven alpha (overrides --alpha)")
     ap.add_argument("--hysteresis", type=float, default=0.10,
@@ -48,7 +55,17 @@ def main():
     args = ap.parse_args()
 
     jax.config.update("jax_enable_x64", True)
-    cm = CostModel(TPU_V5E, n_dofs=args.n ** 3)
+    # resolve "auto" at the fine part size — the smallest solve part any
+    # alpha produces, so the cost model's fused bytes/iter prior flips
+    # only when every candidate alpha runs the fused kernels (larger
+    # alphas fuse parts of alpha * this size and may go fused earlier;
+    # same conservative convention as RepartitionController)
+    from repro.solvers.ops import resolve_backend
+
+    eff_backend = resolve_backend(args.solver_backend,
+                                  args.n ** 3 // args.parts)
+    cm = CostModel(TPU_V5E, n_dofs=args.n ** 3,
+                   fused_solver=eff_backend == "fused")
     alpha = args.alpha
     if alpha == 0 or args.adaptive:
         alpha = None  # let the controller/cost model pick
@@ -63,12 +80,15 @@ def main():
         ctl = RepartitionController(cm, n_cpu=args.parts, n_gpu=1,
                                     alpha0=alpha, config=cfg, cache=cache,
                                     fixed_fine=True,
-                                    solve_mode=args.solve_mode)
+                                    solve_mode=args.solve_mode,
+                                    solver_backend=args.solver_backend)
         solver = PisoSolver(mesh, alpha=ctl.alpha, nu=args.nu,
                             update_schedule=args.schedule, plan_cache=cache,
-                            solve_mode=args.solve_mode)
+                            solve_mode=args.solve_mode,
+                            solver_backend=args.solver_backend)
         print(f"controller start: alpha={ctl.alpha} "
-              f"solve_mode={args.solve_mode}")
+              f"solve_mode={args.solve_mode} "
+              f"solver_backend={args.solver_backend}")
         state = solver.initial_state()
         t0 = time.time()
         for step in range(args.steps):
@@ -97,7 +117,8 @@ def main():
         print(f"cost model picked alpha={alpha}")
     solver = PisoSolver(mesh, alpha=alpha, nu=args.nu,
                         update_schedule=args.schedule,
-                        solve_mode=args.solve_mode)
+                        solve_mode=args.solve_mode,
+                        solver_backend=args.solver_backend)
     state = solver.initial_state()
     t0 = time.time()
     for step in range(args.steps):
@@ -107,7 +128,8 @@ def main():
               f"continuity={float(stats.continuity_err):.2e}")
     print(f"{args.steps} steps in {time.time() - t0:.2f}s "
           f"({mesh.n_cells_global} cells, alpha={alpha}, "
-          f"solve_mode={args.solve_mode})")
+          f"solve_mode={args.solve_mode}, "
+          f"solver_backend={args.solver_backend})")
 
 
 if __name__ == "__main__":

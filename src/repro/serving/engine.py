@@ -108,13 +108,18 @@ class SimulationEngine:
                      alpha0: int | None = None, nu: float = 0.01,
                      model: CostModel | None = None,
                      adaptive: bool = True,
-                     solve_mode: str = "stacked") -> SimulationSession:
+                     solve_mode: str = "stacked",
+                     solver_backend: str = "auto") -> SimulationSession:
         """Admit a simulation; its controller starts from the cost model's
         static pick (``alpha0=None``) exactly like the non-adaptive launcher,
         then departs from it as measurements arrive.  ``solve_mode``
         ("stacked" | "full_mesh") picks the SPMD solve layout per tenant —
         a full-mesh session needs ``mesh.n_parts`` visible devices and keys
-        its cached plans/steppers separately from stacked sessions."""
+        its cached plans/steppers separately from stacked sessions.
+        ``solver_backend`` ("auto" | "fused" | "reference") picks the
+        per-tenant Krylov iteration backend (:mod:`repro.solvers.ops`);
+        a fused session models the fused bytes/iter term and keys its
+        cached artifacts separately too."""
         from repro.fvm.piso import PisoSolver
 
         if sid in self.sessions:
@@ -125,10 +130,11 @@ class SimulationEngine:
         controller = RepartitionController(
             model, n_cpu=mesh.n_parts, n_gpu=1, alpha0=alpha0,
             config=self.config, cache=self.plan_cache, fixed_fine=True,
-            solve_mode=solve_mode)
+            solve_mode=solve_mode, solver_backend=solver_backend)
         solver = PisoSolver(mesh, alpha=controller.alpha, nu=nu,
                             plan_cache=self.plan_cache,
-                            solve_mode=solve_mode)
+                            solve_mode=solve_mode,
+                            solver_backend=solver_backend)
         sess = SimulationSession(sid=sid, solver=solver,
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
@@ -162,6 +168,7 @@ class SimulationEngine:
             "sessions": {
                 sid: {"steps": s.steps_done, "alpha": s.controller.alpha,
                       "solve_mode": s.controller.solve_mode,
+                      "solver_backend": s.controller.solver_backend,
                       "switches": len(s.controller.switches)}
                 for sid, s in self.sessions.items()
             },

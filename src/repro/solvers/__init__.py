@@ -1,3 +1,9 @@
-"""Distributed Krylov solvers (CG / BiCGStab) with Jacobi preconditioning."""
+"""Distributed Krylov solvers (CG / BiCGStab) with Jacobi preconditioning.
+
+The solver bodies run over a pluggable :class:`~repro.solvers.ops.SolverOps`
+backend (reference-jnp or fused-Pallas; see ``repro.solvers.ops``).
+"""
 from repro.solvers.cg import cg  # noqa: F401
 from repro.solvers.bicgstab import bicgstab  # noqa: F401
+from repro.solvers.ops import (  # noqa: F401
+    SolverOps, fused_stacked_ops, reference_ops, resolve_backend)

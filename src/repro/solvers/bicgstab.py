@@ -1,7 +1,10 @@
 """BiCGStab for the (non-symmetric) momentum systems — OpenFOAM's choice.
 
-Same conventions as :mod:`repro.solvers.cg`: stacked part arrays, global
-vdots, ``lax.while_loop``.
+Same conventions as :mod:`repro.solvers.cg`: the body runs over a
+:class:`repro.solvers.ops.SolverOps` backend (or wraps legacy ``A``/``M``
+closures into the reference one), global dots, ``lax.while_loop``, and the
+squared residual norm carried in the loop state so ``cond`` adds no extra
+all-reduce per iteration.
 """
 from __future__ import annotations
 
@@ -9,6 +12,8 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.solvers.ops import SolverOps, reference_ops
 
 __all__ = ["bicgstab", "BiCGStabResult"]
 
@@ -19,18 +24,15 @@ class BiCGStabResult(NamedTuple):
     residual: jax.Array
 
 
-def _vdot(a, b):
-    return jnp.vdot(a, b, precision=jax.lax.Precision.HIGHEST)
-
-
 def _safe_div(num, den):
     """num/den with 0 where den == 0 (breakdown guard, NaN-free in grad)."""
     ok = den != 0
     return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
 
 
-def bicgstab(A: Callable[[jax.Array], jax.Array], b: jax.Array, x0: jax.Array,
-             *, M: Callable[[jax.Array], jax.Array] | None = None,
+def bicgstab(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
+             x0: jax.Array, *,
+             M: Callable[[jax.Array], jax.Array] | None = None,
              tol: float = 1e-8, atol: float = 0.0,
              maxiter: int = 1000) -> BiCGStabResult:
     """Solve ``A x = b`` with preconditioned BiCGStab.
@@ -43,44 +45,50 @@ def bicgstab(A: Callable[[jax.Array], jax.Array], b: jax.Array, x0: jax.Array,
     ``omega`` is then forced to 0, which reduces the update to the plain
     BiCG half-step (also NaN-free).
     """
-    if M is None:
-        M = lambda r: r
+    if isinstance(A, SolverOps):
+        assert M is None, "pass the preconditioner inside SolverOps"
+        ops = A
+    else:
+        ops = reference_ops(A, M)
 
-    b_norm = jnp.sqrt(_vdot(b, b))
-    threshold = jnp.maximum(tol * b_norm, atol)
+    (bb,) = ops.dots((b, b))
+    threshold_sq = jnp.maximum(tol * jnp.sqrt(bb), atol) ** 2
 
-    r0 = b - A(x0)
+    r0 = b - ops.matvec(x0)
     rhat = r0  # shadow residual
+    (rr0,) = ops.dots((r0, r0))
 
     def cond(state):
-        x, r, p, v, rho, alpha, omega, k, brk = state
-        return (jnp.sqrt(_vdot(r, r)) > threshold) & (k < maxiter) & ~brk
+        x, r, p, v, rho, alpha, omega, rr, k, brk = state
+        return (rr > threshold_sq) & (k < maxiter) & ~brk
 
     def body(state):
-        x, r, p, v, rho, alpha, omega, k, brk = state
-        rho_new = _vdot(rhat, r)
+        x, r, p, v, rho, alpha, omega, rr, k, brk = state
+        (rho_new,) = ops.dots((rhat, r))
         beta = _safe_div(rho_new * alpha, rho * omega)
         p_new = r + beta * (p - omega * v)
-        phat = M(p_new)
-        v_new = A(phat)
-        rv = _vdot(rhat, v_new)
+        phat = ops.precond(p_new)
+        v_new = ops.matvec(phat)
+        (rv,) = ops.dots((rhat, v_new))
         alpha_new = _safe_div(rho_new, rv)
         s = r - alpha_new * v_new
-        shat = M(s)
-        t = A(shat)
-        omega_new = _safe_div(_vdot(t, s), _vdot(t, t))
+        shat = ops.precond(s)
+        t = ops.matvec(shat)
+        ts, tt = ops.dots((t, s), (t, t))
+        omega_new = _safe_div(ts, tt)
         x_new = x + alpha_new * phat + omega_new * shat
         r_new = s - omega_new * t
+        (rr_new,) = ops.dots((r_new, r_new))
         # rho or <rhat, v> hitting zero is a true breakdown: the step above
         # is no longer a Krylov update — keep the previous iterate and stop
         brk_new = (rho_new == 0) | (rv == 0)
         keep = lambda old, new: jnp.where(brk_new, old, new)
         return (keep(x, x_new), keep(r, r_new), keep(p, p_new),
                 keep(v, v_new), keep(rho, rho_new), keep(alpha, alpha_new),
-                keep(omega, omega_new), k + 1, brk_new)
+                keep(omega, omega_new), keep(rr, rr_new), k + 1, brk_new)
 
     one = jnp.ones((), b.dtype)
     init = (x0, r0, jnp.zeros_like(b), jnp.zeros_like(b), one, one, one,
-            jnp.array(0, jnp.int32), jnp.array(False))
-    x, r, *_, k, _ = jax.lax.while_loop(cond, body, init)
-    return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(_vdot(r, r)))
+            rr0, jnp.array(0, jnp.int32), jnp.array(False))
+    x, r, *_, rr, k, _ = jax.lax.while_loop(cond, body, init)
+    return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(rr))

@@ -1,0 +1,152 @@
+"""Pluggable per-iteration operation backends for the Krylov solvers.
+
+One solver body (``cg``/``bicgstab``) runs over a :class:`SolverOps`
+bundle, so the stacked, single-device and full-mesh layouts — and the
+reference-jnp vs fused-Pallas implementations — all share the same control
+flow and the same convergence decisions:
+
+* ``matvec(x)``            — ``A x`` (operator apply, halo exchange inside)
+* ``precond(r)``           — ``M^-1 r`` (Jacobi here)
+* ``matvec_dot(p)``        — ``(A p, p . A p)``; fused backends compute the
+  dot's block partials in the same HBM pass as the SpMV
+* ``fused_step(x, r, p, Ap, alpha)`` — ``(x', r', z, r'.z, r'.r')``: the
+  axpy pair, the preconditioner apply and both reductions of the second
+  half of a CG iteration
+* ``dots(*pairs)``         — a tuple of global vdots (initial residual,
+  BiCGStab's rho/rv/ts/tt)
+
+Backends:
+
+* :func:`reference_ops` — plain jnp over any ``A``/``M`` closures; the op
+  sequence is exactly the seed solver's, so numerics are unchanged.
+* :func:`fused_stacked_ops` — the ``kernels/krylov_fused`` Pallas pair on
+  stacked DIA bands (interpret mode off-TPU).
+* the full-mesh fused backend lives in
+  ``repro.sparse.shardmap_spmv.make_fused_ops_full_mesh`` (shard_map +
+  per-shard kernels + psum'd partials).
+
+Selection is **per part size and platform** (:func:`resolve_backend`): the
+fused kernels pay off once a part fills at least one ``block_rows`` grid
+step; below that (tiny test meshes, deeply fused full-mesh shards) the
+reference path wins on dispatch overhead, so ``"auto"`` keeps it.  Off-TPU
+``"auto"`` always keeps the reference path — the kernels would execute
+through the Pallas *interpreter* inside the jitted ``while_loop`` (a
+Python-level emulation, ~50x wall overhead on host devices) — while an
+explicit ``"fused"`` request still forces them (parity tests, benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SolverOps", "reference_ops", "fused_stacked_ops", "resolve_backend",
+    "FUSED_MIN_ROWS", "BACKENDS",
+]
+
+BACKENDS = ("auto", "fused", "reference")
+
+# the fused kernels start paying off once a part fills one default row
+# block (below this the grid is a single padded step and per-call overhead
+# dominates); "auto" switches backends at this part size
+FUSED_MIN_ROWS = 2048
+
+
+def _vdot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.vdot(a, b, precision=jax.lax.Precision.HIGHEST)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOps:
+    """The per-iteration operation bundle consumed by ``cg``/``bicgstab``."""
+
+    matvec: Callable
+    precond: Callable
+    matvec_dot: Callable
+    fused_step: Callable
+    dots: Callable
+    backend: str = "reference"   # informational (logs, benchmarks)
+
+
+def resolve_backend(requested: str, m: int,
+                    on_tpu: bool | None = None) -> str:
+    """Concrete backend for a part of ``m`` rows (see module doc).
+
+    ``on_tpu`` overrides the platform probe (tests); ``None`` asks JAX.
+    """
+    if requested not in BACKENDS:
+        raise ValueError(f"unknown solver backend {requested!r}")
+    if requested != "auto":
+        return requested
+    if on_tpu is None:
+        on_tpu = jax.default_backend() == "tpu"
+    if not on_tpu:
+        return "reference"
+    return "fused" if m >= FUSED_MIN_ROWS else "reference"
+
+
+def _reference_dots(*pairs):
+    return tuple(_vdot(a, b) for a, b in pairs)
+
+
+def reference_ops(A: Callable, M: Callable | None = None) -> SolverOps:
+    """Plain-jnp backend over operator closures (any layout).
+
+    The ``fused_step``/``matvec_dot`` members run the seed solver's exact
+    op sequence, so a refactored solver body on this backend is
+    numerically identical to the pre-``SolverOps`` implementation.
+    """
+    M = M if M is not None else (lambda r: r)
+
+    def matvec_dot(p):
+        Ap = A(p)
+        return Ap, _vdot(p, Ap)
+
+    def fused_step(x, r, p, Ap, alpha):
+        xn = x + alpha * p
+        rn = r - alpha * Ap
+        z = M(rn)
+        return xn, rn, z, _vdot(rn, z), _vdot(rn, rn)
+
+    return SolverOps(matvec=A, precond=M, matvec_dot=matvec_dot,
+                     fused_step=fused_step, dots=_reference_dots,
+                     backend="reference")
+
+
+def fused_stacked_ops(bands: jax.Array, diag: jax.Array, *,
+                      offsets: tuple[int, ...], plane: int,
+                      block_rows: int = 0) -> SolverOps:
+    """Fused-Pallas backend on stacked DIA bands ``(P, nb, m)``.
+
+    ``diag`` is the stacked matrix diagonal (P, m); the Jacobi inverse is
+    precomputed once and folded into the fused update kernel.
+    """
+    from repro.kernels.krylov_fused.ops import (fused_matvec_dot,
+                                                fused_update_step)
+    from repro.kernels.spmv_dia.ops import spmv_dia_pallas
+    from repro.kernels.spmv_dia.spmv_dia import pick_block_rows
+
+    inv = 1.0 / diag
+    block_rows = block_rows or pick_block_rows(bands.shape[-1])
+
+    def matvec(x):
+        return spmv_dia_pallas(bands, x, offsets=offsets, plane=plane,
+                               block_rows=block_rows)
+
+    def precond(r):
+        return r * inv
+
+    def matvec_dot(p):
+        return fused_matvec_dot(bands, p, offsets=offsets, plane=plane,
+                                block_rows=block_rows)
+
+    def fused_step(x, r, p, Ap, alpha):
+        return fused_update_step(x, r, p, Ap, inv, alpha,
+                                 block_rows=block_rows)
+
+    return SolverOps(matvec=matvec, precond=precond, matvec_dot=matvec_dot,
+                     fused_step=fused_step, dots=_reference_dots,
+                     backend="fused")

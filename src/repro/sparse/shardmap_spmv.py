@@ -11,6 +11,25 @@ neighbour of the last shard in group k the first shard of group k+1).
 The first/last shard mask their outer halo to zero, which matches the
 zero interface coefficients of the boundary coarse parts exactly.
 
+**Communication/computation overlap.**  The per-shard apply is split so
+the halo ``ppermute``s are issued *first*, the interior contribution —
+every row against the locally held vector, which needs no halo — is
+computed while the permutes are in flight, and only the boundary-plane
+band contributions (first/last ``plane`` rows against the received halo
+planes) are added afterwards.  Nothing between the permute and the
+boundary add depends on the permuted values, so the XLA scheduler is free
+to run the collective concurrently with the interior SpMV — the classic
+halo-overlap schedule of GPU-resident PISO solvers (Oliani et al.
+arXiv:2403.07882, Tomczak et al. arXiv:1207.1571).
+
+**Local compute.**  On TPU (and always under the fused backend) the
+per-shard banded apply runs through the ``spmv_dia`` Pallas kernel — one
+HBM pass over the local bands, the same kernel the stacked path uses —
+instead of an unrolled jnp shift loop; off-TPU the reference path keeps
+the jnp loop, because the kernel would execute through the Pallas
+*interpreter* inside the CG ``while_loop`` (a Python-level emulation,
+~50x wall overhead on host devices, measured via fig7_full_mesh).
+
 Requires m_loc >= plane (one halo plane per side), i.e. each device holds
 at least one z-plane of the fused block — true for all production configs.
 
@@ -18,6 +37,11 @@ at least one z-plane of the fused block — true for all production configs.
 is elementwise, but routing it through the same shard_map keeps the CG
 iterates pinned to the (solve, assemble) row layout between SpMVs — GSPMD
 would otherwise be free to re-replicate the residual between the two.
+:func:`make_fused_ops_full_mesh` bundles everything into the
+:class:`~repro.solvers.ops.SolverOps` fused backend: the SpMV pass also
+emits the per-shard ``p . Ap`` partial (``psum``'d over both axes), and
+the axpy-pair/precondition/reduce half-iteration runs as one shard_map
+body with ``psum``'d ``r . z`` / ``r . r`` partials.
 """
 from __future__ import annotations
 
@@ -31,11 +55,73 @@ from repro.compat import shard_map
 from repro.core.comm import ASSEMBLE_AXIS, SOLVE_AXIS
 
 
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _local_dia(b, x_pad, *, offsets, plane, m_loc, use_kernel):
+    """Per-shard banded apply: the spmv_dia Pallas kernel (one HBM pass) or
+    the jnp shift loop.
+
+    ``use_kernel=None`` resolves to "kernel on TPU, jnp off-TPU": the
+    interpret-mode kernel is a Python-level emulation whose per-grid-step
+    overhead lands inside the CG while_loop — fine for parity tests (the
+    fused backend forces it), ruinous for the CPU-device wall times the
+    reference path is benchmarked at.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        from repro.kernels.spmv_dia.spmv_dia import (pick_block_rows,
+                                                     spmv_dia_single)
+
+        return spmv_dia_single(b, x_pad, offsets=offsets, plane=plane,
+                               block_rows=pick_block_rows(m_loc),
+                               interpret=not _on_tpu())
+    from repro.kernels.spmv_dia.ref import spmv_dia_ref
+
+    return spmv_dia_ref(b, x_pad, offsets=offsets, plane=plane)
+
+
+def _boundary_add(y, b, down, up, *, offsets, plane, m_loc):
+    """Add the halo-dependent band contributions to the boundary planes.
+
+    Row ``i`` takes ``bands[d, i] * x_global[i + off]``; the down halo
+    covers global indices ``[-plane, 0)`` (only rows ``i < plane`` with
+    ``i + off < 0`` reach it), the up halo ``[m_loc, m_loc + plane)``
+    (rows ``i >= m_loc - plane`` with ``i + off >= m_loc``).  Each band's
+    valid window is a static slice of a zero-extended halo vector — the
+    zero extension supplies the "not from the halo" rows, so no masking.
+    """
+    dtype = y.dtype
+    zeros = jnp.zeros((plane,), dtype)
+    down_ext = jnp.concatenate([down, zeros])   # index i+off+plane
+    up_ext = jnp.concatenate([zeros, up])       # index (i-(m_loc-plane))+off
+    dc = jnp.zeros((plane,), dtype)
+    uc = jnp.zeros((plane,), dtype)
+    for d, off in enumerate(offsets):
+        if off < 0:
+            dc = dc + b[d, :plane] * jax.lax.dynamic_slice_in_dim(
+                down_ext, plane + off, plane)
+        elif off > 0:
+            uc = uc + b[d, m_loc - plane:] * jax.lax.dynamic_slice_in_dim(
+                up_ext, off, plane)
+    y = y.at[:plane].add(dc)
+    return y.at[m_loc - plane:].add(uc)
+
+
 def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
-                        n_coarse: int, alpha: int, m_coarse: int):
+                        n_coarse: int, alpha: int, m_coarse: int,
+                        with_dot: bool = False,
+                        use_kernel: bool | None = None):
     """Returns A(bands, x) with rows sharded over (solve, assemble).
 
     bands: (n_c, nb, m_c) global; x: (n_c, m_c) global.  Out like x.
+    With ``with_dot=True`` the apply also returns the global ``x . A x``
+    (per-shard partial computed in the same pass, ``psum`` over both mesh
+    axes) — the fused backend's ``matvec_dot``.  ``use_kernel`` routes the
+    local compute through the spmv_dia Pallas kernel (default: on TPU; the
+    fused backend forces it everywhere, see :func:`_local_dia`).
     """
     m_loc = m_coarse // alpha
     assert m_loc >= plane, (m_loc, plane)
@@ -44,14 +130,18 @@ def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
     fwd = [(i, i + 1) for i in range(n_shards - 1)]   # send up-halo forward
     bwd = [(i + 1, i) for i in range(n_shards - 1)]   # send down-halo back
 
+    out_specs = (P(SOLVE_AXIS, ASSEMBLE_AXIS), P()) if with_dot \
+        else P(SOLVE_AXIS, ASSEMBLE_AXIS)
+
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(SOLVE_AXIS, None, ASSEMBLE_AXIS),
                   P(SOLVE_AXIS, ASSEMBLE_AXIS)),
-        out_specs=P(SOLVE_AXIS, ASSEMBLE_AXIS), check_vma=False)
+        out_specs=out_specs, check_vma=False)
     def spmv(b_loc, x_loc):
         # b_loc: (1, nb, m_loc); x_loc: (1, m_loc)
         xv = x_loc[0]
+        # (1) issue the halo exchanges first ...
         down = jax.lax.ppermute(xv[-plane:], axes, fwd)
         up = jax.lax.ppermute(xv[:plane], axes, bwd)
         lid = jax.lax.axis_index(axes)
@@ -59,12 +149,19 @@ def make_spmv_full_mesh(mesh: Mesh, *, offsets: tuple[int, ...], plane: int,
         # to zero (the interface coefficients there are zero, so exact)
         down = jnp.where(lid == 0, 0.0, down)
         up = jnp.where(lid == n_shards - 1, 0.0, up)
-        xp = jnp.concatenate([down, xv, up])  # (m_loc + 2*plane,)
-        y = jnp.zeros((m_loc,), xv.dtype)
-        for d, off in enumerate(offsets):
-            y = y + b_loc[0, d] * jax.lax.dynamic_slice_in_dim(
-                xp, plane + off, m_loc)
-        return y[None, :]
+        # (2) ... interior contribution while the permutes are in flight:
+        # zero halos => every row against the locally held vector only
+        xp_loc = jnp.concatenate([jnp.zeros((plane,), xv.dtype), xv,
+                                  jnp.zeros((plane,), xv.dtype)])
+        y = _local_dia(b_loc[0], xp_loc, offsets=offsets, plane=plane,
+                       m_loc=m_loc, use_kernel=use_kernel)
+        # (3) boundary-plane band contributions from the received halos
+        y = _boundary_add(y, b_loc[0], down, up, offsets=offsets,
+                          plane=plane, m_loc=m_loc)
+        if not with_dot:
+            return y[None, :]
+        part = jnp.vdot(xv, y, precision=jax.lax.Precision.HIGHEST)
+        return y[None, :], jax.lax.psum(part, axes)
 
     return spmv
 
@@ -87,3 +184,61 @@ def make_jacobi_full_mesh(mesh: Mesh, diag: jax.Array):
         return r_loc / d_loc
 
     return lambda r: apply(diag, r)
+
+
+def make_fused_step_full_mesh(mesh: Mesh, diag: jax.Array):
+    """Fused axpy pair + Jacobi inverse + psum'd dots on the full mesh.
+
+    One shard_map body computes ``x' = x + alpha p``, ``r' = r - alpha Ap``,
+    ``z = r' / diag`` locally and reduces the ``r'.z`` / ``r'.r'`` partials
+    over both mesh axes — the iterates never leave the (solve, assemble)
+    layout and the two reductions share one pass over the updated residual.
+    """
+    axes = (SOLVE_AXIS, ASSEMBLE_AXIS)
+    sharded = P(SOLVE_AXIS, ASSEMBLE_AXIS)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(sharded,) * 5 + (P(),),
+        out_specs=(sharded, sharded, sharded, P(), P()),
+        check_vma=False)
+    def step(x_loc, r_loc, p_loc, ap_loc, d_loc, alpha):
+        hi = jax.lax.Precision.HIGHEST
+        xn = x_loc + alpha * p_loc
+        rn = r_loc - alpha * ap_loc
+        z = rn / d_loc
+        rz = jax.lax.psum(jnp.vdot(rn, z, precision=hi), axes)
+        rr = jax.lax.psum(jnp.vdot(rn, rn, precision=hi), axes)
+        return xn, rn, z, rz, rr
+
+    return lambda x, r, p, Ap, alpha: step(x, r, p, Ap, diag, alpha)
+
+
+def make_fused_ops_full_mesh(mesh: Mesh, bands: jax.Array, diag: jax.Array,
+                             *, offsets: tuple[int, ...], plane: int,
+                             n_coarse: int, alpha: int, m_coarse: int):
+    """The full-mesh fused :class:`~repro.solvers.ops.SolverOps` backend.
+
+    ``bands``/``diag`` are the global fused system in the full-mesh layout
+    (constrain them with :func:`repro.core.comm.solve_constraint` first).
+    ``matvec_dot`` folds the ``p . Ap`` partial into the overlapped SpMV
+    pass; ``fused_step`` is :func:`make_fused_step_full_mesh`; the generic
+    ``dots`` stay global vdots (all-reduce over both axes under pjit).
+    """
+    from repro.solvers.ops import SolverOps, _reference_dots
+
+    kw = dict(offsets=offsets, plane=plane, n_coarse=n_coarse, alpha=alpha,
+              m_coarse=m_coarse, use_kernel=True)
+    plain = make_spmv_full_mesh(mesh, **kw)
+    fused = make_spmv_full_mesh(mesh, with_dot=True, **kw)
+    precond = make_jacobi_full_mesh(mesh, diag)
+    step = make_fused_step_full_mesh(mesh, diag)
+
+    return SolverOps(
+        matvec=lambda x: plain(bands, x),
+        precond=precond,
+        matvec_dot=lambda p: fused(bands, p),
+        fused_step=step,
+        dots=_reference_dots,
+        backend="fused",
+    )

@@ -201,6 +201,70 @@ def test_full_mesh_piso_step_matches_stacked():
     assert "FM_MAXDIFF" in out
 
 
+def test_full_mesh_fused_backend_matches_reference():
+    """The fused full-mesh SolverOps (overlapped shard_map SpMV with the
+    in-pass p.Ap psum, fused axpy-pair/Jacobi/dots step) must reproduce the
+    stacked reference CG to <= 1e-10 with identical iteration counts, and a
+    full fused full-mesh PISO step must match the stacked path."""
+    out = run_forced("""
+        import numpy as np, jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+        from repro.core.comm import make_cfd_mesh, solve_sharding
+        from repro.core.repartition import plan_for_mesh
+        from repro.fvm.mesh import CavityMesh
+        from repro.fvm.piso import PisoSolver
+        from repro.solvers.cg import cg
+        from repro.solvers.jacobi import jacobi_preconditioner
+        from repro.solvers.ops import reference_ops
+        from repro.sparse.distributed import spmv_dia
+        from repro.sparse.shardmap_spmv import make_fused_ops_full_mesh
+
+        mesh_cfd = CavityMesh.cube(8, 8)
+        rng = np.random.default_rng(0)
+        alpha = 4
+        n_c = mesh_cfd.n_parts // alpha
+        plan = plan_for_mesh(mesh_cfd, alpha)
+        offsets = tuple(int(o) for o in plan.dia_offsets)
+
+        bands = -jnp.abs(jnp.asarray(rng.standard_normal(
+            (n_c, len(offsets), plan.m_coarse))) * 0.1)
+        diag = 1.0 + jnp.sum(jnp.abs(bands), axis=1)
+        bands = bands.at[:, 3, :].set(diag)
+        x_true = jnp.asarray(rng.standard_normal((n_c, plan.m_coarse)))
+        A = lambda v: spmv_dia(bands, v, offsets=offsets, plane=plan.plane)
+        b = A(x_true)
+        res_ref = cg(reference_ops(A, jacobi_preconditioner(diag)), b,
+                     jnp.zeros_like(b), tol=1e-10, maxiter=500)
+
+        m = make_cfd_mesh(n_coarse=n_c, alpha=alpha)
+        put = lambda a, nd: jax.device_put(
+            a, solve_sharding(m, extra_dims=nd, full_mesh=True))
+        ops = make_fused_ops_full_mesh(
+            m, put(bands, 2), put(diag, 1), offsets=offsets,
+            plane=plan.plane, n_coarse=n_c, alpha=alpha,
+            m_coarse=plan.m_coarse)
+        res_fm = cg(ops, put(b, 1), put(jnp.zeros_like(b), 1),
+                    tol=1e-10, maxiter=500)
+        assert int(res_fm.iters) == int(res_ref.iters)
+        err = float(jnp.abs(res_fm.x - res_ref.x).max())
+        assert err <= 1e-10, err
+
+        ref = PisoSolver(mesh_cfd, alpha=4)
+        st_ref, stats_ref = ref.run(2, 2e-4)
+        fm = PisoSolver(mesh_cfd, alpha=4, solve_mode="full_mesh",
+                        solver_backend="fused")
+        st_fm, stats_fm = fm.run(2, 2e-4)
+        errU = float(jnp.abs(st_fm.U - st_ref.U).max())
+        errp = float(jnp.abs(st_fm.p - st_ref.p).max())
+        assert errU <= 1e-10 and errp <= 1e-10, (errU, errp)
+        assert [int(i) for i in stats_fm.p_iters] == \\
+            [int(i) for i in stats_ref.p_iters]
+        print("FUSED_FM_OK", err, errU, errp)
+    """)
+    assert "FUSED_FM_OK" in out
+
+
 def test_bicgstab_breakdown_guard_under_forced_devices():
     """Regression for the BiCGStab zero-division breakdowns (b = 0 and an
     exact first half-step) — NaN-free also when jitted on the forced mesh."""
