@@ -52,9 +52,10 @@ shardings = PisoState(*[fine_sh(s) for s in specs])
 arg_specs = PisoState(*[jax.ShapeDtypeStruct(s.shape, s.dtype)
                         for s in specs])
 
+step_fn = solver.program.as_step_fn()  # the StepProgram's fused composition
 with m:
-    lowered = jax.jit(solver._step_impl, static_argnums=(1,),
-                      in_shardings=(shardings,)).lower(arg_specs, 1e-4)
+    lowered = jax.jit(step_fn,
+                      in_shardings=(shardings, None)).lower(arg_specs, 1e-4)
     compiled = lowered.compile()
 mem = compiled.memory_analysis()
 from repro.compat import cost_analysis_dict

@@ -42,9 +42,10 @@ def fine_sh(x):
 specs = jax.eval_shape(solver.initial_state)
 shardings = PisoState(*[fine_sh(s) for s in specs])
 args = PisoState(*[jax.ShapeDtypeStruct(s.shape, s.dtype) for s in specs])
+step_fn = solver.program.as_step_fn()  # the StepProgram's fused composition
 with m:
-    compiled = jax.jit(solver._step_impl, static_argnums=(1,),
-                       in_shardings=(shardings,)).lower(args, 1e-4).compile()
+    compiled = jax.jit(step_fn,
+                       in_shardings=(shardings, None)).lower(args, 1e-4).compile()
 from repro.compat import cost_analysis_dict
 cost = cost_analysis_dict(compiled)
 mem = compiled.memory_analysis()

@@ -28,5 +28,28 @@ def time_fn(fn, *args, warmup: int = 1, reps: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+def time_fn_fresh(fn, make_arg, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall seconds of ``fn(arg)`` with a FRESH ``make_arg()`` per
+    call, all pre-built OUTSIDE the timed region.
+
+    For donating functions (the StepProgram fused stepper invalidates its
+    input ``PisoState``): replaying one input is impossible, and threading
+    the evolving output through the reps would time non-identical work
+    (Krylov iteration counts drift as the flow develops).  Feeding each
+    rep a pre-made copy of the same developed state keeps every rep's
+    work identical without the copy appearing in the measurement.
+    """
+    args = [make_arg() for _ in range(warmup + reps)]
+    for a in args[:warmup]:
+        jax.block_until_ready(fn(a))
+    ts = []
+    for a in args[warmup:]:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
 def emit(name: str, seconds: float, derived: str):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

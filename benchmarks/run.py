@@ -21,8 +21,8 @@ def main() -> None:
                             fig5_host_time, fig6_phi_ratio, fig7_full_mesh,
                             fig7_strong_scaling, fig8_speedup,
                             fig9_gpu_aware, fig10_adaptive,
-                            fig11_fused_krylov, hillclimb, kernels_bench,
-                            roofline)
+                            fig11_fused_krylov, fig12_step_program,
+                            hillclimb, kernels_bench, roofline)
 
     suites = {
         "fig4": fig4_lsp_vs_alpha.run,
@@ -34,6 +34,7 @@ def main() -> None:
         "fig9": fig9_gpu_aware.run,
         "fig10": fig10_adaptive.main,
         "fig11": fig11_fused_krylov.run,
+        "fig12": fig12_step_program.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "cfd_dryrun": cfd_dryrun.run,
@@ -41,7 +42,7 @@ def main() -> None:
         "hillclimb": hillclimb.run,
     }
     heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm", "fig10",
-             "fig11"}
+             "fig11", "fig12"}
 
     ap = argparse.ArgumentParser()
     ap.add_argument("names", nargs="*",

@@ -23,13 +23,15 @@ args = ap.parse_args()
 mesh = CavityMesh.cube(args.n, args.parts)
 solver = PisoSolver(mesh, alpha=args.alpha, nu=0.01)
 dt = 0.5 * mesh.h  # CFL 0.5 at lid speed 1
-state = solver.initial_state()
 print(f"{mesh.n_cells_global} cells, {args.parts} assembly parts, "
       f"alpha={args.alpha} → {args.parts // args.alpha} solve parts")
+# the whole window is ONE scan-rolled XLA dispatch; stats come back with a
+# per-step leading axis (the window's full convergence history)
+state, stats = solver.run(args.steps, dt)
 for step in range(args.steps):
-    state, stats = solver.step(state, dt)
-    print(f"t={dt * (step + 1):.4f}  continuity={float(stats.continuity_err):.2e}  "
-          f"p_iters={[int(i) for i in stats.p_iters]}")
+    print(f"t={dt * (step + 1):.4f}  "
+          f"continuity={float(stats.continuity_err[step]):.2e}  "
+          f"p_iters={[int(i) for i in stats.p_iters[step]]}")
 
 U = np.asarray(state.U)
 print(f"max |U| = {np.abs(U).max():.3f} (lid speed 1.0)")

@@ -227,15 +227,28 @@ class PlanCache:
 
 @dataclasses.dataclass(frozen=True)
 class ControllerConfig:
-    """Adaptation policy knobs (see module doc for the switching rule)."""
+    """Adaptation policy knobs (see module doc for the switching rule).
+
+    ``sample_every`` is the instrumentation cadence: the serving engine
+    (and the adaptive launcher) runs the fused scan-rolled stepper and
+    takes a per-phase instrumented sample — one
+    ``PisoSolver.timed_step``, which serializes every phase behind
+    ``block_until_ready`` timers — only every ``sample_every``-th
+    timestep.  The controller itself only ever sees the sampled
+    subsequence, so ``warmup``, ``patience`` and ``min_dwell`` all count
+    *sampled observations*, not raw timesteps (a switch decision after
+    ``min_dwell`` sampled steps is ``min_dwell * sample_every`` timesteps
+    of wall dwell).
+    """
 
     alphas: tuple[int, ...] = (1, 2, 4, 8, 16, 32)
     hysteresis: float = 0.10   # min relative predicted gain to switch
     patience: int = 3          # consecutive wins a challenger needs
-    min_dwell: int = 5         # steps between switches (re-plan cool-down)
+    min_dwell: int = 5         # sampled steps between switches (cool-down)
     ema_decay: float = 0.6     # calibration memory (OnlineCalibration.decay)
-    warmup: int = 2            # observations before adapting at all
+    warmup: int = 2            # sampled observations before adapting at all
     device_direct: bool = True
+    sample_every: int = 4      # timesteps per instrumented sample (>= 1)
 
 
 @dataclasses.dataclass
@@ -288,6 +301,8 @@ class RepartitionController:
         """
         if solve_mode not in ("stacked", "full_mesh"):
             raise ValueError(f"unknown solve_mode {solve_mode!r}")
+        if config.sample_every < 1:
+            raise ValueError("sample_every must be >= 1")
         from repro.solvers.ops import BACKENDS
 
         if solver_backend not in BACKENDS:

@@ -135,6 +135,21 @@ class CostModel:
     fused_solver: bool = False
     vector_passes: float = 8.0
     vector_passes_fused: float = 5.0
+    # Host→XLA launch overhead per *dispatched* step.  The StepProgram's
+    # scan-rolled executor (fvm/step_program.FusedExecutor.run_steps)
+    # retires this term: a window of n timesteps is ONE executable launch,
+    # so the per-timestep share is dispatch_latency / n.  The four
+    # PhaseBreakdown phases deliberately exclude it (it is a host
+    # constant, not a partition cost — folding it into a phase would bias
+    # the online calibration's measured-over-modelled ratios); use
+    # t_dispatch / T_step for whole-step throughput projections.
+    dispatch_latency: float = 50e-6
+
+    def t_dispatch(self, steps_per_dispatch: int = 1) -> float:
+        """Per-timestep host dispatch overhead, amortized over the
+        scan-roll window (``steps_per_dispatch = 1`` is the un-rolled
+        per-step stepper; the rolled executor divides it away)."""
+        return self.dispatch_latency / max(int(steps_per_dispatch), 1)
 
     # ---- speed-up laws (paper §2: S_AS, S_LS) -------------------------------
     def t_assembly(self, n_ranks: int) -> float:
@@ -222,6 +237,15 @@ class CostModel:
         """Eq. (3): independent partitions + repartition cost."""
         return (self.t_assembly(n_as) + self.t_solver(n_ls)
                 + self.t_repartition(n_as, n_ls, device_direct))
+
+    def T_step(self, n_as: int, n_ls: int, device_direct: bool = True,
+               steps_per_dispatch: int = 1) -> float:
+        """Whole-timestep wall projection: eq. (3) plus the (scan-roll
+        amortized) host dispatch overhead.  Constant across alpha, so it
+        never changes the controller's argmin — it exists for throughput
+        projections (benchmarks/fig12_step_program.py)."""
+        return (self.T_repartitioned(n_as, n_ls, device_direct)
+                + self.t_dispatch(steps_per_dispatch))
 
     def optimal_alpha(self, n_cpu: int, n_gpu: int,
                       candidates=(1, 2, 4, 8, 16, 32)) -> int:

@@ -51,8 +51,9 @@ class PressureSystem:
 
 
 # pytree registration lets the systems cross jit boundaries — the
-# instrumented PISO step (piso.timed_step) passes them between phase-jitted
-# functions instead of fusing the whole timestep into one program.
+# StepProgram's instrumented executor (fvm/step_program) passes them
+# between phase-jitted functions instead of fusing the whole timestep
+# into one program.
 for _cls in (MomentumSystem, PressureSystem):
     jax.tree_util.register_dataclass(
         _cls, data_fields=[f.name for f in dataclasses.fields(_cls)],

@@ -11,31 +11,37 @@ Faithful to the paper's measured configuration (§4):
 * each PISO corrector re-sends the coefficients through the update pattern
   (paper fig. 3b) — the create/update split means no symbolic work per step.
 
-The whole timestep jits into one XLA program; under pjit the part axes are
-sharded and the halo exchanges/reductions lower to collectives.
+The timestep itself is declared ONCE as a :class:`~repro.fvm.step_program.
+StepProgram` phase list (``assemble_mom → update_mom → solve_mom`` then per
+corrector ``assemble_p → update_p → solve_p → correct``) and compiled three
+ways from that single definition — fused one-dispatch (``step`` /
+scan-rolled ``run_steps``), per-phase instrumented (``timed_step``, the
+adaptive controller's feedback), and the serving engine's sampled mix.
+``PisoSolver`` is the thin *binder*: it owns the plans, the SolverOps
+backend dispatch and the SPMD layout constraints, and memoizes the built
+program + executors per ``(alpha, solve_mode, solver_backend)``.
+
+Under pjit the part axes are sharded and the halo exchanges/reductions
+lower to collectives.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import PhaseBreakdown
 from repro.core.ldu import buffer_from_parts
 from repro.core.repartition import RepartitionPlan, plan_for_mesh
 from repro.core.update import update_device_direct, update_host_buffer
 from repro.fvm.assembly import CavityAssembly
 from repro.fvm.mesh import CavityMesh
-from repro.solvers.bicgstab import bicgstab
-from repro.solvers.cg import cg
+from repro.fvm.step_program import ProgramExecutors, build_piso_program
 from repro.solvers.jacobi import jacobi_preconditioner
 from repro.solvers.ops import (fused_stacked_ops, reference_ops,
                                resolve_backend)
-from repro.sparse.distributed import spmv_dia, x_pad
+from repro.sparse.distributed import spmv_dia
 
 __all__ = ["PisoSolver", "PisoState", "StepStats"]
 
@@ -56,7 +62,13 @@ class StepStats(NamedTuple):
 
 @dataclasses.dataclass
 class PisoSolver:
-    """Bind a mesh + repartitioning ratio alpha into a jitted PISO stepper."""
+    """Bind a mesh + repartitioning ratio alpha into a compiled PISO stepper.
+
+    The solver is a binder: plans + SolverOps + a StepProgram.  The fused
+    stepper **donates** the input ``PisoState`` buffers (keep using the
+    returned state, never the argument) and traces ``dt`` as an ordinary
+    operand, so varying the timestep size never recompiles.
+    """
 
     mesh: CavityMesh
     alpha: int = 1
@@ -91,7 +103,9 @@ class PisoSolver:
     # for parity tests and benchmarks)
     solver_backend: str = "auto"
     # optional shared PlanCache (repro.core.controller) — plans and compiled
-    # steppers are then reused when alpha is rebound to a previously seen value
+    # steppers are then reused when alpha is rebound to a previously seen
+    # value, and the instrumented executor's value updates route through
+    # the cache's shared compiled-update pool
     plan_cache: object | None = None
 
     def __post_init__(self):
@@ -115,11 +129,10 @@ class PisoSolver:
         self._update = (update_device_direct
                         if self.update_schedule == "device_direct"
                         else update_host_buffer)
-        # compiled artifacts per (alpha, solve_mode, solver_backend):
+        # compiled program executors per (alpha, solve_mode, solver_backend):
         # revisiting a layout (adaptive controller oscillating between
         # neighbours, or a mode/backend A/B) reuses trace + XLA work
-        self._step_by_alpha: dict[tuple, object] = {}
-        self._timed_by_alpha: dict[tuple, dict] = {}
+        self._programs: dict[tuple, ProgramExecutors] = {}
         self.rebind_alpha(self.alpha)
 
     def _plan_for(self, alpha: int) -> RepartitionPlan:
@@ -137,8 +150,9 @@ class PisoSolver:
 
         The velocity/pressure state is alpha-independent (fine-partition
         layout), so a running simulation can switch plans between steps.
-        Plans come from ``plan_cache`` when present; jitted steppers are
-        memoized per alpha so a revisited alpha pays zero re-plan cost.
+        Plans come from ``plan_cache`` when present; the built StepProgram
+        and its executors are memoized per (alpha, mode, backend), so a
+        revisited alpha pays zero re-plan, re-trace or re-compile cost.
         """
         if self.mesh.n_parts % alpha != 0:
             raise ValueError("alpha must divide the number of fine parts")
@@ -160,20 +174,22 @@ class PisoSolver:
                     self.n_coarse, alpha,
                     devices=list(self.spmd_mesh.devices.flat))
         key = (alpha, self.solve_mode, self.solver_backend)
-        step = self._step_by_alpha.get(key)
-        if step is None:
-            # wrap in a fresh function object: jax.jit keys its trace cache
-            # on the (eq-comparable) bound method, so two jax.jit(
-            # self._step_impl) wrappers alias one trace and a rebind would
-            # silently keep running the first alpha's compiled program
-            def _fresh_step(state, dt, _impl=self._step_impl):
-                return _impl(state, dt)
-
-            step = self._step_by_alpha[key] = jax.jit(
-                _fresh_step, static_argnames=("dt",))
-        self._step = step
+        exe = self._programs.get(key)
+        if exe is None:
+            # a fresh program binds fresh closures over the new plans, so
+            # jax.jit traces per binding (the seed's bound-method stepper
+            # aliased one trace across rebinds and kept executing the
+            # first alpha's compiled program)
+            exe = self._programs[key] = ProgramExecutors(
+                build_piso_program(self))
+        self._exec = exe
 
     # ---- helpers ------------------------------------------------------
+    @property
+    def program(self):
+        """The bound :class:`~repro.fvm.step_program.StepProgram`."""
+        return self._exec.program
+
     def initial_state(self) -> PisoState:
         P, m, F = self.mesh.n_parts, self.mesh.n_cells, self.mesh.n_faces
         B = self.mesh.plane
@@ -246,143 +262,24 @@ class PisoSolver:
 
         return reference_ops(A, jacobi_preconditioner(diag))
 
-    # ---- one timestep ---------------------------------------------------
-    def _step_impl(self, state: PisoState, dt: float):
-        asm = self.asm
-        U, p, phi, phi_if = state
-
-        # momentum predictor (fine partition, BiCGStab, Jacobi)
-        sysM = asm.assemble_momentum(U, phi, phi_if, p, dt)
-        bandsM = self._bands(self.plan_mom, sysM.diag, sysM.upper, sysM.lower,
-                             sysM.iface)
-        opsM = self._solver_ops(self.plan_mom, bandsM, sysM.diag)
-
-        def solve_component(b, x0):
-            return bicgstab(opsM, b, x0, tol=self.mom_tol, maxiter=500)
-
-        from repro.solvers.bicgstab import BiCGStabResult
-        res = jax.vmap(solve_component, in_axes=(2, 2),
-                       out_axes=BiCGStabResult(x=2, iters=0, residual=0))(
-            sysM.source, U)
-        U = res.x
-        mom_iters = jnp.max(res.iters)
-
-        p_iters = []
-        p_res = jnp.zeros((), self.dtype)
-        for _ in range(self.n_correctors):
-            # H(U)/A and face fluxes of HbyA
-            rAU = asm.V / sysM.diag
-            HbyA = (sysM.source - _offdiag3(asm, sysM, U)) / sysM.diag[..., None]
-            phiH, phiH_if = asm.face_flux(HbyA)
-            sysP = asm.assemble_pressure(rAU, phiH, phiH_if)
-            bandsP = self._solve_constraint(
-                self._bands(self.plan_p, sysP.diag, sysP.upper,
-                            sysP.lower, sysP.iface))
-            # repartition RHS / initial guess to the coarse partition
-            b_c = self._solve_constraint(sysP.source.reshape(self.n_coarse, -1))
-            x0_c = self._solve_constraint(p.reshape(self.n_coarse, -1))
-            diag_c = sysP.diag.reshape(self.n_coarse, -1)
-            opsP = self._solver_ops(self.plan_p, bandsP, diag_c)
-            sol = cg(opsP, b_c, x0_c, tol=self.p_tol, maxiter=2000)
-            p = sol.x.reshape(p.shape)  # scatter back to the fine partition
-            p_iters.append(sol.iters)
-            p_res = sol.residual
-            # corrections
-            phi, phi_if = asm.correct_flux(sysP, phiH, phiH_if, p)
-            U = HbyA - rAU[..., None] * asm.grad(p)
-
-        cont = jnp.max(jnp.abs(asm.divergence(phi, phi_if))) / asm.V
-        stats = StepStats(mom_iters=mom_iters, p_iters=jnp.stack(p_iters),
-                          continuity_err=cont, p_residual=p_res)
-        return PisoState(U, p, phi, phi_if), stats
-
+    # ---- the three executors --------------------------------------------
     def step(self, state: PisoState, dt: float):
-        return self._step(state, dt)
+        """One timestep as ONE fused XLA dispatch.
 
-    # ---- instrumented step (adaptive-controller hook) --------------------
-    def _timed_fns(self) -> dict:
-        """Per-phase jitted functions for the current alpha (memoized)."""
-        key = (self.alpha, self.solve_mode, self.solver_backend)
-        fns = self._timed_by_alpha.get(key)
-        if fns is not None:
-            return fns
-        asm, plan_m, plan_p = self.asm, self.plan_mom, self.plan_p
-        n_c = self.n_coarse
+        ``dt`` is traced (no recompile across timestep sizes) and
+        ``state`` is DONATED — its buffers are invalidated by the call;
+        keep using the returned state.  Returns ``(state, StepStats)``.
+        """
+        return self._exec.fused.step(state, dt)
 
-        def assemble_mom(U, phi, phi_if, p, dt):
-            return asm.assemble_momentum(U, phi, phi_if, p, dt)
+    def run_steps(self, state: PisoState, dt: float, n_steps: int):
+        """Advance ``n_steps`` timesteps as ONE scan-rolled XLA dispatch.
 
-        def update_mom(sysM):
-            return self._bands(plan_m, sysM.diag, sysM.upper, sysM.lower,
-                               sysM.iface)
-
-        def group(plan, sys):
-            buffers = buffer_from_parts(sys.diag, sys.upper, sys.lower,
-                                        sys.iface)
-            n = buffers.shape[0] // plan.alpha
-            return buffers.reshape(n, plan.alpha, plan.buffer_len)
-
-        def solve_mom(bandsM, sysM, U):
-            from repro.solvers.bicgstab import BiCGStabResult
-
-            opsM = self._solver_ops(plan_m, bandsM, sysM.diag)
-            res = jax.vmap(
-                lambda b, x0: bicgstab(opsM, b, x0, tol=self.mom_tol,
-                                       maxiter=500),
-                in_axes=(2, 2),
-                out_axes=BiCGStabResult(x=2, iters=0, residual=0),
-            )(sysM.source, U)
-            return res.x, jnp.max(res.iters)
-
-        def assemble_p(sysM, U):
-            rAU = asm.V / sysM.diag
-            HbyA = (sysM.source - _offdiag3(asm, sysM, U)) / sysM.diag[..., None]
-            phiH, phiH_if = asm.face_flux(HbyA)
-            sysP = asm.assemble_pressure(rAU, phiH, phiH_if)
-            return rAU, HbyA, phiH, phiH_if, sysP
-
-        def update_p(sysP):
-            return self._solve_constraint(
-                self._bands(plan_p, sysP.diag, sysP.upper, sysP.lower,
-                            sysP.iface))
-
-        def solve_p(bandsP, sysP, p):
-            b_c = self._solve_constraint(sysP.source.reshape(n_c, -1))
-            x0_c = self._solve_constraint(p.reshape(n_c, -1))
-            diag_c = sysP.diag.reshape(n_c, -1)
-            opsP = self._solver_ops(plan_p, bandsP, diag_c)
-            sol = cg(opsP, b_c, x0_c, tol=self.p_tol, maxiter=2000)
-            return sol.x.reshape(p.shape), sol.iters, sol.residual
-
-        def halo_probe(p):
-            return x_pad(p.reshape(n_c, -1), plan_p.plane)
-
-        def correct(sysP, phiH, phiH_if, p, HbyA, rAU):
-            phi, phi_if = asm.correct_flux(sysP, phiH, phiH_if, p)
-            U = HbyA - rAU[..., None] * asm.grad(p)
-            cont = jnp.max(jnp.abs(asm.divergence(phi, phi_if))) / asm.V
-            return phi, phi_if, U, cont
-
-        fns = {name: jax.jit(fn) for name, fn in [
-            ("assemble_mom", assemble_mom), ("update_mom", update_mom),
-            ("solve_mom", solve_mom), ("assemble_p", assemble_p),
-            ("update_p", update_p), ("solve_p", solve_p),
-            ("halo_probe", halo_probe), ("correct", correct)]}
-        if self.plan_cache is not None:
-            # route the value updates through the shared compiled-update
-            # pool: the gather executable is reused by every solver/session
-            # whose plan has the same shape signature (PlanCache.pool)
-            pool = self.plan_cache.pool
-            pooled_m = pool.updater(plan_m, "dia", self.update_schedule)
-            pooled_p = pool.updater(plan_p, "dia", self.update_schedule)
-            group_m = jax.jit(functools.partial(group, plan_m))
-            group_p = jax.jit(functools.partial(group, plan_p))
-            constrain = (jax.jit(self._solve_constraint)
-                         if self.spmd_mesh is not None else (lambda x: x))
-            fns["update_mom"] = lambda sysM: pooled_m(group_m(sysM))
-            fns["update_p"] = lambda sysP: constrain(pooled_p(group_p(sysP)))
-        self._timed_by_alpha[key] = fns
-        return fns
+        Returns ``(state, stats)`` where every ``StepStats`` leaf carries
+        a leading ``n_steps`` axis (per-step history of the window).
+        ``state`` is donated; each distinct window length compiles once.
+        """
+        return self._exec.fused.run_steps(state, dt, n_steps)
 
     def timed_step(self, state: PisoState, dt: float):
         """One PISO step with per-phase wall timers (controller feedback).
@@ -392,65 +289,42 @@ class PisoSolver:
         BiCGStab solve, pressure assembly, flux/velocity corrections);
         **update** is the repartitioning coefficient update into the coarse
         plan; **solve** the coarse-partition pressure CG; **halo** the
-        estimated per-iteration neighbour exchange inside that solve (one
-        probed exchange x iteration count — the exchange cannot be timed
-        from inside the jitted CG loop).
+        estimated per-iteration neighbour exchange inside that solve (the
+        program's probe hook: one probed exchange x iteration count — the
+        exchange cannot be timed from inside the jitted CG loop).
 
-        Numerically identical to :meth:`step` (same math, jitted per phase
-        rather than fused); the first call after construction or
-        :meth:`rebind_alpha` to a new alpha includes trace+compile time, so
-        controllers should discard warm-up samples
-        (``ControllerConfig.warmup``).  Returns
-        ``(state, stats, PhaseBreakdown)``.
+        Numerically identical to :meth:`step` (the same StepProgram phases,
+        jitted per phase rather than fused); the first call after
+        construction or :meth:`rebind_alpha` to a new alpha includes
+        trace+compile time, so controllers should discard warm-up samples
+        (``ControllerConfig.warmup``).  Does NOT donate ``state``.
+        Returns ``(state, stats, PhaseBreakdown)``.
         """
-        fns = self._timed_fns()
-        t = dict.fromkeys(("assembly", "update", "halo", "solve"), 0.0)
+        return self._exec.instrumented.timed_step(state, dt)
 
-        def clock(key, fn, *args):
-            t0 = time.perf_counter()
-            out = jax.block_until_ready(fn(*args))
-            t[key] += time.perf_counter() - t0
-            return out
+    def run(self, n_steps: int, dt: float, state: PisoState | None = None,
+            scan_steps: int | None = None):
+        """Run a window via the scan-rolled executor.
 
-        U, p, phi, phi_if = state
-        sysM = clock("assembly", fns["assemble_mom"], U, phi, phi_if, p, dt)
-        bandsM = clock("assembly", fns["update_mom"], sysM)
-        U, mom_iters = clock("assembly", fns["solve_mom"], bandsM, sysM, U)
+        Returns ``(state, stats)`` with per-step stacked ``StepStats``
+        (leading axis ``n_steps``) — the full convergence history of the
+        run, not just its last step.  By default the whole run is ONE
+        XLA dispatch; ``scan_steps`` caps the rolled window length
+        (ceil(n_steps/scan_steps) dispatches, stats concatenated), which
+        bounds the compile cache when callers vary ``n_steps`` — the
+        serving engine and launcher cap their windows the same way.
+        """
+        from repro.fvm.step_program import roll_schedule
 
-        p_iters = []
-        p_res = jnp.zeros((), self.dtype)
-        cont = jnp.zeros((), self.dtype)
-        for _ in range(self.n_correctors):
-            rAU, HbyA, phiH, phiH_if, sysP = clock(
-                "assembly", fns["assemble_p"], sysM, U)
-            bandsP = clock("update", fns["update_p"], sysP)
-            # probe one halo exchange to apportion the CG time
-            t0 = time.perf_counter()
-            jax.block_until_ready(fns["halo_probe"](p))
-            probe = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            p, iters, p_res = jax.block_until_ready(
-                fns["solve_p"](bandsP, sysP, p))
-            t_cg = time.perf_counter() - t0
-            # the standalone probe pays per-call dispatch the fused CG loop
-            # does not, so it is an upper bound at small sizes — never let
-            # the estimate claim more than half the measured solve
-            halo_est = min(float(iters) * probe, 0.5 * t_cg)
-            t["halo"] += halo_est
-            t["solve"] += t_cg - halo_est
-            p_iters.append(iters)
-            phi, phi_if, U, cont = clock(
-                "assembly", fns["correct"], sysP, phiH, phiH_if, p, HbyA, rAU)
-
-        stats = StepStats(mom_iters=mom_iters, p_iters=jnp.stack(p_iters),
-                          continuity_err=cont, p_residual=p_res)
-        return PisoState(U, p, phi, phi_if), stats, PhaseBreakdown(**t)
-
-    def run(self, n_steps: int, dt: float, state: PisoState | None = None):
-        state = state or self.initial_state()
-        stats = None
-        for _ in range(n_steps):
-            state, stats = self.step(state, dt)
+        state = self.initial_state() if state is None else state
+        if scan_steps is None:
+            return self.run_steps(state, dt, n_steps)
+        windows = []
+        for _sample, chunk in roll_schedule(0, n_steps, None,
+                                            cap=scan_steps):
+            state, w = self.run_steps(state, dt, chunk)
+            windows.append(w)
+        stats = jax.tree.map(lambda *xs: jnp.concatenate(xs), *windows)
         return state, stats
 
 

@@ -1,0 +1,475 @@
+"""StepProgram — the PISO timestep as one declarative phase graph.
+
+The paper's whole method rests on a per-phase decomposition of one outer
+iteration — assembly, coefficient update, halo exchange, solve (fig. 5/7).
+The seed encoded that decomposition twice by hand: once fused inside
+``PisoSolver._step_impl`` and once re-spelled phase-by-phase for the
+adaptive controller's timers (``_timed_fns``) — ~150 duplicated lines of
+the same dataflow that had already begun to drift.  This module makes the
+decomposition *data*: a :class:`StepProgram` is an ordered tuple of named
+:class:`Phase` entries — pure functions with declared env inputs/outputs
+and a cost-model phase tag (:class:`~repro.core.cost_model.PhaseBreakdown`
+field) — built once per ``(alpha, solve_mode, solver_backend)`` binding by
+:func:`build_piso_program`, and compiled three ways from the single
+definition:
+
+* :class:`FusedExecutor` — the whole program jitted into one XLA
+  executable with ``dt`` **traced** (changing the timestep size does not
+  recompile) and the ``PisoState`` buffers **donated** (the input state is
+  invalidated; keep the returned one).  ``run_steps(state, dt, n)`` rolls
+  ``n`` timesteps into a single ``lax.scan`` dispatch and returns
+  per-step stacked ``StepStats`` — a whole simulation window is one
+  host→XLA launch.
+* :class:`InstrumentedExecutor` — walks the same phase list with
+  per-phase ``block_until_ready`` wall timers and emits a
+  :class:`~repro.core.cost_model.PhaseBreakdown`.  The halo share of a
+  solve phase is apportioned through the phase's declared ``probe`` hook
+  (one probed exchange × the solve's iteration count — the exchange
+  cannot be timed from inside the jitted Krylov loop).
+* the engine executor — ``serving.engine.SimulationEngine.step_session``
+  advances via the rolled fused stepper and samples the instrumented one
+  only every ``ControllerConfig.sample_every`` steps, so adaptation no
+  longer serializes every timestep.
+
+Every future phase change (overlap, mixed precision, extra correctors) is
+a one-place edit to the phase list; all three executors pick it up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import PhaseBreakdown
+
+__all__ = [
+    "Phase", "StepProgram", "FusedExecutor", "InstrumentedExecutor",
+    "ProgramExecutors", "build_piso_program", "PHASE_TAGS",
+]
+
+# the cost-model buckets a phase may bill to (PhaseBreakdown fields)
+PHASE_TAGS = tuple(f.name for f in dataclasses.fields(PhaseBreakdown))
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One named, pure step of the program.
+
+    ``fn`` consumes ``inputs`` (env keys, positionally) and returns one
+    value per name in ``outputs`` (a bare value when there is exactly
+    one).  ``tag`` is the :class:`PhaseBreakdown` bucket the instrumented
+    executor bills this phase to — the attribution follows the paper's two
+    partitions, so e.g. the momentum predictor's phases all bill to
+    ``assembly`` even though one of them is a solve.
+
+    ``corrector`` marks per-corrector phase instances (they share ``fn``
+    and therefore a single per-phase jit trace).  ``instrumented_fn``, when
+    set, replaces the jitted ``fn`` in the instrumented executor only —
+    the hook the plan cache uses to route value updates through its shared
+    compiled-update pool.  ``probe``/``probe_inputs``/``probe_iters``
+    declare the halo-apportioning hook: the instrumented executor times
+    one ``probe`` dispatch, reads the iteration count from the
+    ``probe_iters`` output, and bills ``min(iters * t_probe, t_phase / 2)``
+    to ``halo`` with the remainder on ``tag``.
+    """
+
+    name: str
+    tag: str
+    inputs: tuple[str, ...]
+    outputs: tuple[str, ...]
+    fn: Callable
+    corrector: int | None = None
+    instrumented_fn: Callable | None = None
+    probe: Callable | None = None
+    probe_inputs: tuple[str, ...] = ()
+    probe_iters: str | None = None
+
+    @property
+    def label(self) -> str:
+        """Display name, unique per program position."""
+        return (self.name if self.corrector is None
+                else f"{self.name}[{self.corrector}]")
+
+
+def _bind(env: dict, phase: Phase, out) -> None:
+    """Store a phase's return value(s) under its declared output names."""
+    if len(phase.outputs) == 1:
+        out = (out,)
+    if len(out) != len(phase.outputs):
+        raise ValueError(
+            f"phase {phase.label} returned {len(out)} values for outputs "
+            f"{phase.outputs}")
+    env.update(zip(phase.outputs, out))
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProgram:
+    """An ordered phase list + env seeding/finalization: one timestep.
+
+    ``seed(state, dt)`` produces the initial env dict (keys declared in
+    ``seed_keys``); phases then read/write named env slots in order;
+    ``finalize(env)`` folds the final env into ``(state, stats)``.
+    Construction validates the dataflow: every phase input must be
+    produced by the seed or an earlier phase, every tag must be a
+    :class:`PhaseBreakdown` field, and a probe must name one of its
+    phase's outputs as the iteration count.
+    """
+
+    phases: tuple[Phase, ...]
+    seed: Callable
+    finalize: Callable
+    seed_keys: tuple[str, ...]
+
+    def __post_init__(self):
+        available = set(self.seed_keys)
+        for ph in self.phases:
+            if ph.tag not in PHASE_TAGS:
+                raise ValueError(
+                    f"phase {ph.label}: unknown tag {ph.tag!r} "
+                    f"(must be one of {PHASE_TAGS})")
+            missing = [k for k in ph.inputs if k not in available]
+            if missing:
+                raise ValueError(
+                    f"phase {ph.label}: inputs {missing} are neither seeded "
+                    f"nor produced by an earlier phase")
+            if ph.probe is not None:
+                if ph.probe_iters not in ph.outputs:
+                    raise ValueError(
+                        f"phase {ph.label}: probe_iters {ph.probe_iters!r} "
+                        f"is not one of its outputs {ph.outputs}")
+                missing = [k for k in ph.probe_inputs if k not in available]
+                if missing:
+                    raise ValueError(
+                        f"phase {ph.label}: probe inputs {missing} not "
+                        f"available before the phase")
+            available.update(ph.outputs)
+
+    def as_step_fn(self) -> Callable:
+        """The pure ``(state, dt) -> (state, stats)`` composition."""
+
+        def step(state, dt):
+            env = self.seed(state, dt)
+            for ph in self.phases:
+                _bind(env, ph, ph.fn(*(env[k] for k in ph.inputs)))
+            return self.finalize(env)
+
+        return step
+
+
+# ---------------------------------------------------------------------------
+# Executor 1: fused (one XLA dispatch per step / per scan-rolled window)
+# ---------------------------------------------------------------------------
+
+class FusedExecutor:
+    """The program as one jitted XLA executable, with a scan-rolled window.
+
+    ``dt`` is an ordinary traced operand — two different timestep sizes
+    share one compilation — and the input state's buffers are donated to
+    the output state (same shapes/dtypes, so XLA aliases them in place):
+    the caller must keep using the *returned* state.  ``dispatches``
+    counts host→XLA executable launches issued through this executor —
+    the quantity the scan roll exists to amortize.
+    """
+
+    def __init__(self, program: StepProgram):
+        self.program = program
+        self._fn = program.as_step_fn()
+        self._step = jax.jit(self._fn, donate_argnums=(0,))
+        self._rolled: dict[int, Callable] = {}
+        self.dispatches = 0
+
+    def step(self, state, dt):
+        """One timestep, one dispatch.  Donates ``state``."""
+        self.dispatches += 1
+        return self._step(state, dt)
+
+    def run_steps(self, state, dt, n_steps: int):
+        """``n_steps`` timesteps as ONE dispatch (``lax.scan`` over the
+        program); returns ``(state, stats)`` with every ``StepStats`` leaf
+        stacked along a leading ``n_steps`` axis.  Donates ``state``.
+        Each distinct window length compiles once (memoized)."""
+        n = int(n_steps)
+        if n < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        roll = self._rolled.get(n)
+        if roll is None:
+            fn = self._fn
+
+            def rolled(state, dt):
+                return jax.lax.scan(lambda s, _: fn(s, dt), state, None,
+                                    length=n)
+
+            roll = self._rolled[n] = jax.jit(rolled, donate_argnums=(0,))
+        self.dispatches += 1
+        return roll(state, dt)
+
+    @property
+    def trace_count(self) -> int:
+        """Compilation-cache entries of the per-step stepper (regression
+        meter for the dt-retrace bug; -1 when jax hides the cache)."""
+        try:
+            return self._step._cache_size()
+        except Exception:  # noqa: BLE001 — jax-internal API
+            return -1
+
+    def lower_step(self, state, dt):
+        """Lowered+compiled per-step executable (donation/HLO inspection)."""
+        return self._step.lower(state, dt).compile()
+
+
+# ---------------------------------------------------------------------------
+# Executor 2: instrumented (per-phase wall timers -> PhaseBreakdown)
+# ---------------------------------------------------------------------------
+
+class InstrumentedExecutor:
+    """Walk the phase list with per-phase ``block_until_ready`` timers.
+
+    Numerically identical to the fused executor (same phase functions,
+    jitted per phase rather than fused); the first call after a program
+    build includes trace+compile time, so controllers discard warm-up
+    samples (``ControllerConfig.warmup``).  Per-corrector phase instances
+    share one jit trace (they share ``fn``); a phase's
+    ``instrumented_fn`` override (the plan cache's pooled update) is used
+    as-is, already composed of jitted pieces.
+    """
+
+    def __init__(self, program: StepProgram):
+        self.program = program
+        self._fns: dict[str, Callable] = {}
+        self._probes: dict[str, Callable] = {}
+        for ph in program.phases:
+            if ph.name not in self._fns:
+                self._fns[ph.name] = (ph.instrumented_fn
+                                      if ph.instrumented_fn is not None
+                                      else jax.jit(ph.fn))
+            if ph.probe is not None and ph.name not in self._probes:
+                self._probes[ph.name] = jax.jit(ph.probe)
+        self.calls = 0
+
+    def timed_step(self, state, dt):
+        """One step; returns ``(state, stats, PhaseBreakdown)``."""
+        self.calls += 1
+        prog = self.program
+        env = prog.seed(state, dt)
+        t = dict.fromkeys(PHASE_TAGS, 0.0)
+        for ph in prog.phases:
+            fn = self._fns[ph.name]
+            args = [env[k] for k in ph.inputs]
+            if ph.probe is None:
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(fn(*args))
+                t[ph.tag] += time.perf_counter() - t0
+                _bind(env, ph, out)
+                continue
+            # probe one halo exchange to apportion the solve time
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                self._probes[ph.name](*(env[k] for k in ph.probe_inputs)))
+            t_probe = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*args))
+            t_phase = time.perf_counter() - t0
+            _bind(env, ph, out)
+            # the standalone probe pays per-call dispatch the fused Krylov
+            # loop does not, so it is an upper bound at small sizes — never
+            # let the estimate claim more than half the measured solve
+            halo_est = min(float(env[ph.probe_iters]) * t_probe,
+                           0.5 * t_phase)
+            t["halo"] += halo_est
+            t[ph.tag] += t_phase - halo_est
+        state, stats = prog.finalize(env)
+        return state, stats, PhaseBreakdown(**t)
+
+
+class ProgramExecutors:
+    """The compiled artifacts of one program binding (memoized per
+    ``(alpha, solve_mode, solver_backend)`` by ``PisoSolver``)."""
+
+    def __init__(self, program: StepProgram):
+        self.program = program
+        self.fused = FusedExecutor(program)
+        self.instrumented = InstrumentedExecutor(program)
+
+
+def roll_schedule(start: int, n_steps: int, every: int | None,
+                  cap: int | None = None):
+    """Yield the engine executor's cadence: ``(is_sample, chunk)`` stretches.
+
+    The sampling grid is anchored at the *absolute* step index ``start``
+    (step indices divisible by ``every`` are instrumented samples), so the
+    cadence is stable across repeated requests; ``every=None`` never
+    samples (a non-adaptive run is pure rolled windows).  Non-sample
+    stretches run to the next sample point, optionally capped at ``cap``
+    steps per rolled dispatch — the cap bounds both compile-cache growth
+    (one ``lax.scan`` program per distinct window length) and the stats
+    buffer of a single window.  Shared by
+    ``SimulationEngine.step_session`` and the adaptive
+    ``repro.launch.cavity`` loop so the two drivers cannot drift.
+    """
+    if every is not None and every < 1:
+        raise ValueError("every must be >= 1")
+    done = 0
+    while done < n_steps:
+        step = start + done
+        if every is not None and step % every == 0:
+            yield True, 1
+            done += 1
+            continue
+        chunk = n_steps - done
+        if every is not None:
+            chunk = min(every - step % every, chunk)
+        if cap is not None:
+            chunk = min(chunk, cap)
+        yield False, chunk
+        done += chunk
+
+
+# ---------------------------------------------------------------------------
+# The PISO program
+# ---------------------------------------------------------------------------
+
+def build_piso_program(solver) -> StepProgram:
+    """Bind a ``PisoSolver``'s plans + SolverOps into the PISO phase list.
+
+    Phases close over the solver's *current* plans and SPMD mesh; the
+    solver memoizes the built program (and its executors) per
+    ``(alpha, solve_mode, solver_backend)``, so a rebind to a new alpha
+    builds a fresh program while a revisited alpha reuses trace + XLA
+    work.  The phase order is the paper's fig. 5/7 decomposition:
+    ``assemble_mom → update_mom → solve_mom`` then, per corrector,
+    ``assemble_p → update_p → solve_p → correct``.
+    """
+    from repro.core.ldu import buffer_from_parts
+    from repro.fvm.piso import PisoState, StepStats, _offdiag3
+    from repro.solvers.bicgstab import BiCGStabResult, bicgstab
+    from repro.solvers.cg import cg
+    from repro.sparse.distributed import x_pad
+
+    asm = solver.asm
+    plan_m, plan_p = solver.plan_mom, solver.plan_p
+    n_c = solver.n_coarse
+    n_corr = solver.n_correctors
+    mom_tol, p_tol = solver.mom_tol, solver.p_tol
+    if n_corr < 1:
+        raise ValueError("the PISO program needs at least one corrector")
+
+    # -- momentum predictor (fine partition, BiCGStab, Jacobi) ------------
+    def assemble_mom(U, phi, phi_if, p, dt):
+        return asm.assemble_momentum(U, phi, phi_if, p, dt)
+
+    def update_mom(sysM):
+        return solver._bands(plan_m, sysM.diag, sysM.upper, sysM.lower,
+                             sysM.iface)
+
+    def solve_mom(bandsM, sysM, U):
+        opsM = solver._solver_ops(plan_m, bandsM, sysM.diag)
+        res = jax.vmap(
+            lambda b, x0: bicgstab(opsM, b, x0, tol=mom_tol, maxiter=500),
+            in_axes=(2, 2),
+            out_axes=BiCGStabResult(x=2, iters=0, residual=0),
+        )(sysM.source, U)
+        return res.x, jnp.max(res.iters)
+
+    # -- PISO correctors ---------------------------------------------------
+    def assemble_p(sysM, U):
+        rAU = asm.V / sysM.diag
+        HbyA = (sysM.source - _offdiag3(asm, sysM, U)) / sysM.diag[..., None]
+        phiH, phiH_if = asm.face_flux(HbyA)
+        sysP = asm.assemble_pressure(rAU, phiH, phiH_if)
+        return rAU, HbyA, phiH, phiH_if, sysP
+
+    def update_p(sysP):
+        return solver._solve_constraint(
+            solver._bands(plan_p, sysP.diag, sysP.upper, sysP.lower,
+                          sysP.iface))
+
+    def solve_p(bandsP, sysP, p):
+        b_c = solver._solve_constraint(sysP.source.reshape(n_c, -1))
+        x0_c = solver._solve_constraint(p.reshape(n_c, -1))
+        diag_c = sysP.diag.reshape(n_c, -1)
+        opsP = solver._solver_ops(plan_p, bandsP, diag_c)
+        sol = cg(opsP, b_c, x0_c, tol=p_tol, maxiter=2000)
+        return sol.x.reshape(p.shape), sol.iters, sol.residual
+
+    def halo_probe(p):
+        return x_pad(p.reshape(n_c, -1), plan_p.plane)
+
+    def correct(sysP, phiH, phiH_if, p, HbyA, rAU):
+        phi, phi_if = asm.correct_flux(sysP, phiH, phiH_if, p)
+        U = HbyA - rAU[..., None] * asm.grad(p)
+        cont = jnp.max(jnp.abs(asm.divergence(phi, phi_if))) / asm.V
+        return phi, phi_if, U, cont
+
+    # -- plan-cache hook: pooled compiled updates (instrumented path only) -
+    update_mom_inst = update_p_inst = None
+    if solver.plan_cache is not None:
+        # the gather executable is shared by every solver/session whose
+        # plan has the same shape signature (PlanCache.pool)
+        pool = solver.plan_cache.pool
+
+        def group(plan, sys):
+            buffers = buffer_from_parts(sys.diag, sys.upper, sys.lower,
+                                        sys.iface)
+            n = buffers.shape[0] // plan.alpha
+            return buffers.reshape(n, plan.alpha, plan.buffer_len)
+
+        pooled_m = pool.updater(plan_m, "dia", solver.update_schedule)
+        pooled_p = pool.updater(plan_p, "dia", solver.update_schedule)
+        group_m = jax.jit(functools.partial(group, plan_m))
+        group_p = jax.jit(functools.partial(group, plan_p))
+        constrain = (jax.jit(solver._solve_constraint)
+                     if solver.spmd_mesh is not None else (lambda x: x))
+
+        def update_mom_inst(sysM):
+            return pooled_m(group_m(sysM))
+
+        def update_p_inst(sysP):
+            return constrain(pooled_p(group_p(sysP)))
+
+    # phase attribution follows the paper's two partitions: the whole
+    # fine-partition share (momentum predictor incl. its BiCGStab solve,
+    # pressure assembly, corrections) bills to "assembly"; the coefficient
+    # update into the coarse plan to "update"; the coarse pressure CG to
+    # "solve" with its probed per-iteration exchange share on "halo"
+    phases = [
+        Phase("assemble_mom", "assembly", ("U", "phi", "phi_if", "p", "dt"),
+              ("sysM",), assemble_mom),
+        Phase("update_mom", "assembly", ("sysM",), ("bandsM",), update_mom,
+              instrumented_fn=update_mom_inst),
+        Phase("solve_mom", "assembly", ("bandsM", "sysM", "U"),
+              ("U", "mom_iters"), solve_mom),
+    ]
+    for i in range(n_corr):
+        phases += [
+            Phase("assemble_p", "assembly", ("sysM", "U"),
+                  ("rAU", "HbyA", "phiH", "phiH_if", "sysP"), assemble_p,
+                  corrector=i),
+            Phase("update_p", "update", ("sysP",), ("bandsP",), update_p,
+                  corrector=i, instrumented_fn=update_p_inst),
+            Phase("solve_p", "solve", ("bandsP", "sysP", "p"),
+                  ("p", f"p_iters_{i}", "p_res"), solve_p, corrector=i,
+                  probe=halo_probe, probe_inputs=("p",),
+                  probe_iters=f"p_iters_{i}"),
+            Phase("correct", "assembly",
+                  ("sysP", "phiH", "phiH_if", "p", "HbyA", "rAU"),
+                  ("phi", "phi_if", "U", "cont"), correct, corrector=i),
+        ]
+
+    def seed(state, dt):
+        U, p, phi, phi_if = state
+        return {"U": U, "p": p, "phi": phi, "phi_if": phi_if, "dt": dt}
+
+    def finalize(env):
+        stats = StepStats(
+            mom_iters=env["mom_iters"],
+            p_iters=jnp.stack([env[f"p_iters_{i}"] for i in range(n_corr)]),
+            continuity_err=env["cont"],
+            p_residual=env["p_res"])
+        return PisoState(env["U"], env["p"], env["phi"], env["phi_if"]), stats
+
+    return StepProgram(phases=tuple(phases), seed=seed, finalize=finalize,
+                       seed_keys=("U", "p", "phi", "phi_if", "dt"))

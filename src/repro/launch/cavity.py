@@ -52,6 +52,17 @@ def main():
                     help="feedback-driven alpha (overrides --alpha)")
     ap.add_argument("--hysteresis", type=float, default=0.10,
                     help="min relative predicted gain to switch alpha")
+    ap.add_argument("--sample-every", type=int, default=4,
+                    help="adaptive mode: timesteps per instrumented "
+                         "per-phase sample; steps in between advance via "
+                         "the fused scan-rolled stepper (one XLA dispatch "
+                         "per stretch)")
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="scan-roll window: up to this many timesteps "
+                         "execute as ONE XLA dispatch (StepProgram fused "
+                         "executor) — the whole run in non-adaptive mode, "
+                         "and the rolled stretches between instrumented "
+                         "samples in adaptive mode")
     args = ap.parse_args()
 
     jax.config.update("jax_enable_x64", True)
@@ -76,7 +87,8 @@ def main():
     if args.adaptive:
         cache = PlanCache()
         # fixed_fine feasibility keeps only divisors of --parts
-        cfg = ControllerConfig(hysteresis=args.hysteresis)
+        cfg = ControllerConfig(hysteresis=args.hysteresis,
+                               sample_every=max(args.sample_every, 1))
         ctl = RepartitionController(cm, n_cpu=args.parts, n_gpu=1,
                                     alpha0=alpha, config=cfg, cache=cache,
                                     fixed_fine=True,
@@ -88,22 +100,40 @@ def main():
                             solver_backend=args.solver_backend)
         print(f"controller start: alpha={ctl.alpha} "
               f"solve_mode={args.solve_mode} "
-              f"solver_backend={args.solver_backend}")
+              f"solver_backend={args.solver_backend} "
+              f"sample_every={cfg.sample_every}")
+        from repro.fvm.step_program import roll_schedule
+
         state = solver.initial_state()
         t0 = time.time()
-        for step in range(args.steps):
-            state, stats, sample = solver.timed_step(state, dt)
-            new_alpha = ctl.step(sample)
-            if new_alpha != solver.alpha:
-                print(f"step {step}: controller switch alpha "
-                      f"{solver.alpha} -> {new_alpha}")
-                solver.rebind_alpha(new_alpha)
-            print(f"step {step}: alpha={solver.alpha} "
-                  f"p_iters={[int(i) for i in stats.p_iters]} "
-                  f"continuity={float(stats.continuity_err):.2e} "
-                  f"phases(ms)=[as {sample.assembly*1e3:.1f} "
-                  f"up {sample.update*1e3:.1f} ha {sample.halo*1e3:.1f} "
-                  f"so {sample.solve*1e3:.1f}]")
+        step = 0
+        # same cadence driver as SimulationEngine.step_session: sample the
+        # instrumented walk on the anchored grid, scan-roll the stretches
+        for is_sample, chunk in roll_schedule(0, args.steps,
+                                              cfg.sample_every,
+                                              cap=max(args.scan_steps, 1)):
+            if is_sample:
+                # instrumented sample: per-phase timers feed the controller
+                state, stats, sample = solver.timed_step(state, dt)
+                new_alpha = ctl.step(sample)
+                if new_alpha != solver.alpha:
+                    print(f"step {step}: controller switch alpha "
+                          f"{solver.alpha} -> {new_alpha}")
+                    solver.rebind_alpha(new_alpha)
+                print(f"step {step}: alpha={solver.alpha} "
+                      f"p_iters={[int(i) for i in stats.p_iters]} "
+                      f"continuity={float(stats.continuity_err):.2e} "
+                      f"phases(ms)=[as {sample.assembly*1e3:.1f} "
+                      f"up {sample.update*1e3:.1f} ha {sample.halo*1e3:.1f} "
+                      f"so {sample.solve*1e3:.1f}]")
+            else:
+                # fused scan-rolled stretch: ONE XLA dispatch
+                state, window = solver.run_steps(state, dt, chunk)
+                print(f"steps {step}..{step + chunk - 1}: "
+                      f"alpha={solver.alpha} rolled x{chunk} "
+                      f"p_iters={[int(i) for i in window.p_iters[-1]]} "
+                      f"continuity={float(window.continuity_err[-1]):.2e}")
+            step += chunk
         s = ctl.stats()
         print(f"{args.steps} steps in {time.time() - t0:.2f}s "
               f"({mesh.n_cells_global} cells); final alpha={ctl.alpha}, "
@@ -119,17 +149,26 @@ def main():
                         update_schedule=args.schedule,
                         solve_mode=args.solve_mode,
                         solver_backend=args.solver_backend)
+    from repro.fvm.step_program import roll_schedule
+
     state = solver.initial_state()
     t0 = time.time()
-    for step in range(args.steps):
-        state, stats = solver.step(state, dt)
-        print(f"step {step}: mom_iters={int(stats.mom_iters)} "
-              f"p_iters={[int(i) for i in stats.p_iters]} "
-              f"continuity={float(stats.continuity_err):.2e}")
+    scan = max(args.scan_steps, 1)
+    step = 0
+    # every=None: no sampling — pure scan-rolled windows of <= scan steps
+    for _sample, chunk in roll_schedule(0, args.steps, None, cap=scan):
+        # each window is ONE XLA dispatch; stats come back per-step stacked
+        state, stats = solver.run_steps(state, dt, chunk)
+        for j in range(chunk):
+            print(f"step {step + j}: mom_iters={int(stats.mom_iters[j])} "
+                  f"p_iters={[int(i) for i in stats.p_iters[j]]} "
+                  f"continuity={float(stats.continuity_err[j]):.2e}")
+        step += chunk
     print(f"{args.steps} steps in {time.time() - t0:.2f}s "
           f"({mesh.n_cells_global} cells, alpha={alpha}, "
           f"solve_mode={args.solve_mode}, "
-          f"solver_backend={args.solver_backend})")
+          f"solver_backend={args.solver_backend}, "
+          f"scan_steps={scan})")
 
 
 if __name__ == "__main__":

@@ -98,10 +98,16 @@ class SimulationEngine:
     """
 
     def __init__(self, plan_cache: PlanCache | None = None,
-                 config: ControllerConfig = ControllerConfig()):
+                 config: ControllerConfig = ControllerConfig(),
+                 scan_window: int = 8):
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.plan_cache = PlanCache() if plan_cache is None else plan_cache
         self.config = config
+        if scan_window < 1:
+            raise ValueError("scan_window must be >= 1")
+        # max steps per rolled lax.scan dispatch: bounds the set of compiled
+        # window lengths (each distinct length is its own XLA program)
+        self.scan_window = scan_window
         self.sessions: dict[str, SimulationSession] = {}
 
     def open_session(self, sid: str, mesh, *, dt: float,
@@ -143,19 +149,42 @@ class SimulationEngine:
         return sess
 
     def step_session(self, sid: str, n_steps: int = 1):
-        """Advance one tenant; other sessions' controllers are untouched."""
+        """Advance one tenant; other sessions' controllers are untouched.
+
+        The engine executor of the StepProgram: non-sample steps advance
+        through the fused **scan-rolled** stepper (`PisoSolver.run_steps`
+        — the whole stretch to the next sample point is one XLA
+        dispatch), and only every ``ControllerConfig.sample_every``-th
+        timestep runs the per-phase **instrumented** stepper whose
+        ``PhaseBreakdown`` feeds the controller.  Adaptation therefore no
+        longer serializes every timestep behind ``block_until_ready``
+        phase timers; the controller sees exactly the sampled
+        subsequence (its warmup/patience/dwell count sampled steps).
+        The sampling grid is anchored to ``steps_done``
+        (:func:`repro.fvm.step_program.roll_schedule`), so the cadence is
+        stable across repeated ``step_session`` calls; rolled windows are
+        capped at ``scan_window`` steps so a long request cannot compile
+        one ``lax.scan`` program per distinct length.  Returns the last
+        step's ``StepStats``.
+        """
+        from repro.fvm.step_program import roll_schedule
+
         sess = self.sessions[sid]
+        every = self.config.sample_every if sess.adaptive else None
         stats = None
-        for _ in range(n_steps):
-            if sess.adaptive:
+        for is_sample, chunk in roll_schedule(sess.steps_done, n_steps,
+                                              every, cap=self.scan_window):
+            if is_sample:
                 sess.state, stats, sample = sess.solver.timed_step(
                     sess.state, sess.dt)
                 alpha = sess.controller.step(sample)
                 if alpha != sess.solver.alpha:
                     sess.solver.rebind_alpha(alpha)
             else:
-                sess.state, stats = sess.solver.step(sess.state, sess.dt)
-            sess.steps_done += 1
+                sess.state, window = sess.solver.run_steps(
+                    sess.state, sess.dt, chunk)
+                stats = jax.tree.map(lambda a: a[-1], window)
+            sess.steps_done += chunk
         return stats
 
     def close_session(self, sid: str) -> dict:

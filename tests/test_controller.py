@@ -259,16 +259,16 @@ def test_piso_rebind_alpha_reuses_plans_and_steppers():
     solver = PisoSolver(mesh, alpha=2, plan_cache=cache)
     state = solver.initial_state()
     state, _ = solver.step(state, 1e-3)
-    step2 = solver._step
+    exec2 = solver._exec
     plan2 = solver.plan_p
 
     solver.rebind_alpha(4)
     state, _ = solver.step(state, 1e-3)
     assert solver.n_coarse == 1
 
-    solver.rebind_alpha(2)   # revisit: plan AND compiled stepper reused
+    solver.rebind_alpha(2)   # revisit: plan AND compiled executors reused
     assert solver.plan_p is plan2
-    assert solver._step is step2
+    assert solver._exec is exec2
     state, stats = solver.step(state, 1e-3)
     assert float(stats.continuity_err) < 1e-6
     s = cache.stats()

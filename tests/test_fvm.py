@@ -89,7 +89,10 @@ def test_piso_runs_and_conserves_mass(alpha):
     mesh = CavityMesh.cube(8, 4)
     solver = PisoSolver(mesh, alpha=alpha, nu=0.01, n_correctors=2)
     state, stats = solver.run(n_steps=3, dt=2e-4)
-    assert float(stats.continuity_err) < 1e-6
+    # run() returns the scan window's per-step stacked stats
+    assert stats.continuity_err.shape == (3,)
+    assert stats.p_iters.shape == (3, 2)
+    assert float(stats.continuity_err[-1]) < 1e-6
     U = np.asarray(state.U)
     assert np.isfinite(U).all()
     assert np.abs(U).max() <= 1.5  # bounded by lid speed (+overshoot margin)
@@ -122,28 +125,59 @@ def test_host_buffer_schedule_identical_solution():
                                atol=1e-12)
 
 
-def test_rebind_alpha_retraces_the_stepper():
-    """Regression: jax.jit keys its trace cache on the (eq-comparable)
-    bound method, so two jit(self._step_impl) wrappers alias ONE trace —
-    rebind_alpha would silently keep executing the first alpha's compiled
-    program.  The fresh-closure stepper must retrace per (alpha, mode) and
-    still reuse the memoized stepper when an alpha is revisited."""
-
-    class CountingSolver(PisoSolver):
-        traces = 0
-
-        def _step_impl(self, state, dt):
-            type(self).traces += 1
-            return super()._step_impl(state, dt)
-
+def test_rebind_alpha_rebuilds_the_program():
+    """Regression (seed lineage): jax.jit keys its trace cache on the
+    (eq-comparable) bound method, so two jit(self._step_impl) wrappers
+    aliased ONE trace — rebind_alpha silently kept executing the first
+    alpha's compiled program.  The StepProgram layer builds fresh phase
+    closures per (alpha, mode, backend) binding, so each binding owns its
+    own trace, and a revisited alpha reuses its memoized executors."""
     mesh = CavityMesh.cube(4, 4)
-    s = CountingSolver(mesh, alpha=4)
-    st = s.initial_state()
-    s.step(st, 1e-4)
-    assert CountingSolver.traces == 1
+    s = PisoSolver(mesh, alpha=4)
+    exe4 = s._exec
+    st, _ = s.step(s.initial_state(), 1e-4)
+    assert exe4.fused.trace_count == 1  # strict: -1 sentinel must fail
+
     s.rebind_alpha(2)
-    s.step(st, 1e-4)
-    assert CountingSolver.traces == 2  # was 1: stale alpha-4 executable
+    exe2 = s._exec
+    assert exe2 is not exe4, "a new alpha must bind a new program"
+    assert exe2.program is not exe4.program
+    st, stats = s.step(st, 1e-4)
+    # the alpha=2 binding really solves on 2 coarse parts (not a stale
+    # alpha-4 executable): its pressure phases closed over n_coarse=2
+    assert s.n_coarse == 2
+    assert float(stats.continuity_err) < 1e-6
+
     s.rebind_alpha(4)
+    assert s._exec is exe4, "revisited alpha reuses its compiled executors"
+    tr = exe4.fused.trace_count
     s.step(st, 1e-4)
-    assert CountingSolver.traces == 2  # revisited alpha reuses its stepper
+    assert exe4.fused.trace_count == tr  # no retrace on revisit
+
+
+def test_program_phase_list_is_the_paper_decomposition():
+    """The declarative phase graph: names/tags in fig. 5/7 order, dataflow
+    validated, per-corrector instances sharing one fn (one jit trace)."""
+    solver = PisoSolver(CavityMesh.cube(4, 2), alpha=2, n_correctors=2)
+    prog = solver.program
+    names = [ph.label for ph in prog.phases]
+    assert names == ["assemble_mom", "update_mom", "solve_mom",
+                     "assemble_p[0]", "update_p[0]", "solve_p[0]",
+                     "correct[0]",
+                     "assemble_p[1]", "update_p[1]", "solve_p[1]",
+                     "correct[1]"]
+    tags = {ph.label: ph.tag for ph in prog.phases}
+    assert tags["update_p[0]"] == "update"
+    assert tags["solve_p[0]"] == "solve"
+    assert all(tags[n] == "assembly" for n in
+               ("assemble_mom", "update_mom", "solve_mom", "assemble_p[0]",
+                "correct[1]"))
+    # the two corrector instances share fn objects -> one jit trace each
+    by_name = {}
+    for ph in prog.phases:
+        by_name.setdefault(ph.name, []).append(ph.fn)
+    assert all(len(set(map(id, fns))) == 1 for fns in by_name.values())
+    # the solve phase carries the halo probe hook
+    solves = [ph for ph in prog.phases if ph.name == "solve_p"]
+    assert all(ph.probe is not None and ph.probe_iters in ph.outputs
+               for ph in solves)

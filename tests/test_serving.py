@@ -52,3 +52,69 @@ def test_kv_repartition_plan_blockwise_ownership():
     assert plan.n_coarse == 4
     # the fine/coarse PartitionSpecs express the prefill→decode relayout
     assert plan.fine_spec() != plan.coarse_spec()
+
+
+# ---------------------------------------------------------------------------
+# CFD simulation serving: the engine executor of the StepProgram
+# ---------------------------------------------------------------------------
+
+def test_engine_samples_instrumented_every_kth_step():
+    """step_session advances via the fused scan-rolled stepper and runs
+    the per-phase instrumented stepper only every sample_every-th
+    timestep; the controller sees exactly the sampled subsequence and its
+    decisions match replaying those samples into a fresh controller."""
+    from repro.core.controller import ControllerConfig, RepartitionController
+    from repro.core.cost_model import CostModel, TPU_V5E
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+
+    cfg = ControllerConfig(sample_every=3, warmup=1, alphas=(1, 2, 4))
+    eng = SimulationEngine(config=cfg)
+    mesh = CavityMesh.cube(4, 4)
+    sess = eng.open_session("a", mesh, dt=1e-3, alpha0=2)
+    stats = eng.step_session("a", n_steps=7)
+    assert sess.steps_done == 7
+    assert float(stats.continuity_err) < 1e-4
+
+    # steps 0, 3, 6 sampled -> 3 instrumented walks, 3 controller samples;
+    # the stretches 1-2 and 4-5 each rolled into ONE fused dispatch
+    inst = sess.solver._exec.instrumented
+    fused = sess.solver._exec.fused
+    assert inst.calls == 3
+    assert sess.controller.calibration.n_obs == 3
+    assert fused.dispatches == 2
+    assert sorted(fused._rolled) == [2]  # both stretches share one window
+
+    # the cadence is anchored to steps_done across calls: next step (7)
+    # is not a sample point, 8 is rolled too, 9 is
+    eng.step_session("a", n_steps=3)
+    assert inst.calls == 4 and sess.steps_done == 10
+
+    # controller decisions depend only on the sampled subsequence: replay
+    # the same samples into a fresh controller -> same alpha trajectory
+    replay = RepartitionController(
+        CostModel(TPU_V5E, n_dofs=mesh.n_cells_global),
+        n_cpu=mesh.n_parts, n_gpu=1, alpha0=2, config=cfg,
+        fixed_fine=True)
+    for sample in sess.controller.history:
+        replay.step(sample)
+    assert replay.alpha == sess.controller.alpha
+    assert [e.new_alpha for e in replay.switches] == \
+        [e.new_alpha for e in sess.controller.switches]
+
+
+def test_engine_non_adaptive_rolls_whole_request():
+    """A non-adaptive session never pays the instrumented walk: the whole
+    step_session request is fused dispatches only."""
+    from repro.core.controller import ControllerConfig
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+
+    eng = SimulationEngine(config=ControllerConfig(sample_every=2,
+                                                   alphas=(1, 2, 4)))
+    sess = eng.open_session("b", CavityMesh.cube(4, 4), dt=1e-3, alpha0=2,
+                            adaptive=False)
+    eng.step_session("b", n_steps=5)
+    assert sess.solver._exec.instrumented.calls == 0
+    assert sess.solver._exec.fused.dispatches == 1  # one rolled window of 5
+    assert sess.steps_done == 5
