@@ -22,7 +22,8 @@ def main() -> None:
                             fig7_strong_scaling, fig8_speedup,
                             fig9_gpu_aware, fig10_adaptive,
                             fig11_fused_krylov, fig12_step_program,
-                            hillclimb, kernels_bench, roofline)
+                            fig13_engine_throughput, hillclimb,
+                            kernels_bench, roofline)
 
     suites = {
         "fig4": fig4_lsp_vs_alpha.run,
@@ -35,6 +36,7 @@ def main() -> None:
         "fig10": fig10_adaptive.main,
         "fig11": fig11_fused_krylov.run,
         "fig12": fig12_step_program.run,
+        "fig13": fig13_engine_throughput.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "cfd_dryrun": cfd_dryrun.run,
@@ -42,7 +44,7 @@ def main() -> None:
         "hillclimb": hillclimb.run,
     }
     heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm", "fig10",
-             "fig11", "fig12"}
+             "fig11", "fig12", "fig13"}
 
     ap = argparse.ArgumentParser()
     ap.add_argument("names", nargs="*",

@@ -269,7 +269,7 @@ class RepartitionController:
 
     def __init__(self, model: CostModel, n_cpu: int, n_gpu: int,
                  alpha0: int | None = None,
-                 config: ControllerConfig = ControllerConfig(),
+                 config: ControllerConfig | None = None,
                  cache: PlanCache | None = None,
                  fixed_fine: bool = False,
                  solve_mode: str = "stacked",
@@ -301,6 +301,12 @@ class RepartitionController:
         """
         if solve_mode not in ("stacked", "full_mesh"):
             raise ValueError(f"unknown solve_mode {solve_mode!r}")
+        # per-instance default: a ControllerConfig() *instance* default
+        # argument would be one shared object across every controller
+        # constructed without an explicit config (same audit as
+        # SimulationEngine; ControllerConfig is frozen today, but the
+        # aliasing trap should not outlive that)
+        config = ControllerConfig() if config is None else config
         if config.sample_every < 1:
             raise ValueError("sample_every must be >= 1")
         from repro.solvers.ops import BACKENDS

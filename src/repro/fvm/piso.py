@@ -43,7 +43,8 @@ from repro.solvers.ops import (fused_stacked_ops, reference_ops,
                                resolve_backend)
 from repro.sparse.distributed import spmv_dia
 
-__all__ = ["PisoSolver", "PisoState", "StepStats"]
+__all__ = ["PisoSolver", "PisoState", "StepStats", "stack_states",
+           "unstack_states"]
 
 
 class PisoState(NamedTuple):
@@ -58,6 +59,35 @@ class StepStats(NamedTuple):
     p_iters: jax.Array        # (n_correctors,)
     continuity_err: jax.Array  # max |div(phi)| after correction
     p_residual: jax.Array
+
+
+def stack_states(states) -> PisoState:
+    """Stack per-session ``PisoState``s along a new leading session axis.
+
+    The cohort form consumed by the batched stepper
+    (:class:`~repro.fvm.step_program.BatchedExecutor`): every leaf of the
+    S input states becomes one ``(S, ...)`` array.  All states must share
+    leaf shapes/dtypes (same mesh decomposition — the cohort contract).
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("cannot stack an empty session list")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(stacked: PisoState, n: int | None = None):
+    """Split a cohort-stacked ``PisoState`` back into per-session states.
+
+    Inverse of :func:`stack_states`; ``n`` defaults to the leading axis
+    size.  Slicing is exact (no recomputation), so a stack/step/unstack
+    round trip equals stepping each session alone up to the batched
+    reduction order.
+    """
+    lead = jax.tree.leaves(stacked)[0].shape[0]
+    n = lead if n is None else n
+    if n != lead:
+        raise ValueError(f"requested {n} sessions from a stack of {lead}")
+    return [jax.tree.map(lambda a: a[i], stacked) for i in range(n)]
 
 
 @dataclasses.dataclass
@@ -280,6 +310,19 @@ class PisoSolver:
         ``state`` is donated; each distinct window length compiles once.
         """
         return self._exec.fused.run_steps(state, dt, n_steps)
+
+    def batched_executor(self, batch: int):
+        """The cohort stepper for ``batch`` stacked sessions.
+
+        ``jax.vmap`` of this binding's fused program over a leading
+        session axis (:class:`~repro.fvm.step_program.BatchedExecutor`),
+        memoized per cohort size alongside the other executors of the
+        current ``(alpha, solve_mode, solver_backend)`` binding.  Any
+        solver with an equal binding on the same mesh produces a
+        numerically interchangeable batched program — what lets the
+        serving engine step a whole cohort through one member's executor.
+        """
+        return self._exec.batched(batch)
 
     def timed_step(self, state: PisoState, dt: float):
         """One PISO step with per-phase wall timers (controller feedback).

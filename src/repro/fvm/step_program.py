@@ -30,6 +30,14 @@ definition:
   advances via the rolled fused stepper and samples the instrumented one
   only every ``ControllerConfig.sample_every`` steps, so adaptation no
   longer serializes every timestep.
+* :class:`BatchedExecutor` — ``jax.vmap`` of the same program over a
+  leading **session axis**: a cohort of S same-shape tenants (stacked
+  ``PisoState`` leaves, a per-session ``dt`` vector) advances through one
+  scan-rolled window as ONE XLA dispatch instead of S.  Donation is
+  preserved (the stacked state aliases in place) and the batched
+  instrumented walk emits one apportioned ``PhaseBreakdown`` row per
+  session, so per-session controllers stay independent
+  (``SimulationEngine.step_all`` is the consumer).
 
 Every future phase change (overlap, mixed precision, extra correctors) is
 a one-place edit to the phase list; all three executors pick it up.
@@ -48,7 +56,8 @@ from repro.core.cost_model import PhaseBreakdown
 
 __all__ = [
     "Phase", "StepProgram", "FusedExecutor", "InstrumentedExecutor",
-    "ProgramExecutors", "build_piso_program", "PHASE_TAGS",
+    "BatchedExecutor", "ProgramExecutors", "build_piso_program",
+    "PHASE_TAGS",
 ]
 
 # the cost-model buckets a phase may bill to (PhaseBreakdown fields)
@@ -104,6 +113,69 @@ def _bind(env: dict, phase: Phase, out) -> None:
             f"phase {phase.label} returned {len(out)} values for outputs "
             f"{phase.outputs}")
     env.update(zip(phase.outputs, out))
+
+
+def _timed_phase_walk(program: StepProgram, fns: dict, probes: dict,
+                      env: dict, n_rows: int) -> list[dict]:
+    """Walk the phase list with per-phase wall timers; mutate ``env``.
+
+    THE instrumented walk — the solo and cohort-batched executors both
+    call it so the timing/apportioning policy stays a one-place edit.
+    Each measured phase wall is shared evenly across ``n_rows`` sessions
+    (1 for the solo executor; a cohort stacks same-shape states, so the
+    per-session work is identical); returns one tag-times dict per row.
+
+    A probed phase apportions a halo share per row from that row's OWN
+    iteration count: the standalone probe pays per-call dispatch the
+    fused Krylov loop does not, so it is an upper bound at small sizes —
+    never let the estimate claim more than half the measured solve.
+    """
+    share = 1.0 / n_rows
+    t = [dict.fromkeys(PHASE_TAGS, 0.0) for _ in range(n_rows)]
+    for ph in program.phases:
+        fn = fns[ph.name]
+        args = [env[k] for k in ph.inputs]
+        if ph.probe is None:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*args))
+            t_phase = (time.perf_counter() - t0) * share
+            _bind(env, ph, out)
+            for row in t:
+                row[ph.tag] += t_phase
+            continue
+        # probe one halo exchange to apportion the solve time
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            probes[ph.name](*(env[k] for k in ph.probe_inputs)))
+        t_probe = (time.perf_counter() - t0) * share
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        t_phase = (time.perf_counter() - t0) * share
+        _bind(env, ph, out)
+        iters = jnp.atleast_1d(env[ph.probe_iters])
+        for i, row in enumerate(t):
+            halo_est = min(float(iters[i]) * t_probe, 0.5 * t_phase)
+            row["halo"] += halo_est
+            row[ph.tag] += t_phase - halo_est
+    return t
+
+
+def _memoized_roll(cache: dict, fn: Callable, n_steps: int) -> Callable:
+    """The jitted ``lax.scan`` roll of ``fn`` over ``n_steps``, donated
+    and memoized per window length (one XLA program per distinct length)
+    — shared by the solo and cohort-batched executors."""
+    n = int(n_steps)
+    if n < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    roll = cache.get(n)
+    if roll is None:
+
+        def rolled(state, dt):
+            return jax.lax.scan(lambda s, _: fn(s, dt), state, None,
+                                length=n)
+
+        roll = cache[n] = jax.jit(rolled, donate_argnums=(0,))
+    return roll
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,18 +264,7 @@ class FusedExecutor:
         program); returns ``(state, stats)`` with every ``StepStats`` leaf
         stacked along a leading ``n_steps`` axis.  Donates ``state``.
         Each distinct window length compiles once (memoized)."""
-        n = int(n_steps)
-        if n < 1:
-            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
-        roll = self._rolled.get(n)
-        if roll is None:
-            fn = self._fn
-
-            def rolled(state, dt):
-                return jax.lax.scan(lambda s, _: fn(s, dt), state, None,
-                                    length=n)
-
-            roll = self._rolled[n] = jax.jit(rolled, donate_argnums=(0,))
+        roll = _memoized_roll(self._rolled, self._fn, n_steps)
         self.dispatches += 1
         return roll(state, dt)
 
@@ -255,44 +316,123 @@ class InstrumentedExecutor:
         self.calls += 1
         prog = self.program
         env = prog.seed(state, dt)
-        t = dict.fromkeys(PHASE_TAGS, 0.0)
-        for ph in prog.phases:
-            fn = self._fns[ph.name]
-            args = [env[k] for k in ph.inputs]
-            if ph.probe is None:
-                t0 = time.perf_counter()
-                out = jax.block_until_ready(fn(*args))
-                t[ph.tag] += time.perf_counter() - t0
-                _bind(env, ph, out)
-                continue
-            # probe one halo exchange to apportion the solve time
-            t0 = time.perf_counter()
-            jax.block_until_ready(
-                self._probes[ph.name](*(env[k] for k in ph.probe_inputs)))
-            t_probe = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            out = jax.block_until_ready(fn(*args))
-            t_phase = time.perf_counter() - t0
-            _bind(env, ph, out)
-            # the standalone probe pays per-call dispatch the fused Krylov
-            # loop does not, so it is an upper bound at small sizes — never
-            # let the estimate claim more than half the measured solve
-            halo_est = min(float(env[ph.probe_iters]) * t_probe,
-                           0.5 * t_phase)
-            t["halo"] += halo_est
-            t[ph.tag] += t_phase - halo_est
+        rows = _timed_phase_walk(prog, self._fns, self._probes, env, 1)
         state, stats = prog.finalize(env)
-        return state, stats, PhaseBreakdown(**t)
+        return state, stats, PhaseBreakdown(**rows[0])
+
+
+# ---------------------------------------------------------------------------
+# Executor 3: batched (one dispatch per cohort rolled window — vmap over a
+# leading session axis)
+# ---------------------------------------------------------------------------
+
+class BatchedExecutor:
+    """The program vmapped over a leading session (cohort) axis.
+
+    A cohort is a group of same-shape tenants: every ``PisoState`` leaf is
+    stacked along a new leading axis of size ``batch`` and ``dt`` becomes a
+    ``(batch,)`` vector (``in_axes=(0, 0)`` — each session keeps its own
+    timestep size).  ``run_steps`` scan-rolls ``n`` timesteps of the whole
+    cohort into ONE XLA dispatch — S tenants advancing a window cost one
+    executable launch instead of S — with the stacked state donated exactly
+    like the single-session :class:`FusedExecutor`.
+
+    Per-session numerics are the solo program's: ``jax.vmap`` of the
+    ``lax.while_loop`` Krylov solves freezes converged lanes (the batched
+    body selects the old carry once a lane's predicate drops), so each
+    session's iterates and iteration counts match its sequential run.
+
+    ``timed_step`` is the cohort's instrumented sample: it walks the phase
+    list vmapped with per-phase ``block_until_ready`` timers and apportions
+    each phase wall time **evenly across the cohort** (same shapes ⇒ same
+    per-session work), emitting one :class:`PhaseBreakdown` row per session
+    — the probed halo share uses each session's own iteration count — so
+    every tenant's controller keeps calibrating independently.
+    """
+
+    def __init__(self, program: StepProgram, batch: int):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.program = program
+        self.batch = batch
+        self._vfn = jax.vmap(program.as_step_fn(), in_axes=(0, 0))
+        self._step = jax.jit(self._vfn, donate_argnums=(0,))
+        self._rolled: dict[int, Callable] = {}
+        self.dispatches = 0
+        # the batched instrumented walk: per-phase vmapped jits (shared per
+        # phase name, like InstrumentedExecutor; the plan cache's pooled
+        # instrumented_fn overrides are unbatched executables, so the
+        # batched walk always uses the phase's own fn)
+        self._fns: dict[str, Callable] = {}
+        self._probes: dict[str, Callable] = {}
+        for ph in program.phases:
+            if ph.name not in self._fns:
+                self._fns[ph.name] = jax.jit(jax.vmap(ph.fn))
+            if ph.probe is not None and ph.name not in self._probes:
+                self._probes[ph.name] = jax.jit(jax.vmap(ph.probe))
+        self._seed = jax.vmap(program.seed)
+        self._finalize = jax.jit(jax.vmap(program.finalize))
+        self.samples = 0
+
+    def _check(self, states, dts) -> None:
+        lead = jax.tree.leaves(states)[0].shape[0]
+        if lead != self.batch or dts.shape != (self.batch,):
+            raise ValueError(
+                f"cohort shape mismatch: executor batch={self.batch}, "
+                f"state lead={lead}, dt shape={dts.shape}")
+
+    def step(self, states, dts):
+        """One timestep for the whole cohort, one dispatch.  Donates
+        ``states``; ``dts`` is the per-session ``(batch,)`` vector."""
+        self._check(states, dts)
+        self.dispatches += 1
+        return self._step(states, dts)
+
+    def run_steps(self, states, dts, n_steps: int):
+        """``n_steps`` cohort timesteps as ONE dispatch.  Returns
+        ``(states, stats)`` with every ``StepStats`` leaf carrying leading
+        ``(n_steps, batch)`` axes.  Donates ``states``; each distinct
+        window length compiles once per cohort shape."""
+        self._check(states, dts)
+        roll = _memoized_roll(self._rolled, self._vfn, n_steps)
+        self.dispatches += 1
+        return roll(states, dts)
+
+    def timed_step(self, states, dts):
+        """One instrumented cohort step.
+
+        Returns ``(states, stats, rows)``: the stacked next state, the
+        stacked per-session ``StepStats``, and one apportioned
+        :class:`PhaseBreakdown` per session (``len(rows) == batch``).
+        Does NOT donate ``states``.
+        """
+        self._check(states, dts)
+        self.samples += 1
+        env = self._seed(states, dts)
+        rows = _timed_phase_walk(self.program, self._fns, self._probes,
+                                 env, self.batch)
+        states, stats = self._finalize(env)
+        return states, stats, [PhaseBreakdown(**row) for row in rows]
 
 
 class ProgramExecutors:
     """The compiled artifacts of one program binding (memoized per
-    ``(alpha, solve_mode, solver_backend)`` by ``PisoSolver``)."""
+    ``(alpha, solve_mode, solver_backend)`` by ``PisoSolver``).  Batched
+    executors are additionally memoized per cohort size — each cohort
+    shape is its own set of XLA programs and its own dispatch counter."""
 
     def __init__(self, program: StepProgram):
         self.program = program
         self.fused = FusedExecutor(program)
         self.instrumented = InstrumentedExecutor(program)
+        self._batched: dict[int, BatchedExecutor] = {}
+
+    def batched(self, batch: int) -> BatchedExecutor:
+        """The cohort executor for ``batch`` stacked sessions (memoized)."""
+        exe = self._batched.get(batch)
+        if exe is None:
+            exe = self._batched[batch] = BatchedExecutor(self.program, batch)
+        return exe
 
 
 def roll_schedule(start: int, n_steps: int, every: int | None,

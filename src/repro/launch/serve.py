@@ -2,10 +2,19 @@
 batched greedy decode.  CPU demo with smoke configs:
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --n-new 16
+
+``--sessions N`` switches to the CFD solver-as-a-service driver instead:
+N concurrent PISO tenants (mixed timestep sizes) advance through the
+engine's cohort-batched ``step_all`` — same-shape sessions stack into
+cohorts and a rolled window of the whole cohort is ONE XLA dispatch
+(``repro.serving.engine.SimulationEngine``):
+
+  python -m repro.launch.serve --sessions 8 --steps 32 --cfd-n 8 --parts 4
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -17,14 +26,88 @@ from repro.models import lm
 from repro.serving.engine import generate
 
 
+def serve_cfd(args) -> None:
+    """Multi-tenant PISO serving: cohort-batched stepping of N sessions."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.controller import ControllerConfig
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+
+    mesh = CavityMesh.cube(args.cfd_n, args.parts)
+    cfg = ControllerConfig(sample_every=max(args.sample_every, 1))
+    steps = args.steps
+    if args.adaptive and steps % cfg.sample_every:
+        # the warm-up request below only compiles the timed request's
+        # window lengths when both start on the same sampling phase, i.e.
+        # when steps is a multiple of the cadence
+        steps += cfg.sample_every - steps % cfg.sample_every
+        print(f"note: rounding --steps up to {steps} (a multiple of "
+              f"--sample-every {cfg.sample_every}) so the compile warm-up "
+              f"covers the timed request's window lengths")
+    eng = SimulationEngine(config=cfg, scan_window=max(args.scan_steps, 1))
+    base_dt = args.co * mesh.h
+    for i in range(args.sessions):
+        # mixed timestep sizes: dt is a traced per-session vector in the
+        # batched program, so the spread costs no extra compilation
+        eng.open_session(f"tenant{i}", mesh, dt=base_dt * (1 + 0.1 * i),
+                         alpha0=args.alpha or None, nu=args.nu,
+                         adaptive=args.adaptive,
+                         solver_backend=args.solver_backend)
+    print(f"opened {args.sessions} sessions, cohorts="
+          f"{[len(g) for g in eng.cohorts().values()]}")
+
+    # compile warm-up outside the timed window: one full request compiles
+    # the same rolled window lengths (the non-adaptive chunking does not
+    # depend on the start step; an adaptive request re-aligns to the same
+    # sampling phase because steps is a cadence multiple, enforced above)
+    eng.step_all(steps)
+    t0 = time.time()
+    eng.step_all(steps)
+    wall = time.time() - t0
+    stats = eng.stats()
+    done = args.sessions * steps
+    print(f"advanced {done} session-steps in {wall:.2f}s "
+          f"({done / wall:.1f} steps/s)")
+    print(f"counters: {stats['counters']}")
+    print(json.dumps(stats["sessions"], indent=2))
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LM architecture (LM serving mode)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--n-new", type=int, default=16)
+    # -- CFD multi-tenant mode (--sessions N) ------------------------------
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="open N concurrent PISO sessions and advance them "
+                         "via cohort-batched step_all (CFD serving mode)")
+    ap.add_argument("--steps", type=int, default=16,
+                    help="timesteps to advance every session")
+    ap.add_argument("--cfd-n", type=int, default=8,
+                    help="cavity cells per axis (CFD mode)")
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--alpha", type=int, default=2,
+                    help="repartitioning ratio (0 = cost-model pick)")
+    ap.add_argument("--nu", type=float, default=0.01)
+    ap.add_argument("--co", type=float, default=0.5, help="CFL number")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="per-session adaptive controllers (sampled "
+                         "instrumented steps feed each tenant's controller)")
+    ap.add_argument("--sample-every", type=int, default=4)
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="rolled window cap (steps per cohort dispatch)")
+    ap.add_argument("--solver-backend", default="auto",
+                    choices=["auto", "fused", "reference"])
     args = ap.parse_args()
+
+    if args.sessions > 0:
+        serve_cfd(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required (or use --sessions N for CFD mode)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = lm.init_params(cfg, jax.random.key(0))

@@ -58,7 +58,16 @@ def start(cfg: ModelConfig, params, prompts: jax.Array, max_len: int,
 
 def generate(cfg: ModelConfig, params, prompts: jax.Array, n_new: int,
              frontend=None) -> jax.Array:
-    """Greedy generation of ``n_new`` tokens.  Returns (B, n_new)."""
+    """Greedy generation of ``n_new`` tokens.  Returns (B, n_new).
+
+    ``n_new=0`` is a pure no-op: no prefill, no decode loop, an empty
+    ``(B, 0)`` token block (the prefill argmax used to be appended
+    unconditionally, returning one token nobody asked for).
+    """
+    if n_new < 0:
+        raise ValueError(f"n_new must be >= 0, got {n_new}")
+    if n_new == 0:
+        return jnp.zeros((prompts.shape[0], 0), jnp.int32)
     max_len = prompts.shape[1] + n_new + (
         cfg.frontend_len if cfg.frontend == "vision_stub" else 0)
     state, first = start(cfg, params, prompts, max_len, frontend)
@@ -84,6 +93,7 @@ class SimulationSession:
     controller: RepartitionController
     state: object                       # PisoState
     dt: float
+    mesh_fp: str = ""                   # structural mesh hash (cohort key)
     adaptive: bool = True
     steps_done: int = 0
 
@@ -95,20 +105,38 @@ class SimulationEngine:
     is strictly per session; the :class:`PlanCache` — symbolic plans plus the
     compiled-update pool — is shared, which is safe because plans are
     immutable and keyed by ``(mesh fingerprint, alpha, target)``.
+
+    Sessions advance either one at a time (:meth:`step_session`) or — the
+    throughput path — in **cohorts** (:meth:`step_all`): open sessions
+    whose compiled program is interchangeable (same mesh structure, alpha,
+    solve mode, solver backend, viscosity) are stacked along a leading
+    session axis and advance through ONE batched XLA dispatch per rolled
+    window instead of one per tenant, the batching cure for the
+    undersubscribed-dispatch regime (one tenant per launch collapses
+    device utilization exactly like the paper's undersubscribed GPU).
     """
 
     def __init__(self, plan_cache: PlanCache | None = None,
-                 config: ControllerConfig = ControllerConfig(),
+                 config: ControllerConfig | None = None,
                  scan_window: int = 8):
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.plan_cache = PlanCache() if plan_cache is None else plan_cache
-        self.config = config
+        # per-instance default: a shared ControllerConfig() *instance*
+        # default argument would alias every engine constructed without an
+        # explicit config to one object
+        self.config = ControllerConfig() if config is None else config
         if scan_window < 1:
             raise ValueError("scan_window must be >= 1")
         # max steps per rolled lax.scan dispatch: bounds the set of compiled
         # window lengths (each distinct length is its own XLA program)
         self.scan_window = scan_window
         self.sessions: dict[str, SimulationSession] = {}
+        # dispatch accounting for the two stepping paths: "solo" counts
+        # single-session fused launches, "cohort" one launch per batched
+        # cohort window (the quantity step_all exists to shrink)
+        self.counters = {"solo_dispatches": 0, "cohort_dispatches": 0,
+                         "sample_steps": 0, "rolled_windows": 0,
+                         "scheduling_rounds": 0}
 
     def open_session(self, sid: str, mesh, *, dt: float,
                      alpha0: int | None = None, nu: float = 0.01,
@@ -126,6 +154,7 @@ class SimulationEngine:
         per-tenant Krylov iteration backend (:mod:`repro.solvers.ops`);
         a fused session models the fused bytes/iter term and keys its
         cached artifacts separately too."""
+        from repro.core.repartition import mesh_fingerprint
         from repro.fvm.piso import PisoSolver
 
         if sid in self.sessions:
@@ -144,6 +173,7 @@ class SimulationEngine:
         sess = SimulationSession(sid=sid, solver=solver,
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
+                                 mesh_fp=mesh_fingerprint(mesh),
                                  adaptive=adaptive)
         self.sessions[sid] = sess
         return sess
@@ -174,23 +204,151 @@ class SimulationEngine:
         stats = None
         for is_sample, chunk in roll_schedule(sess.steps_done, n_steps,
                                               every, cap=self.scan_window):
-            if is_sample:
-                sess.state, stats, sample = sess.solver.timed_step(
-                    sess.state, sess.dt)
-                alpha = sess.controller.step(sample)
-                if alpha != sess.solver.alpha:
-                    sess.solver.rebind_alpha(alpha)
-            else:
-                sess.state, window = sess.solver.run_steps(
-                    sess.state, sess.dt, chunk)
-                stats = jax.tree.map(lambda a: a[-1], window)
-            sess.steps_done += chunk
+            stats = self._advance_one(sess, is_sample, chunk)
         return stats
+
+    # ---- cohort-batched stepping ----------------------------------------
+    def _advance_one(self, sess: SimulationSession, is_sample: bool,
+                     chunk: int):
+        """Advance one session through one schedule stretch (solo path)."""
+        if is_sample:
+            sess.state, stats, sample = sess.solver.timed_step(
+                sess.state, sess.dt)
+            self.counters["sample_steps"] += 1
+            alpha = sess.controller.step(sample)
+            if alpha != sess.solver.alpha:
+                sess.solver.rebind_alpha(alpha)
+        else:
+            sess.state, window = sess.solver.run_steps(
+                sess.state, sess.dt, chunk)
+            stats = jax.tree.map(lambda a: a[-1], window)
+            self.counters["solo_dispatches"] += 1
+            self.counters["rolled_windows"] += 1
+        sess.steps_done += chunk
+        return stats
+
+    def _cohort_key(self, sess: SimulationSession) -> tuple:
+        """Program-interchangeability key: sessions mapping to equal keys
+        step through ONE batched executor.
+
+        ``(mesh fingerprint, alpha, solve_mode, solver_backend)`` is the
+        compiled-program identity (plus ``nu``/dtype, which the program
+        closes over); adaptive sessions additionally carry their sampling
+        phase (``steps_done mod sample_every``) so every cohort member
+        agrees on where the next instrumented sample falls — sessions out
+        of phase simply land in sibling cohorts until they re-align.
+        """
+        s = sess.solver
+        phase = (sess.steps_done % self.config.sample_every
+                 if sess.adaptive else -1)
+        return (sess.mesh_fp, s.alpha, s.solve_mode, s.solver_backend,
+                s.nu, str(s.dtype), sess.adaptive, phase)
+
+    def step_all(self, n_steps: int = 1, sids=None) -> dict:
+        """Advance every open session (or ``sids``) by ``n_steps`` through
+        cohort-batched dispatches; returns the last ``StepStats`` per sid.
+
+        Scheduling runs in rounds: sessions are grouped by
+        :meth:`_cohort_key`, each cohort's ``PisoState`` leaves are stacked
+        along a leading session axis (``repro.fvm.piso.stack_states``) and
+        the cohort advances through one schedule stretch of the shared
+        ``roll_schedule`` cadence via the leader's
+        :meth:`~repro.fvm.piso.PisoSolver.batched_executor` — a rolled
+        window of S tenants is ONE XLA dispatch instead of S.  Per-session
+        ``dt`` rides along as a traced vector, so mixed-timestep tenants
+        share one compiled program.
+
+        Controllers stay independent: a sampled stretch runs the batched
+        instrumented walk, unstacks its per-session ``PhaseBreakdown``
+        rows into each tenant's controller, and a session whose controller
+        switches alpha rebinds immediately — the changed cohort key
+        migrates it to its new cohort on the next scheduling round.
+        Singleton cohorts and full-mesh sessions (whose ``shard_map``
+        solve pins a device layout that cannot be vmapped over sessions)
+        take the solo path inside the same schedule.
+        """
+        from repro.fvm.step_program import roll_schedule
+
+        if n_steps < 0:
+            raise ValueError(f"n_steps must be >= 0, got {n_steps}")
+        sids = list(self.sessions if sids is None else sids)
+        missing = [sid for sid in sids if sid not in self.sessions]
+        if missing:
+            raise KeyError(f"unknown session(s) {missing}")
+        todo = dict.fromkeys(sids, n_steps)
+        last: dict[str, object] = {}
+        while any(r > 0 for r in todo.values()):
+            self.counters["scheduling_rounds"] += 1
+            cohorts: dict[tuple, list[str]] = {}
+            for sid, rem in todo.items():
+                if rem > 0:
+                    key = self._cohort_key(self.sessions[sid])
+                    cohorts.setdefault(key, []).append(sid)
+            for group in cohorts.values():
+                lead = self.sessions[group[0]]
+                rem = min(todo[sid] for sid in group)
+                every = self.config.sample_every if lead.adaptive else None
+                # one stretch of the shared cadence per round — the cohort
+                # key pins the sampling phase, so the stretch is valid for
+                # every member regardless of absolute steps_done
+                is_sample, chunk = next(roll_schedule(
+                    lead.steps_done, rem, every, cap=self.scan_window))
+                if len(group) == 1 or lead.solver.solve_mode == "full_mesh":
+                    for sid in group:
+                        last[sid] = self._advance_one(self.sessions[sid],
+                                                      is_sample, chunk)
+                else:
+                    self._advance_cohort(group, is_sample, chunk, last)
+                for sid in group:
+                    todo[sid] -= chunk
+        return last
+
+    def _advance_cohort(self, group, is_sample: bool, chunk: int,
+                        last) -> None:
+        """Advance one multi-session cohort through one schedule stretch."""
+        from repro.fvm.piso import stack_states, unstack_states
+
+        sessions = [self.sessions[sid] for sid in group]
+        lead = sessions[0]
+        exe = lead.solver.batched_executor(len(group))
+        states = stack_states([s.state for s in sessions])
+        dts = jnp.asarray([s.dt for s in sessions], lead.solver.dtype)
+        if is_sample:
+            states, stats, rows = exe.timed_step(states, dts)
+            self.counters["sample_steps"] += 1
+            per_stats = [jax.tree.map(lambda a, i=i: a[i], stats)
+                         for i in range(len(group))]
+        else:
+            states, window = exe.run_steps(states, dts, chunk)
+            self.counters["cohort_dispatches"] += 1
+            self.counters["rolled_windows"] += 1
+            rows = None
+            per_stats = [jax.tree.map(lambda a, i=i: a[-1, i], window)
+                         for i in range(len(group))]
+        for i, (sess, state) in enumerate(zip(sessions,
+                                              unstack_states(states))):
+            sess.state = state
+            sess.steps_done += chunk
+            last[sess.sid] = per_stats[i]
+            if rows is not None:
+                alpha = sess.controller.step(rows[i])
+                if alpha != sess.solver.alpha:
+                    # rebind now; the new cohort key migrates the session
+                    # on the next scheduling round
+                    sess.solver.rebind_alpha(alpha)
 
     def close_session(self, sid: str) -> dict:
         """Evict the tenant; returns its final controller stats."""
         sess = self.sessions.pop(sid)
         return sess.controller.stats()
+
+    def cohorts(self) -> dict:
+        """The current cohort map: cohort key -> open session ids (what
+        the next ``step_all`` scheduling round would batch together)."""
+        out: dict[tuple, list[str]] = {}
+        for sid, sess in self.sessions.items():
+            out.setdefault(self._cohort_key(sess), []).append(sid)
+        return out
 
     def stats(self) -> dict:
         return {
@@ -201,5 +359,7 @@ class SimulationEngine:
                       "switches": len(s.controller.switches)}
                 for sid, s in self.sessions.items()
             },
+            "cohorts": [len(g) for g in self.cohorts().values()],
+            "counters": dict(self.counters),
             "plan_cache": self.plan_cache.stats(),
         }

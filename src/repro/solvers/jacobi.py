@@ -2,13 +2,28 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-__all__ = ["jacobi_preconditioner"]
+__all__ = ["jacobi_preconditioner", "safe_jacobi_inverse"]
+
+
+def safe_jacobi_inverse(diag: jax.Array) -> jax.Array:
+    """``1/diag`` with zero entries inverting to a safe 0, not inf.
+
+    Zero diagonal entries are the ragged-tail zero padding (a part size
+    not divisible by the kernel row block pads all-zero rows); their
+    residuals are exactly 0, but ``inf * 0 = NaN`` — one unguarded Jacobi
+    apply poisons every global reduction of the solve.  The inner
+    ``where`` keeps the division itself finite so no spurious inf is ever
+    materialized.
+    """
+    nonzero = diag != 0
+    return jnp.where(nonzero, 1.0 / jnp.where(nonzero, diag, 1.0), 0.0)
 
 
 def jacobi_preconditioner(diag: jax.Array):
     """Return M(r) = r / diag.  ``diag``: stacked (P, m) matrix diagonal."""
-    inv = 1.0 / diag
+    inv = safe_jacobi_inverse(diag)
 
     def M(r: jax.Array) -> jax.Array:
         return r * inv

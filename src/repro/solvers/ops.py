@@ -122,14 +122,20 @@ def fused_stacked_ops(bands: jax.Array, diag: jax.Array, *,
     """Fused-Pallas backend on stacked DIA bands ``(P, nb, m)``.
 
     ``diag`` is the stacked matrix diagonal (P, m); the Jacobi inverse is
-    precomputed once and folded into the fused update kernel.
+    precomputed once and folded into the fused update kernel.  Zero
+    diagonal entries (the ragged-tail zero padding: a part size not
+    divisible by ``block_rows`` pads rows whose diag is exactly 0.0)
+    invert to a safe 0 — a bare ``1/diag`` would carry ``inf`` into the
+    padded lanes, where the first fused Jacobi apply turns ``inf * 0``
+    into NaN and poisons every global reduction of the solve.
     """
     from repro.kernels.krylov_fused.ops import (fused_matvec_dot,
                                                 fused_update_step)
     from repro.kernels.spmv_dia.ops import spmv_dia_pallas
     from repro.kernels.spmv_dia.spmv_dia import pick_block_rows
+    from repro.solvers.jacobi import safe_jacobi_inverse
 
-    inv = 1.0 / diag
+    inv = safe_jacobi_inverse(diag)
     block_rows = block_rows or pick_block_rows(bands.shape[-1])
 
     def matvec(x):

@@ -94,6 +94,29 @@ def test_inverse_model_alpha_star_monotone_in_assembly_share():
 # hysteresis / switching
 # ---------------------------------------------------------------------------
 
+def test_unstacked_cohort_rows_replay_like_solo_samples():
+    """Cohort serving feeds each controller the per-session rows the
+    batched instrumented walk unstacked (engine `_advance_cohort`): a
+    controller ingesting such a row sequence behaves exactly like one fed
+    the identical samples solo — same alpha trajectory, same switches,
+    same calibration state."""
+    rng = np.random.default_rng(11)
+    truth_kw = {"assembly_scale": 3.0}
+    ctl_a, truth = make_controller(truth_kw, warmup=1, patience=2,
+                                   min_dwell=2)
+    rows = [measured(truth, ctl_a.alpha, rng, sigma=0.02)
+            for _ in range(12)]
+    for row in rows:
+        ctl_a.step(row)
+    ctl_b, _ = make_controller(truth_kw, warmup=1, patience=2, min_dwell=2)
+    for row in rows:
+        ctl_b.step(row)
+    assert ctl_b.alpha == ctl_a.alpha
+    assert [e.new_alpha for e in ctl_b.switches] == \
+        [e.new_alpha for e in ctl_a.switches]
+    assert ctl_b.calibration.scales == ctl_a.calibration.scales
+
+
 def test_no_thrash_under_noise():
     """Noisy measurements around a stable optimum: at most one switch
     (the initial correction), never oscillation."""

@@ -192,6 +192,74 @@ def test_fused_matvec_dot_and_update_step_global_reductions():
 
 
 # ---------------------------------------------------------------------------
+# regression: zero-padded diagonal entries must not NaN-poison the solve
+# ---------------------------------------------------------------------------
+def test_fused_ops_zero_diag_safe_reciprocal():
+    """``fused_stacked_ops`` guards its Jacobi inverse: zero diagonal
+    entries (the ragged-tail zero padding) invert to 0, not inf — an
+    unguarded ``1/diag`` made the first fused Jacobi apply compute
+    ``inf * 0 = NaN`` in the padded lanes and poison the global dots."""
+    diag = jnp.array([[2.0, 4.0, 0.0, 0.0]])   # two zero-padded rows
+    bands = jnp.zeros((1, 3, 4)).at[:, 1, :].set(diag)
+    ops = fused_stacked_ops(bands, diag, offsets=(-1, 0, 1), plane=1)
+    z = ops.precond(jnp.array([[1.0, 1.0, 0.0, 0.0]]))
+    np.testing.assert_allclose(np.asarray(z), [[0.5, 0.25, 0.0, 0.0]])
+    # the fused update step's dots stay finite too (r tail is exactly 0,
+    # as the padding contract guarantees)
+    r = jnp.array([[1.0, 1.0, 0.0, 0.0]])
+    zero = jnp.zeros((1, 4))
+    _, _, z2, rz, rr = ops.fused_step(zero, r, zero, zero, jnp.asarray(0.3))
+    assert np.isfinite(np.asarray(z2)).all()
+    assert np.isfinite(float(rz)) and np.isfinite(float(rr))
+
+
+def test_cg_fused_ragged_zero_padded_part():
+    """A zero-padded ragged part (size not divisible by ``block_rows``)
+    solves to the reference solution with finite iterates: padded rows are
+    all-zero (zero bands, zero rhs, zero diag), which is exactly the state
+    the ragged-tail padding of PR 3 produces."""
+    mesh = CavityMesh.cube(4, 2)
+    layout, buffers, diag = laplacian_buffers(mesh)
+    A_dense = global_dense(layout, buffers)
+    plan = plan_for_mesh(mesh, 2)                 # one coarse part, m=128
+    grouped = jnp.asarray(buffers).reshape(1, 2, -1)
+    bands = update_device_direct(plan, grouped, target="dia")
+    offsets = tuple(int(o) for o in plan.dia_offsets)
+
+    rng = np.random.default_rng(7)
+    x_true = rng.standard_normal(mesh.n_cells_global)
+    b = (A_dense @ x_true).reshape(1, -1)
+
+    pad = 37                                      # 128 + 37 = 165: ragged
+    m_pad = plan.m_coarse + pad
+    bands_p = jnp.asarray(np.pad(np.asarray(bands), ((0, 0), (0, 0),
+                                                     (0, pad))))
+    diag_p = jnp.asarray(np.pad(np.asarray(diag).reshape(1, -1),
+                                ((0, 0), (0, pad))))
+    b_p = jnp.asarray(np.pad(b, ((0, 0), (0, pad))))
+    assert m_pad % 64 != 0 and float(diag_p[0, -1]) == 0.0
+
+    ops = fused_stacked_ops(bands_p, diag_p, offsets=offsets,
+                            plane=plan.plane, block_rows=64)
+    res = cg(ops, b_p, jnp.zeros_like(b_p), tol=1e-10)
+    x = np.asarray(res.x)
+    assert np.isfinite(x).all(), "NaN-poisoned solve"
+    np.testing.assert_allclose(x[0, :plan.m_coarse], x_true, rtol=0,
+                               atol=1e-6)
+    np.testing.assert_allclose(x[0, plan.m_coarse:], 0.0)   # padding inert
+
+    # same solve through the reference backend (jacobi_preconditioner is
+    # guarded by the same safe_jacobi_inverse): identical iteration counts
+    def A(v):
+        return spmv_dia(bands_p, v, offsets=offsets, plane=plan.plane)
+
+    res_ref = cg(reference_ops(A, jacobi_preconditioner(diag_p)), b_p,
+                 jnp.zeros_like(b_p), tol=1e-10)
+    assert int(res.iters) == int(res_ref.iters)
+    assert float(jnp.abs(res.x - res_ref.x).max()) <= 1e-10
+
+
+# ---------------------------------------------------------------------------
 # regression: cond carries the residual norm — no reduction per check
 # ---------------------------------------------------------------------------
 _REDUCTIONS = {"dot_general", "reduce_sum", "reduce", "psum"}

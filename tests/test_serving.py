@@ -2,10 +2,14 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs.registry import get_smoke_config
+from repro.core.controller import ControllerConfig
+from repro.fvm.mesh import CavityMesh
 from repro.models import lm
-from repro.serving.engine import generate, start, serve_step, ServeState
+from repro.serving.engine import (SimulationEngine, generate, start,
+                                  serve_step, ServeState)
 from repro.serving.repartition_kv import KVRepartitionPlan
 
 
@@ -44,6 +48,20 @@ def test_generate_rwkv_state_path():
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))[:, None]
         np.testing.assert_array_equal(np.asarray(out)[:, i:i + 1], nxt)
         seq = np.concatenate([seq, nxt], axis=1)
+
+
+def test_generate_zero_tokens_is_empty():
+    """generate(n_new=0) is a no-op: shape (B, 0), no decode loop (the
+    prefill argmax used to be appended unconditionally, returning one
+    token nobody asked for)."""
+    cfg = get_smoke_config("granite-3-8b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    prompts = jnp.zeros((3, 5), jnp.int32)
+    out = generate(cfg, params, prompts, 0)
+    assert out.shape == (3, 0)
+    assert out.dtype == jnp.int32
+    with pytest.raises(ValueError, match="n_new"):
+        generate(cfg, params, prompts, -1)
 
 
 def test_kv_repartition_plan_blockwise_ownership():
@@ -118,3 +136,141 @@ def test_engine_non_adaptive_rolls_whole_request():
     assert sess.solver._exec.instrumented.calls == 0
     assert sess.solver._exec.fused.dispatches == 1  # one rolled window of 5
     assert sess.steps_done == 5
+
+
+# ---------------------------------------------------------------------------
+# cohort-batched stepping (step_all)
+# ---------------------------------------------------------------------------
+
+def _open_mixed_dt(eng, n, mesh, **kw):
+    dts = [1e-3 * (1.0 + 0.5 * i) for i in range(n)]
+    for i, dt in enumerate(dts):
+        eng.open_session(f"s{i}", mesh, dt=dt, alpha0=2, **kw)
+    return [f"s{i}" for i in range(n)]
+
+
+@pytest.mark.parametrize("n_sessions", [2, 4])
+def test_step_all_matches_sequential_step_session(n_sessions):
+    """The acceptance bar: S mixed-dt same-shape sessions advanced through
+    cohort-batched step_all match sequential per-session step_session runs
+    to <= 1e-10 with identical Krylov iteration counts, and a cohort
+    rolled window is ONE dispatch (not S)."""
+
+    mesh = CavityMesh.cube(4, 4)
+    n_steps = 7
+    cfg = ControllerConfig(sample_every=3, warmup=1, alphas=(1, 2, 4))
+
+    seq = SimulationEngine(config=cfg)
+    sids = _open_mixed_dt(seq, n_sessions, mesh)
+    seq_stats = {sid: seq.step_session(sid, n_steps) for sid in sids}
+
+    bat = SimulationEngine(config=cfg)
+    _open_mixed_dt(bat, n_sessions, mesh)
+    bat_stats = bat.step_all(n_steps)
+
+    for sid in sids:
+        a, b = seq.sessions[sid].state, bat.sessions[sid].state
+        np.testing.assert_allclose(np.asarray(b.U), np.asarray(a.U),
+                                   atol=1e-10)
+        np.testing.assert_allclose(np.asarray(b.p), np.asarray(a.p),
+                                   atol=1e-10)
+        # identical Krylov iteration counts on the last step of the window
+        assert [int(i) for i in bat_stats[sid].p_iters] == \
+            [int(i) for i in seq_stats[sid].p_iters]
+        assert int(bat_stats[sid].mom_iters) == \
+            int(seq_stats[sid].mom_iters)
+        assert bat.sessions[sid].steps_done == n_steps
+        # the controllers saw the same sampled subsequence -> same alpha
+        assert bat.sessions[sid].controller.alpha == \
+            seq.sessions[sid].controller.alpha
+        assert bat.sessions[sid].controller.calibration.n_obs == \
+            seq.sessions[sid].controller.calibration.n_obs
+
+    # dispatch accounting: steps 0,3,6 sampled; stretches 1-2 and 4-5 are
+    # each ONE cohort dispatch (the sequential path pays S each)
+    assert bat.counters["cohort_dispatches"] == 2
+    assert bat.counters["solo_dispatches"] == 0
+    assert bat.counters["sample_steps"] == 3
+    assert seq.counters["solo_dispatches"] == 2 * n_sessions
+
+
+def test_step_all_one_dispatch_per_cohort_window():
+    """A non-adaptive cohort of 4 advancing one rolled 8-step window costs
+    exactly ONE XLA dispatch (the CI acceptance assertion, in-process)."""
+    mesh = CavityMesh.cube(4, 4)
+    eng = SimulationEngine(scan_window=8)
+    _open_mixed_dt(eng, 4, mesh, adaptive=False)
+    eng.step_all(8)
+    assert eng.counters["cohort_dispatches"] == 1
+    assert eng.counters["solo_dispatches"] == 0
+    assert eng.counters["sample_steps"] == 0
+    # the batched executor itself agrees, and is memoized per cohort shape
+    lead = eng.sessions["s0"].solver
+    assert lead._exec._batched[4].dispatches == 1
+    assert lead.batched_executor(4) is lead._exec._batched[4]
+
+
+def test_step_all_cohort_keying_and_migration():
+    """Sessions with different alpha land in different cohorts; a rebind
+    migrates the session to its new cohort on the next scheduling round."""
+    mesh = CavityMesh.cube(4, 4)
+    eng = SimulationEngine()
+    _open_mixed_dt(eng, 3, mesh, adaptive=False)
+    eng.open_session("odd", mesh, dt=1e-3, alpha0=4, adaptive=False)
+    groups = sorted(len(g) for g in eng.cohorts().values())
+    assert groups == [1, 3]
+
+    eng.step_all(4)
+    assert eng.counters["cohort_dispatches"] == 1   # the 3-cohort
+    assert eng.counters["solo_dispatches"] == 1     # the singleton
+
+    # a controller switch re-keys the session: rebind s0 to alpha=4 and
+    # the cohorts regroup 2+2 on the next round
+    eng.sessions["s0"].solver.rebind_alpha(4)
+    groups = sorted(len(g) for g in eng.cohorts().values())
+    assert groups == [2, 2]
+    before = dict(eng.counters)
+    eng.step_all(4)
+    assert eng.counters["cohort_dispatches"] - before["cohort_dispatches"] \
+        == 2  # both pairs batched
+
+
+def test_step_all_adaptive_phase_alignment():
+    """Adaptive sessions whose sampling grids are out of phase split into
+    sibling cohorts (a shared batched sample would misalign their
+    cadences) and re-merge once aligned."""
+    mesh = CavityMesh.cube(4, 4)
+    cfg = ControllerConfig(sample_every=4, warmup=10, alphas=(1, 2, 4))
+    eng = SimulationEngine(config=cfg)
+    _open_mixed_dt(eng, 2, mesh)
+    eng.step_session("s0", 1)           # s0 now one step ahead (phase 1)
+    assert len(eng.cohorts()) == 2
+    eng.step_all(3, sids=["s0"])        # re-align: both at phase 0
+    assert len(eng.cohorts()) == 1
+    eng.step_all(4)
+    assert eng.sessions["s0"].steps_done == 8
+    assert eng.sessions["s1"].steps_done == 4
+
+
+def test_step_all_input_validation():
+    eng = SimulationEngine()
+    with pytest.raises(KeyError):
+        eng.step_all(1, sids=["nope"])
+    with pytest.raises(ValueError):
+        eng.step_all(-1)
+    assert eng.step_all(0) == {}
+
+
+def test_engine_default_config_not_aliased():
+    """Regression: a ControllerConfig() *instance* default argument made
+    every engine (and controller) constructed without an explicit config
+    share one object."""
+    from repro.core.controller import RepartitionController
+    from repro.core.cost_model import CostModel, TPU_V5E
+
+    e1, e2 = SimulationEngine(), SimulationEngine()
+    assert e1.config is not e2.config
+    cm = CostModel(TPU_V5E, n_dofs=1000)
+    c1 = RepartitionController(cm, n_cpu=4, n_gpu=1, alpha0=2)
+    c2 = RepartitionController(cm, n_cpu=4, n_gpu=1, alpha0=2)
+    assert c1.config is not c2.config

@@ -12,8 +12,10 @@ import pytest
 
 from repro.core.cost_model import PhaseBreakdown
 from repro.fvm.mesh import CavityMesh
-from repro.fvm.piso import PisoSolver
+from repro.fvm.piso import PisoSolver, stack_states, unstack_states
 from repro.fvm.step_program import Phase, StepProgram
+
+from hyp_compat import given, settings, st
 
 DT = 1e-3
 
@@ -204,6 +206,56 @@ def test_roll_schedule_cadence():
         list(roll_schedule(0, 5, 0))
 
 
+@settings(max_examples=200, deadline=None)
+@given(start=st.integers(min_value=0, max_value=60),
+       n_steps=st.integers(min_value=1, max_value=40),
+       every=st.one_of(st.none(), st.integers(min_value=1, max_value=9)),
+       cap=st.one_of(st.none(), st.integers(min_value=1, max_value=7)))
+def test_roll_schedule_properties(start, n_steps, every, cap):
+    """Invariants of the engine cadence for any (start, n_steps, every,
+    cap): chunks cover exactly n_steps, samples land exactly on the
+    absolute grid, the cap bounds every rolled stretch, and every=None is
+    pure rolled stretches."""
+    from repro.fvm.step_program import roll_schedule
+
+    stretches = list(roll_schedule(start, n_steps, every, cap=cap))
+    # full cover, in order, no empty stretches
+    assert sum(c for _, c in stretches) == n_steps
+    assert all(c >= 1 for _, c in stretches)
+
+    # replay the schedule against the absolute step grid
+    pos = start
+    for is_sample, chunk in stretches:
+        if is_sample:
+            assert every is not None and chunk == 1
+            assert pos % every == 0, (pos, every)
+        else:
+            if cap is not None:
+                assert chunk <= cap
+            if every is not None:
+                # a rolled stretch never crosses (or touches) a sample
+                # point except at its start boundary
+                assert all((pos + k) % every != 0 for k in range(chunk)), \
+                    (pos, chunk, every)
+        pos += chunk
+    assert pos == start + n_steps
+
+    if every is None:
+        assert not any(s for s, _ in stretches)
+        if cap is None:
+            # a single uncapped stretch
+            assert stretches == [(False, n_steps)]
+        else:
+            # ceil(n/cap) capped stretches, all but the last full
+            assert len(stretches) == -(-n_steps // cap)
+            assert all(c == cap for _, c in stretches[:-1])
+    else:
+        # every sample point inside [start, start+n_steps) is sampled
+        n_samples = sum(1 for k in range(n_steps)
+                        if (start + k) % every == 0)
+        assert sum(1 for s, _ in stretches if s) == n_samples
+
+
 def test_run_scan_steps_cap_concatenates_windows():
     """run(scan_steps=k) chunks the roll into capped windows (bounded
     compile cache) and concatenates the per-step stats — numerically the
@@ -218,3 +270,91 @@ def test_run_scan_steps_cap_concatenates_windows():
     assert stats_b.p_iters.shape == (5, 2)
     assert stats_b.p_iters.tolist() == stats_a.p_iters.tolist()
     assert sorted(b._exec.fused._rolled) == [1, 2]  # windows 2+2+1
+
+
+# ---------------------------------------------------------------------------
+# the batched (cohort) executor
+# ---------------------------------------------------------------------------
+
+def test_stack_unstack_round_trip():
+    s = PisoSolver(CavityMesh.cube(4, 2), alpha=2)
+    states = [s.initial_state() for _ in range(3)]
+    stacked = stack_states(states)
+    assert stacked.U.shape == (3,) + states[0].U.shape
+    back = unstack_states(stacked)
+    assert len(back) == 3
+    for a, b in zip(back, states):
+        np.testing.assert_array_equal(np.asarray(a.U), np.asarray(b.U))
+    with pytest.raises(ValueError):
+        stack_states([])
+    with pytest.raises(ValueError):
+        unstack_states(stacked, 2)
+
+
+def test_batched_executor_matches_solo_runs():
+    """A 3-session cohort through the batched scan-rolled executor matches
+    each session's solo run (<= 1e-10, identical per-step Krylov iteration
+    counts) with ONE dispatch for the whole cohort window."""
+    mesh = CavityMesh.cube(4, 2)
+    solver = PisoSolver(mesh, alpha=2)
+    dts = [1e-3, 2e-3, 5e-4]
+    n_steps = 4
+
+    exe = solver.batched_executor(3)
+    states = stack_states([solver.initial_state() for _ in dts])
+    out, stats = exe.run_steps(states, jnp.asarray(dts, solver.dtype),
+                               n_steps)
+    assert exe.dispatches == 1
+    assert stats.p_iters.shape == (n_steps, 3, 2)
+
+    for i, dt in enumerate(dts):
+        solo = PisoSolver(mesh, alpha=2)
+        st, w = solo.run_steps(solo.initial_state(), dt, n_steps)
+        got = jax.tree.map(lambda a, i=i: a[i], out)
+        np.testing.assert_allclose(np.asarray(got.U), np.asarray(st.U),
+                                   atol=1e-10)
+        np.testing.assert_allclose(np.asarray(got.p), np.asarray(st.p),
+                                   atol=1e-10)
+        assert stats.p_iters[:, i].tolist() == w.p_iters.tolist()
+        assert stats.mom_iters[:, i].tolist() == w.mom_iters.tolist()
+
+
+def test_batched_executor_donates_and_checks_shapes():
+    solver = PisoSolver(CavityMesh.cube(4, 2), alpha=2)
+    exe = solver.batched_executor(2)
+    states = stack_states([solver.initial_state(), solver.initial_state()])
+    dts = jnp.asarray([1e-3, 2e-3], solver.dtype)
+    out, _ = exe.step(states, dts)
+    assert states.U.is_deleted() and not out.U.is_deleted()
+    # cohort-shape mismatches fail loudly, before tracing
+    with pytest.raises(ValueError, match="cohort shape"):
+        exe.step(out, jnp.asarray([1e-3], solver.dtype))
+    three = stack_states([solver.initial_state() for _ in range(3)])
+    with pytest.raises(ValueError, match="cohort shape"):
+        exe.step(three, jnp.asarray([1e-3] * 3, solver.dtype))
+    with pytest.raises(ValueError):
+        solver.batched_executor(0)
+
+
+def test_batched_timed_step_apportions_rows():
+    """The batched instrumented walk returns one PhaseBreakdown row per
+    session: apportioned phase walls (cohort wall / S), per-session halo
+    share from each session's own CG iteration count, stacked StepStats."""
+    solver = PisoSolver(CavityMesh.cube(4, 2), alpha=2)
+    exe = solver.batched_executor(2)
+    states = stack_states([solver.initial_state(), solver.initial_state()])
+    dts = jnp.asarray([1e-3, 2e-3], solver.dtype)
+    out, stats, rows = exe.timed_step(states, dts)
+    assert exe.samples == 1
+    assert len(rows) == 2
+    for row in rows:
+        assert isinstance(row, PhaseBreakdown)
+        assert row.total > 0.0
+        assert min(row.assembly, row.update, row.halo, row.solve) >= 0
+    assert stats.p_iters.shape == (2, 2)   # (S, n_correctors)
+    assert not states.U.is_deleted()       # instrumented path: no donation
+    # numerics match the solo instrumented walk
+    solo = PisoSolver(CavityMesh.cube(4, 2), alpha=2)
+    st, _, _ = solo.timed_step(solo.initial_state(), 1e-3)
+    np.testing.assert_allclose(np.asarray(out.U[0]), np.asarray(st.U),
+                               atol=1e-10)
