@@ -20,9 +20,23 @@ This figure measures, at S ∈ {1, 4, 16} mixed-dt sessions:
   per-step pressure-CG iteration counts (the acceptance bar: batching
   must not perturb any tenant's trajectory).
 
-``--dry-run`` shrinks the mesh, keeps S ∈ {1, 4} and writes
-``BENCH_engine.json`` so CI can assert that a cohort of 4 same-shape
-sessions advancing one rolled 8-step window really is a single dispatch.
+``--arrivals`` adds the open-loop serving cells: S ∈ {64, 256} sessions
+of a heterogeneous size-class mesh mix arrive as a seeded Poisson stream
+and are driven to completion by the continuous-batching
+`repro.serving.scheduler.EngineScheduler` (size-class cohorts, deadline
+preemption).  These cells report per-priority-class p50/p99 session-step
+latency alongside throughput, the scheduler dispatch count (strictly
+below the session count when co-batching works) and the number of
+multi-session cohorts formed.  One engine is shared across the arrival
+cells with `reset_stats()` between configs, so each cell's counters are
+per-config.
+
+``--dry-run`` shrinks the mesh, keeps S ∈ {1, 4} (arrivals: S = 64) and
+writes ``BENCH_engine.json`` so CI can assert that a cohort of 4
+same-shape sessions advancing one rolled 8-step window really is a
+single dispatch — and, with ``--arrivals``, that the heterogeneous mix
+co-batches (≥ 2 multi-session cohorts, dispatches < sessions) with
+p50/p99 fields present per priority class.
 """
 from __future__ import annotations
 
@@ -32,6 +46,7 @@ import pathlib
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 
@@ -42,9 +57,88 @@ def _open_sessions(eng, n, mesh, dts):
     return [f"s{i}" for i in range(n)]
 
 
+def run_arrivals(n: int = 8, parts: int = 4, window: int = 8,
+                 session_counts=(64, 256), steps: int | None = None,
+                 arrival_rate: float = 50.0, deadline_frac: float = 0.25,
+                 deadline_ms: float = 50.0, seed: int = 0,
+                 dry_run: bool = False) -> list[dict]:
+    """Open-loop serving cells: Poisson arrivals of a heterogeneous
+    size-class mix through the continuous-batching EngineScheduler."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+    from repro.serving.scheduler import (BULK, DEADLINE, EngineScheduler,
+                                         SessionSpec)
+
+    if dry_run:
+        n = min(n, 4)
+        session_counts = tuple(s for s in session_counts if s <= 64)
+    steps = window if steps is None else steps
+
+    # the heterogeneous tenant mix: one shared per-part slab structure
+    # (nx = ny = n, nzl slabs of n x n x nzl cells), slab counts spanning
+    # two power-of-two size classes so padding has real work to do
+    nzl = max(1, n // parts)
+    mix = sorted({max(2, parts // 2), max(2, 3 * parts // 4), parts})
+    meshes = [CavityMesh(nx=n, ny=n, nz=nzl * p, n_parts=p, h=0.1 / n)
+              for p in mix]
+
+    # ONE engine across every arrival cell, reset_stats() between configs:
+    # counters and latency samples are per-config, compiled cohort
+    # executables stay warm (exactly the multi-config accounting fix)
+    eng = SimulationEngine(scan_window=window, lane_classes=True)
+    cells = []
+    for S in session_counts:
+        eng.reset_stats()
+        sched = EngineScheduler(eng)
+        rng = np.random.default_rng(seed)
+        t = 0.0
+        for i in range(S):
+            t += float(rng.exponential(1.0 / arrival_rate))
+            mesh = meshes[int(rng.integers(len(meshes)))]
+            deadline = float(rng.random()) < deadline_frac
+            sched.submit(SessionSpec(
+                sid=f"a{i}", mesh=mesh, dt=1e-3 * (1.0 + 0.1 * (i % 4)),
+                n_steps=steps, arrival_t=t,
+                priority=DEADLINE if deadline else BULK,
+                deadline_ms=deadline_ms if deadline else None,
+                open_kwargs={"alpha0": 1, "adaptive": False}))
+        t0 = time.perf_counter()
+        rounds = sched.run()
+        wall = time.perf_counter() - t0
+        core = sched.core
+        lat = core.latency_stats()["classes"]
+        multi = {e["key"] for e in core.events
+                 if e["kind"] == "dispatch" and len(e["sids"]) >= 2}
+        done = S * steps
+        cell = {
+            "sessions": S,
+            "steps_per_session": steps,
+            "arrival_rate": arrival_rate,
+            "deadline_frac": deadline_frac,
+            "mesh_mix_parts": mix,
+            "rounds": rounds,
+            "dispatches": core.dispatches,
+            "multi_session_cohorts": len(multi),
+            "session_steps_per_s": done / wall,
+            "latency_s": {prio: {"n": row["n"], "p50": row["p50"],
+                                 "p99": row["p99"]}
+                          for prio, row in sorted(lat.items())},
+            "engine_counters": dict(eng.counters),
+        }
+        cells.append(cell)
+        lat_txt = " ".join(
+            f"{prio}_p99={row['p99'] * 1e3:.0f}ms"
+            for prio, row in sorted(lat.items()))
+        emit(f"fig13_arrivals_S{S}", wall / done,
+             f"dispatches={core.dispatches}/{S}sessions "
+             f"multi_cohorts={len(multi)} {lat_txt}")
+    return cells
+
+
 def run(n: int = 8, parts: int = 4, window: int = 8, reps: int = 3,
         session_counts=(1, 4, 16), out: str | None = None,
-        dry_run: bool = False) -> dict:
+        dry_run: bool = False, arrivals: bool = False) -> dict:
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
 
@@ -140,6 +234,15 @@ def run(n: int = 8, parts: int = 4, window: int = 8, reps: int = 3,
         },
         "cells": cells,
     }
+    if arrivals:
+        report["method"]["arrivals"] = (
+            "open-loop serving: seeded Poisson arrivals of a heterogeneous "
+            "size-class mesh mix driven by the continuous-batching "
+            "EngineScheduler; latency_s books per-step p50/p99 from each "
+            "session's last progress point (queueing delay included), so "
+            "deadline preemption is visible as deadline-p99 <= bulk-p99")
+        report["arrival_cells"] = run_arrivals(
+            n=n, parts=parts, window=window, dry_run=dry_run)
     if out:
         pathlib.Path(out).write_text(json.dumps(report, indent=2) + "\n")
         emit("fig13_engine_json", 0.0, f"wrote {out}")
@@ -156,6 +259,10 @@ def main() -> None:
                     help="rolled steps per dispatch (scan_window)")
     ap.add_argument("--sessions", default="1,4,16",
                     help="comma-separated session counts")
+    ap.add_argument("--arrivals", action="store_true",
+                    help="also run the open-loop Poisson-arrival cells "
+                         "(S in {64, 256}; dry-run: S=64) through the "
+                         "continuous-batching EngineScheduler")
     ap.add_argument("--out", default=None,
                     help="JSON report path (default: BENCH_engine.json at "
                          "the repo root when --dry-run)")
@@ -167,7 +274,8 @@ def main() -> None:
     counts = tuple(int(s) for s in args.sessions.split(","))
     print("name,us_per_call,derived")
     run(n=args.n, parts=args.parts, window=args.window,
-        session_counts=counts, out=out, dry_run=args.dry_run)
+        session_counts=counts, out=out, dry_run=args.dry_run,
+        arrivals=args.arrivals)
 
 
 if __name__ == "__main__":

@@ -220,6 +220,13 @@ class PlanCache:
             "pool_misses": self.pool.misses,
         }
 
+    def reset_stats(self) -> None:
+        """Zero the hit/miss/eviction meters without dropping any cached
+        plan or pooled executable — accounting only, so a multi-config
+        benchmark reports per-config counts while keeping warm caches."""
+        self.hits = self.misses = self.evictions = 0
+        self.pool.hits = self.pool.misses = 0
+
 
 # ---------------------------------------------------------------------------
 # Controller

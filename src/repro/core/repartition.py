@@ -209,7 +209,15 @@ def layout_fingerprint(layout: LDULayout) -> str:
 
 
 def mesh_fingerprint(mesh: CavityMesh) -> str:
-    """Structural mesh hash: geometry + decomposition (not field values)."""
+    """Structural mesh hash: geometry + decomposition (not field values).
+
+    Deliberately shape-only: a size-class :class:`~repro.fvm.mesh.
+    PaddedCavityMesh` hashes identically to a plain mesh of the padded
+    shape (its ``n_parts_real`` is a *runtime* operand, not program
+    structure), so every tenant padded to one class shares plans, pooled
+    update executables, and — modulo the engine cohort key's ``padded``
+    flag — a batched program.
+    """
     h = hashlib.sha256(
         f"cavity;{mesh.nx};{mesh.ny};{mesh.nz};{mesh.n_parts};{mesh.h}"
         .encode())

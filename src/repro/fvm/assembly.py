@@ -15,6 +15,7 @@ vanish identically; boundary diffusion uses the half-cell distance h/2.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from functools import cached_property
 
@@ -89,6 +90,51 @@ class CavityAssembly:
         self.plane = mesh.plane
         self.n_parts = P
         self.m = mesh.n_cells
+        # outward z-normal per patch, for dynamic part-activity masks: the
+        # +z patch is the lid (rides on the last active part), the -z patch
+        # the bottom wall (part 0); everything else is on every active part
+        self._patch_nz = [p.normal[2] for p in mesh.patches]
+
+    # ------------------------------------------------------------------
+    # part-activity masks (size-class padding support)
+    # ------------------------------------------------------------------
+    def dynamic_masks(self, n_active) -> tuple[jax.Array, jax.Array]:
+        """``(if_mask, patch_mask)`` as traced functions of ``n_active``.
+
+        ``n_active`` is the number of *real* leading parts; parts at and
+        beyond it are size-class zero padding (ghost slabs) with no
+        interfaces and no boundary patches.  The lid patch rides on the
+        last active part and the bottom wall on part 0, matching the
+        static masks of a :class:`~repro.fvm.mesh.PaddedCavityMesh`.
+        Making the masks a function of a traced scalar is what lets one
+        compiled (and vmapped) program serve sessions of *different* real
+        sizes inside one padded size class.
+        """
+        ids = jnp.arange(self.n_parts)
+        act = ids < n_active
+        down = act & (ids >= 1)
+        up = ids < (n_active - 1)
+        if_mask = jnp.stack([down, up], axis=1).astype(self.dtype)[:, :, None]
+        cols = []
+        for nz in self._patch_nz:
+            if nz > 0:        # lid: last active part
+                cols.append(act & (ids == n_active - 1))
+            elif nz < 0:      # bottom wall: part 0
+                cols.append(act & (ids == 0))
+            else:             # side walls: every active part
+                cols.append(act)
+        patch_mask = jnp.stack(cols, axis=1).astype(self.dtype)
+        return if_mask, patch_mask
+
+    def with_masks(self, if_mask: jax.Array,
+                   patch_mask: jax.Array) -> "CavityAssembly":
+        """A shallow view of this assembly with the activity masks swapped
+        (static addressing shared).  Used by the padded StepProgram to
+        bind per-session traced masks without rebuilding the assembly."""
+        a = copy.copy(self)
+        a.if_mask = if_mask
+        a.patch_mask = patch_mask
+        return a
 
     # ------------------------------------------------------------------
     # face interpolation / fluxes

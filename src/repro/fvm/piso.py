@@ -61,17 +61,29 @@ class StepStats(NamedTuple):
     p_residual: jax.Array
 
 
-def stack_states(states) -> PisoState:
+def stack_states(states, pad_to: int | None = None) -> PisoState:
     """Stack per-session ``PisoState``s along a new leading session axis.
 
     The cohort form consumed by the batched stepper
     (:class:`~repro.fvm.step_program.BatchedExecutor`): every leaf of the
     S input states becomes one ``(S, ...)`` array.  All states must share
     leaf shapes/dtypes (same mesh decomposition — the cohort contract).
+
+    ``pad_to`` appends all-zero **filler lanes** until the leading axis
+    reaches that size, so a cohort can ride a lane-class compiled program
+    (power-of-two batch) instead of recompiling per occupancy.  Filler
+    lanes are cheap: with a padded program their ``n_active=0`` masks
+    zero every source, so the Krylov loops converge instantly.
     """
     states = list(states)
     if not states:
         raise ValueError("cannot stack an empty session list")
+    if pad_to is not None:
+        if pad_to < len(states):
+            raise ValueError(
+                f"pad_to={pad_to} below cohort size {len(states)}")
+        filler = jax.tree.map(jnp.zeros_like, states[0])
+        states = states + [filler] * (pad_to - len(states))
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
@@ -79,13 +91,15 @@ def unstack_states(stacked: PisoState, n: int | None = None):
     """Split a cohort-stacked ``PisoState`` back into per-session states.
 
     Inverse of :func:`stack_states`; ``n`` defaults to the leading axis
-    size.  Slicing is exact (no recomputation), so a stack/step/unstack
-    round trip equals stepping each session alone up to the batched
-    reduction order.
+    size, and may be smaller when the stack carries trailing filler
+    lanes (``stack_states(..., pad_to=...)``) — those are dropped.
+    Slicing is exact (no recomputation), so a stack/step/unstack round
+    trip equals stepping each session alone up to the batched reduction
+    order.
     """
     lead = jax.tree.leaves(stacked)[0].shape[0]
     n = lead if n is None else n
-    if n != lead:
+    if n > lead:
         raise ValueError(f"requested {n} sessions from a stack of {lead}")
     return [jax.tree.map(lambda a: a[i], stacked) for i in range(n)]
 
@@ -149,6 +163,16 @@ class PisoSolver:
             raise ValueError(
                 f"unknown solver_backend {self.solver_backend!r}")
         self.full_mesh_solve = self.solve_mode == "full_mesh"
+        # size-class serving: a PaddedCavityMesh carries ghost slabs whose
+        # activity is decided by a *traced* per-session n_active operand
+        # (assembly.dynamic_masks), so one compiled program serves every
+        # real slab count of the class — the step functions thread the
+        # operand through automatically (see _extras)
+        self.padded = getattr(self.mesh, "n_parts_real", None) is not None
+        self.n_active = self.mesh.n_parts_active
+        if self.padded and self.solve_mode == "full_mesh":
+            raise ValueError(
+                "padded (size-class) meshes require solve_mode='stacked'")
         # an explicitly supplied mesh is honoured; otherwise full_mesh mode
         # owns (and re-shapes) its mesh across rebind_alpha
         self._auto_mesh = self.spmd_mesh is None
@@ -219,6 +243,17 @@ class PisoSolver:
     def program(self):
         """The bound :class:`~repro.fvm.step_program.StepProgram`."""
         return self._exec.program
+
+    def _extras(self) -> tuple:
+        """Extra traced operands the bound program expects per step.
+
+        A padded (size-class) program takes the real slab count
+        ``n_active``; a plain program takes nothing.  Exposed so the
+        serving engine can build the *stacked* per-lane vector for a
+        batched cohort dispatch."""
+        if not self.padded:
+            return ()
+        return (jnp.asarray(self.n_active, jnp.int32),)
 
     def initial_state(self) -> PisoState:
         P, m, F = self.mesh.n_parts, self.mesh.n_cells, self.mesh.n_faces
@@ -300,7 +335,7 @@ class PisoSolver:
         ``state`` is DONATED — its buffers are invalidated by the call;
         keep using the returned state.  Returns ``(state, StepStats)``.
         """
-        return self._exec.fused.step(state, dt)
+        return self._exec.fused.step(state, dt, *self._extras())
 
     def run_steps(self, state: PisoState, dt: float, n_steps: int):
         """Advance ``n_steps`` timesteps as ONE scan-rolled XLA dispatch.
@@ -309,7 +344,8 @@ class PisoSolver:
         a leading ``n_steps`` axis (per-step history of the window).
         ``state`` is donated; each distinct window length compiles once.
         """
-        return self._exec.fused.run_steps(state, dt, n_steps)
+        return self._exec.fused.run_steps(state, dt, n_steps,
+                                          *self._extras())
 
     def batched_executor(self, batch: int):
         """The cohort stepper for ``batch`` stacked sessions.
@@ -343,7 +379,8 @@ class PisoSolver:
         (``ControllerConfig.warmup``).  Does NOT donate ``state``.
         Returns ``(state, stats, PhaseBreakdown)``.
         """
-        return self._exec.instrumented.timed_step(state, dt)
+        return self._exec.instrumented.timed_step(state, dt,
+                                                  *self._extras())
 
     def run(self, n_steps: int, dt: float, state: PisoState | None = None,
             scan_steps: int | None = None):

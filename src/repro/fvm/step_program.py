@@ -163,15 +163,17 @@ def _timed_phase_walk(program: StepProgram, fns: dict, probes: dict,
 def _memoized_roll(cache: dict, fn: Callable, n_steps: int) -> Callable:
     """The jitted ``lax.scan`` roll of ``fn`` over ``n_steps``, donated
     and memoized per window length (one XLA program per distinct length)
-    — shared by the solo and cohort-batched executors."""
+    — shared by the solo and cohort-batched executors.  Extra operands
+    beyond ``(state, dt)`` (a padded program's per-session ``n_active``)
+    ride along untouched — traced, not donated."""
     n = int(n_steps)
     if n < 1:
         raise ValueError(f"n_steps must be >= 1, got {n_steps}")
     roll = cache.get(n)
     if roll is None:
 
-        def rolled(state, dt):
-            return jax.lax.scan(lambda s, _: fn(s, dt), state, None,
+        def rolled(state, dt, *extra):
+            return jax.lax.scan(lambda s, _: fn(s, dt, *extra), state, None,
                                 length=n)
 
         roll = cache[n] = jax.jit(rolled, donate_argnums=(0,))
@@ -195,6 +197,12 @@ class StepProgram:
     seed: Callable
     finalize: Callable
     seed_keys: tuple[str, ...]
+    # names of extra per-session operands beyond (state, dt): the seed is
+    # called as seed(state, dt, *extras) and every executor entry point
+    # accepts the same trailing operands.  A padded (size-class) program
+    # declares ("n_active",) — the traced real-part count each session
+    # carries so one compiled program serves a whole size class.
+    extra_keys: tuple[str, ...] = ()
 
     def __post_init__(self):
         available = set(self.seed_keys)
@@ -221,10 +229,10 @@ class StepProgram:
             available.update(ph.outputs)
 
     def as_step_fn(self) -> Callable:
-        """The pure ``(state, dt) -> (state, stats)`` composition."""
+        """The pure ``(state, dt, *extras) -> (state, stats)`` composition."""
 
-        def step(state, dt):
-            env = self.seed(state, dt)
+        def step(state, dt, *extra):
+            env = self.seed(state, dt, *extra)
             for ph in self.phases:
                 _bind(env, ph, ph.fn(*(env[k] for k in ph.inputs)))
             return self.finalize(env)
@@ -254,19 +262,19 @@ class FusedExecutor:
         self._rolled: dict[int, Callable] = {}
         self.dispatches = 0
 
-    def step(self, state, dt):
+    def step(self, state, dt, *extra):
         """One timestep, one dispatch.  Donates ``state``."""
         self.dispatches += 1
-        return self._step(state, dt)
+        return self._step(state, dt, *extra)
 
-    def run_steps(self, state, dt, n_steps: int):
+    def run_steps(self, state, dt, n_steps: int, *extra):
         """``n_steps`` timesteps as ONE dispatch (``lax.scan`` over the
         program); returns ``(state, stats)`` with every ``StepStats`` leaf
         stacked along a leading ``n_steps`` axis.  Donates ``state``.
         Each distinct window length compiles once (memoized)."""
         roll = _memoized_roll(self._rolled, self._fn, n_steps)
         self.dispatches += 1
-        return roll(state, dt)
+        return roll(state, dt, *extra)
 
     @property
     def trace_count(self) -> int:
@@ -277,9 +285,9 @@ class FusedExecutor:
         except Exception:  # noqa: BLE001 — jax-internal API
             return -1
 
-    def lower_step(self, state, dt):
+    def lower_step(self, state, dt, *extra):
         """Lowered+compiled per-step executable (donation/HLO inspection)."""
-        return self._step.lower(state, dt).compile()
+        return self._step.lower(state, dt, *extra).compile()
 
 
 # ---------------------------------------------------------------------------
@@ -311,11 +319,11 @@ class InstrumentedExecutor:
                 self._probes[ph.name] = jax.jit(ph.probe)
         self.calls = 0
 
-    def timed_step(self, state, dt):
+    def timed_step(self, state, dt, *extra):
         """One step; returns ``(state, stats, PhaseBreakdown)``."""
         self.calls += 1
         prog = self.program
-        env = prog.seed(state, dt)
+        env = prog.seed(state, dt, *extra)
         rows = _timed_phase_walk(prog, self._fns, self._probes, env, 1)
         state, stats = prog.finalize(env)
         return state, stats, PhaseBreakdown(**rows[0])
@@ -355,7 +363,10 @@ class BatchedExecutor:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.program = program
         self.batch = batch
-        self._vfn = jax.vmap(program.as_step_fn(), in_axes=(0, 0))
+        # every operand carries a leading session axis: the state pytree,
+        # the per-session dt vector, and any extra per-session operands
+        # (a padded program's (batch,) n_active vector)
+        self._vfn = jax.vmap(program.as_step_fn(), in_axes=0)
         self._step = jax.jit(self._vfn, donate_argnums=(0,))
         self._rolled: dict[int, Callable] = {}
         self.dispatches = 0
@@ -374,31 +385,36 @@ class BatchedExecutor:
         self._finalize = jax.jit(jax.vmap(program.finalize))
         self.samples = 0
 
-    def _check(self, states, dts) -> None:
+    def _check(self, states, dts, extras) -> None:
         lead = jax.tree.leaves(states)[0].shape[0]
         if lead != self.batch or dts.shape != (self.batch,):
             raise ValueError(
                 f"cohort shape mismatch: executor batch={self.batch}, "
                 f"state lead={lead}, dt shape={dts.shape}")
+        for name, x in zip(self.program.extra_keys, extras):
+            if jax.tree.leaves(x)[0].shape[:1] != (self.batch,):
+                raise ValueError(
+                    f"cohort extra {name!r} must carry a leading "
+                    f"({self.batch},) session axis")
 
-    def step(self, states, dts):
+    def step(self, states, dts, *extras):
         """One timestep for the whole cohort, one dispatch.  Donates
         ``states``; ``dts`` is the per-session ``(batch,)`` vector."""
-        self._check(states, dts)
+        self._check(states, dts, extras)
         self.dispatches += 1
-        return self._step(states, dts)
+        return self._step(states, dts, *extras)
 
-    def run_steps(self, states, dts, n_steps: int):
+    def run_steps(self, states, dts, n_steps: int, *extras):
         """``n_steps`` cohort timesteps as ONE dispatch.  Returns
         ``(states, stats)`` with every ``StepStats`` leaf carrying leading
         ``(n_steps, batch)`` axes.  Donates ``states``; each distinct
         window length compiles once per cohort shape."""
-        self._check(states, dts)
+        self._check(states, dts, extras)
         roll = _memoized_roll(self._rolled, self._vfn, n_steps)
         self.dispatches += 1
-        return roll(states, dts)
+        return roll(states, dts, *extras)
 
-    def timed_step(self, states, dts):
+    def timed_step(self, states, dts, *extras):
         """One instrumented cohort step.
 
         Returns ``(states, stats, rows)``: the stacked next state, the
@@ -406,9 +422,9 @@ class BatchedExecutor:
         :class:`PhaseBreakdown` per session (``len(rows) == batch``).
         Does NOT donate ``states``.
         """
-        self._check(states, dts)
+        self._check(states, dts, extras)
         self.samples += 1
-        env = self._seed(states, dts)
+        env = self._seed(states, dts, *extras)
         rows = _timed_phase_walk(self.program, self._fns, self._probes,
                                  env, self.batch)
         states, stats = self._finalize(env)
@@ -482,6 +498,17 @@ def build_piso_program(solver) -> StepProgram:
     work.  The phase order is the paper's fig. 5/7 decomposition:
     ``assemble_mom → update_mom → solve_mom`` then, per corrector,
     ``assemble_p → update_p → solve_p → correct``.
+
+    A solver bound to a size-class :class:`~repro.fvm.mesh.PaddedCavityMesh`
+    (``solver.padded``) builds the **padded** program: the step takes one
+    extra traced operand ``n_active`` (the session's real slab count), the
+    seed derives the interface/patch activity masks from it
+    (:meth:`~repro.fvm.assembly.CavityAssembly.dynamic_masks`), and the
+    assembly phases consume those masks instead of the static ones — so
+    ONE compiled (and vmapped) program serves every session of the size
+    class, whatever its real mesh size.  Ghost slabs stay exactly zero:
+    masked interfaces decouple them, their Krylov residual rows are 0, and
+    every global reduction they join gains only exact zeros.
     """
     from repro.core.ldu import buffer_from_parts
     from repro.fvm.piso import PisoState, StepStats, _offdiag3
@@ -494,12 +521,21 @@ def build_piso_program(solver) -> StepProgram:
     n_c = solver.n_coarse
     n_corr = solver.n_correctors
     mom_tol, p_tol = solver.mom_tol, solver.p_tol
+    padded = getattr(solver, "padded", False)
     if n_corr < 1:
         raise ValueError("the PISO program needs at least one corrector")
 
+    # the activity-mask binding: a padded program threads per-session
+    # (traced) masks through the env; a plain program uses the assembly's
+    # static masks and keeps the historical (state, dt) step signature
+    mask_keys = ("if_mask", "patch_mask") if padded else ()
+
+    def _asm_of(*masks):
+        return asm.with_masks(*masks) if masks else asm
+
     # -- momentum predictor (fine partition, BiCGStab, Jacobi) ------------
-    def assemble_mom(U, phi, phi_if, p, dt):
-        return asm.assemble_momentum(U, phi, phi_if, p, dt)
+    def assemble_mom(U, phi, phi_if, p, dt, *masks):
+        return _asm_of(*masks).assemble_momentum(U, phi, phi_if, p, dt)
 
     def update_mom(sysM):
         return solver._bands(plan_m, sysM.diag, sysM.upper, sysM.lower,
@@ -515,11 +551,12 @@ def build_piso_program(solver) -> StepProgram:
         return res.x, jnp.max(res.iters)
 
     # -- PISO correctors ---------------------------------------------------
-    def assemble_p(sysM, U):
-        rAU = asm.V / sysM.diag
-        HbyA = (sysM.source - _offdiag3(asm, sysM, U)) / sysM.diag[..., None]
-        phiH, phiH_if = asm.face_flux(HbyA)
-        sysP = asm.assemble_pressure(rAU, phiH, phiH_if)
+    def assemble_p(sysM, U, *masks):
+        a = _asm_of(*masks)
+        rAU = a.V / sysM.diag
+        HbyA = (sysM.source - _offdiag3(a, sysM, U)) / sysM.diag[..., None]
+        phiH, phiH_if = a.face_flux(HbyA)
+        sysP = a.assemble_pressure(rAU, phiH, phiH_if)
         return rAU, HbyA, phiH, phiH_if, sysP
 
     def update_p(sysP):
@@ -538,10 +575,11 @@ def build_piso_program(solver) -> StepProgram:
     def halo_probe(p):
         return x_pad(p.reshape(n_c, -1), plan_p.plane)
 
-    def correct(sysP, phiH, phiH_if, p, HbyA, rAU):
-        phi, phi_if = asm.correct_flux(sysP, phiH, phiH_if, p)
-        U = HbyA - rAU[..., None] * asm.grad(p)
-        cont = jnp.max(jnp.abs(asm.divergence(phi, phi_if))) / asm.V
+    def correct(sysP, phiH, phiH_if, p, HbyA, rAU, *masks):
+        a = _asm_of(*masks)
+        phi, phi_if = a.correct_flux(sysP, phiH, phiH_if, p)
+        U = HbyA - rAU[..., None] * a.grad(p)
+        cont = jnp.max(jnp.abs(a.divergence(phi, phi_if))) / a.V
         return phi, phi_if, U, cont
 
     # -- plan-cache hook: pooled compiled updates (instrumented path only) -
@@ -576,7 +614,8 @@ def build_piso_program(solver) -> StepProgram:
     # update into the coarse plan to "update"; the coarse pressure CG to
     # "solve" with its probed per-iteration exchange share on "halo"
     phases = [
-        Phase("assemble_mom", "assembly", ("U", "phi", "phi_if", "p", "dt"),
+        Phase("assemble_mom", "assembly",
+              ("U", "phi", "phi_if", "p", "dt") + mask_keys,
               ("sysM",), assemble_mom),
         Phase("update_mom", "assembly", ("sysM",), ("bandsM",), update_mom,
               instrumented_fn=update_mom_inst),
@@ -585,7 +624,7 @@ def build_piso_program(solver) -> StepProgram:
     ]
     for i in range(n_corr):
         phases += [
-            Phase("assemble_p", "assembly", ("sysM", "U"),
+            Phase("assemble_p", "assembly", ("sysM", "U") + mask_keys,
                   ("rAU", "HbyA", "phiH", "phiH_if", "sysP"), assemble_p,
                   corrector=i),
             Phase("update_p", "update", ("sysP",), ("bandsP",), update_p,
@@ -595,13 +634,28 @@ def build_piso_program(solver) -> StepProgram:
                   probe=halo_probe, probe_inputs=("p",),
                   probe_iters=f"p_iters_{i}"),
             Phase("correct", "assembly",
-                  ("sysP", "phiH", "phiH_if", "p", "HbyA", "rAU"),
+                  ("sysP", "phiH", "phiH_if", "p", "HbyA", "rAU") + mask_keys,
                   ("phi", "phi_if", "U", "cont"), correct, corrector=i),
         ]
 
-    def seed(state, dt):
-        U, p, phi, phi_if = state
-        return {"U": U, "p": p, "phi": phi, "phi_if": phi_if, "dt": dt}
+    if padded:
+        def seed(state, dt, n_active):
+            U, p, phi, phi_if = state
+            if_mask, patch_mask = asm.dynamic_masks(n_active)
+            return {"U": U, "p": p, "phi": phi, "phi_if": phi_if, "dt": dt,
+                    "n_active": n_active, "if_mask": if_mask,
+                    "patch_mask": patch_mask}
+
+        seed_keys = ("U", "p", "phi", "phi_if", "dt", "n_active",
+                     "if_mask", "patch_mask")
+        extra_keys = ("n_active",)
+    else:
+        def seed(state, dt):
+            U, p, phi, phi_if = state
+            return {"U": U, "p": p, "phi": phi, "phi_if": phi_if, "dt": dt}
+
+        seed_keys = ("U", "p", "phi", "phi_if", "dt")
+        extra_keys = ()
 
     def finalize(env):
         stats = StepStats(
@@ -612,4 +666,4 @@ def build_piso_program(solver) -> StepProgram:
         return PisoState(env["U"], env["p"], env["phi"], env["phi_if"]), stats
 
     return StepProgram(phases=tuple(phases), seed=seed, finalize=finalize,
-                       seed_keys=("U", "p", "phi", "phi_if", "dt"))
+                       seed_keys=seed_keys, extra_keys=extra_keys)

@@ -26,6 +26,64 @@ from repro.models import lm
 from repro.serving.engine import generate
 
 
+def mesh_mix(args):
+    """The heterogeneous tenant mix: meshes sharing one per-part slab
+    structure (nx = ny = cfd_n, nzl = cfd_n // parts) with slab counts
+    {parts/2 .. parts} — exactly what size-class padding co-batches."""
+    from repro.fvm.mesh import CavityMesh
+
+    nzl = args.cfd_n // args.parts
+    parts = sorted({max(2, args.parts // 2), max(2, 3 * args.parts // 4),
+                    args.parts})
+    return [CavityMesh(nx=args.cfd_n, ny=args.cfd_n, nz=nzl * p,
+                       n_parts=p, h=0.1 / args.cfd_n) for p in parts]
+
+
+def serve_cfd_arrivals(args) -> dict:
+    """Open-loop serving: Poisson arrivals of a heterogeneous tenant mix
+    scheduled by :class:`~repro.serving.scheduler.EngineScheduler` —
+    size-class cohorts, deadline preemption, per-class p50/p99."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.controller import ControllerConfig
+    from repro.serving.engine import SimulationEngine
+    from repro.serving.scheduler import (BULK, DEADLINE, EngineScheduler,
+                                         SessionSpec)
+
+    cfg = ControllerConfig(sample_every=max(args.sample_every, 1))
+    eng = SimulationEngine(config=cfg, scan_window=max(args.scan_steps, 1),
+                           lane_classes=args.lane_classes,
+                           track_latency=True)
+    sched = EngineScheduler(eng, max_wait_rounds=args.max_wait_rounds)
+    rng = np.random.default_rng(args.seed)
+    meshes = mesh_mix(args)
+    t = 0.0
+    for i in range(args.sessions):
+        t += float(rng.exponential(1.0 / args.arrival_rate))
+        mesh = meshes[int(rng.integers(len(meshes)))]
+        deadline = float(rng.random()) < args.deadline_frac
+        sched.submit(SessionSpec(
+            sid=f"tenant{i}", mesh=mesh, dt=args.co * mesh.h,
+            n_steps=args.steps, arrival_t=t,
+            priority=DEADLINE if deadline else BULK,
+            deadline_ms=args.deadline_ms if deadline else None,
+            open_kwargs={"adaptive": args.adaptive,
+                         "alpha0": args.alpha or None, "nu": args.nu,
+                         "solver_backend": args.solver_backend}))
+    t0 = time.time()
+    rounds = sched.run()
+    wall = time.time() - t0
+    stats = sched.stats()
+    done = args.sessions * args.steps
+    print(f"served {args.sessions} arrivals ({done} session-steps) in "
+          f"{rounds} rounds / {wall:.2f}s ({done / wall:.1f} steps/s), "
+          f"{stats['dispatches']} dispatches")
+    for prio, row in sorted(stats["latency"]["classes"].items()):
+        print(f"  {prio}: n={row['n']} p50={row['p50'] * 1e3:.2f}ms "
+              f"p99={row['p99'] * 1e3:.2f}ms")
+    print(f"engine counters: {stats['engine']['counters']}")
+    return stats
+
+
 def serve_cfd(args) -> None:
     """Multi-tenant PISO serving: cohort-batched stepping of N sessions."""
     jax.config.update("jax_enable_x64", True)
@@ -101,10 +159,27 @@ def main():
                     help="rolled window cap (steps per cohort dispatch)")
     ap.add_argument("--solver-backend", default="auto",
                     choices=["auto", "fused", "reference"])
+    # -- open-loop arrivals (continuous-batching scheduler) ----------------
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate (sessions/s of virtual "
+                         "time); > 0 switches to the EngineScheduler "
+                         "driver with a heterogeneous size-class mix")
+    ap.add_argument("--deadline-ms", type=float, default=50.0,
+                    help="per-step latency target of deadline tenants")
+    ap.add_argument("--deadline-frac", type=float, default=0.25,
+                    help="fraction of arrivals in the deadline class")
+    ap.add_argument("--max-wait-rounds", type=int, default=4,
+                    help="bulk anti-starvation bound (scheduler rounds)")
+    ap.add_argument("--lane-classes", action="store_true",
+                    help="pad cohort batch axes to powers of two")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.sessions > 0:
-        serve_cfd(args)
+        if args.arrival_rate > 0:
+            serve_cfd_arrivals(args)
+        else:
+            serve_cfd(args)
         return
     if args.arch is None:
         ap.error("--arch is required (or use --sessions N for CFD mode)")

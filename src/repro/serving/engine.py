@@ -96,6 +96,13 @@ class SimulationSession:
     mesh_fp: str = ""                   # structural mesh hash (cohort key)
     adaptive: bool = True
     steps_done: int = 0
+    # serving-policy metadata (consumed by serving.scheduler): priority
+    # class and, for deadline tenants, the per-session-step target
+    priority: str = "bulk"
+    deadline_ms: float | None = None
+    # per-session-step wall latencies (seconds), appended when the engine
+    # runs with track_latency=True; stats() folds them into p50/p99
+    latency_samples: list = dataclasses.field(default_factory=list)
 
 
 class SimulationEngine:
@@ -118,7 +125,8 @@ class SimulationEngine:
 
     def __init__(self, plan_cache: PlanCache | None = None,
                  config: ControllerConfig | None = None,
-                 scan_window: int = 8):
+                 scan_window: int = 8, lane_classes: bool = False,
+                 track_latency: bool = False, clock=None):
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.plan_cache = PlanCache() if plan_cache is None else plan_cache
         # per-instance default: a shared ControllerConfig() *instance*
@@ -130,6 +138,23 @@ class SimulationEngine:
         # max steps per rolled lax.scan dispatch: bounds the set of compiled
         # window lengths (each distinct length is its own XLA program)
         self.scan_window = scan_window
+        # lane classes: pad every *padded* (size-class) cohort's batch axis
+        # to the next power of two with zero filler lanes, so mid-window
+        # admissions/evictions move a cohort between a handful of compiled
+        # batch shapes instead of recompiling per occupancy.  Filler lanes
+        # carry n_active=0 — every mask is zero, the Krylov loops converge
+        # instantly — so the marginal cost is near nil.  Plain (unpadded)
+        # cohorts are exempt: without the n_active operand a filler lane
+        # would assemble a real lid-driven system.
+        self.lane_classes = lane_classes
+        # latency accounting: when on, every stepping path blocks on its
+        # result and books wall time per session-step (stats() reports
+        # p50/p99 per priority class).  ``clock`` is injectable so the
+        # deterministic scheduler harness can drive a virtual clock.
+        self.track_latency = track_latency
+        import time as _time
+
+        self._clock = _time.perf_counter if clock is None else clock
         self.sessions: dict[str, SimulationSession] = {}
         # dispatch accounting for the two stepping paths: "solo" counts
         # single-session fused launches, "cohort" one launch per batched
@@ -143,7 +168,10 @@ class SimulationEngine:
                      model: CostModel | None = None,
                      adaptive: bool = True,
                      solve_mode: str = "stacked",
-                     solver_backend: str = "auto") -> SimulationSession:
+                     solver_backend: str = "auto",
+                     pad_to_class: int | None = None,
+                     priority: str = "bulk",
+                     deadline_ms: float | None = None) -> SimulationSession:
         """Admit a simulation; its controller starts from the cost model's
         static pick (``alpha0=None``) exactly like the non-adaptive launcher,
         then departs from it as measurements arrive.  ``solve_mode``
@@ -153,13 +181,29 @@ class SimulationEngine:
         ``solver_backend`` ("auto" | "fused" | "reference") picks the
         per-tenant Krylov iteration backend (:mod:`repro.solvers.ops`);
         a fused session models the fused bytes/iter term and keys its
-        cached artifacts separately too."""
+        cached artifacts separately too.
+
+        ``pad_to_class`` zero-pads the mesh's part axis to that **size
+        class** (:class:`~repro.fvm.mesh.PaddedCavityMesh`) so tenants
+        whose meshes share a per-part structure but differ in slab count
+        land in ONE cohort — the scheduler's cure for heterogeneous-mix
+        fragmentation.  ``priority`` ("bulk" | "deadline") and
+        ``deadline_ms`` feed the scheduling policy
+        (:mod:`repro.serving.scheduler`); they do not change the numerics.
+        """
         from repro.core.repartition import mesh_fingerprint
+        from repro.fvm.mesh import PaddedCavityMesh
         from repro.fvm.piso import PisoSolver
 
         if sid in self.sessions:
             raise ValueError(f"session {sid!r} already open")
-        model = model or CostModel(TPU_V5E, n_dofs=mesh.n_cells_global)
+        if priority not in ("bulk", "deadline"):
+            raise ValueError(f"unknown priority {priority!r}")
+        if pad_to_class is not None:
+            mesh = PaddedCavityMesh.pad(mesh, pad_to_class)
+        # cost honesty for padded meshes: ghost slabs carry no dofs
+        n_dofs = getattr(mesh, "n_cells_active", mesh.n_cells_global)
+        model = model or CostModel(TPU_V5E, n_dofs=n_dofs)
         # fixed_fine feasibility already restricts alphas to divisors of
         # n_cpu = mesh.n_parts, i.e. to plans realizable on the mesh
         controller = RepartitionController(
@@ -174,7 +218,8 @@ class SimulationEngine:
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
                                  mesh_fp=mesh_fingerprint(mesh),
-                                 adaptive=adaptive)
+                                 adaptive=adaptive, priority=priority,
+                                 deadline_ms=deadline_ms)
         self.sessions[sid] = sess
         return sess
 
@@ -211,6 +256,7 @@ class SimulationEngine:
     def _advance_one(self, sess: SimulationSession, is_sample: bool,
                      chunk: int):
         """Advance one session through one schedule stretch (solo path)."""
+        t0 = self._clock() if self.track_latency else 0.0
         if is_sample:
             sess.state, stats, sample = sess.solver.timed_step(
                 sess.state, sess.dt)
@@ -224,6 +270,10 @@ class SimulationEngine:
             stats = jax.tree.map(lambda a: a[-1], window)
             self.counters["solo_dispatches"] += 1
             self.counters["rolled_windows"] += 1
+        if self.track_latency:
+            jax.block_until_ready(sess.state)
+            per_step = (self._clock() - t0) / chunk
+            sess.latency_samples.extend([per_step] * chunk)
         sess.steps_done += chunk
         return stats
 
@@ -237,12 +287,21 @@ class SimulationEngine:
         phase (``steps_done mod sample_every``) so every cohort member
         agrees on where the next instrumented sample falls — sessions out
         of phase simply land in sibling cohorts until they re-align.
+
+        A **size-class** (padded) session keys on its *class* shape: a
+        :class:`~repro.fvm.mesh.PaddedCavityMesh` fingerprints identically
+        to a plain mesh of the padded shape, so every tenant padded to one
+        class shares a fingerprint whatever its real slab count — but the
+        padded program takes the extra traced ``n_active`` operand, so
+        ``padded`` is its own key component (a padded and a plain session
+        of equal shape are NOT program-interchangeable).
         """
         s = sess.solver
         phase = (sess.steps_done % self.config.sample_every
                  if sess.adaptive else -1)
         return (sess.mesh_fp, s.alpha, s.solve_mode, s.solver_backend,
-                s.nu, str(s.dtype), sess.adaptive, phase)
+                s.nu, str(s.dtype), sess.adaptive, phase,
+                getattr(s, "padded", False))
 
     def step_all(self, n_steps: int = 1, sids=None) -> dict:
         """Advance every open session (or ``sids``) by ``n_steps`` through
@@ -267,8 +326,6 @@ class SimulationEngine:
         solve pins a device layout that cannot be vmapped over sessions)
         take the solo path inside the same schedule.
         """
-        from repro.fvm.step_program import roll_schedule
-
         if n_steps < 0:
             raise ValueError(f"n_steps must be >= 0, got {n_steps}")
         sids = list(self.sessions if sids is None else sids)
@@ -285,51 +342,100 @@ class SimulationEngine:
                     key = self._cohort_key(self.sessions[sid])
                     cohorts.setdefault(key, []).append(sid)
             for group in cohorts.values():
-                lead = self.sessions[group[0]]
                 rem = min(todo[sid] for sid in group)
-                every = self.config.sample_every if lead.adaptive else None
-                # one stretch of the shared cadence per round — the cohort
-                # key pins the sampling phase, so the stretch is valid for
-                # every member regardless of absolute steps_done
-                is_sample, chunk = next(roll_schedule(
-                    lead.steps_done, rem, every, cap=self.scan_window))
-                if len(group) == 1 or lead.solver.solve_mode == "full_mesh":
-                    for sid in group:
-                        last[sid] = self._advance_one(self.sessions[sid],
-                                                      is_sample, chunk)
-                else:
-                    self._advance_cohort(group, is_sample, chunk, last)
+                chunk = self.advance_group(group, rem, last)
                 for sid in group:
                     todo[sid] -= chunk
         return last
 
+    def advance_group(self, group, n_steps: int, last=None) -> int:
+        """Advance one cohort ``group`` (sids sharing a cohort key) through
+        ONE stretch of the shared cadence; returns the stretch length.
+
+        The scheduling quantum :class:`~repro.serving.scheduler`
+        dispatches: a scheduler round picks which cohorts advance, this
+        method advances one of them by a single rolled-window (or sampled)
+        stretch, so admission/eviction decisions interleave at stretch
+        boundaries without touching a compiled program.  ``last``, when
+        given, collects each member's latest ``StepStats`` under its sid.
+        """
+        from repro.fvm.step_program import roll_schedule
+
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        last = {} if last is None else last
+        lead = self.sessions[group[0]]
+        every = self.config.sample_every if lead.adaptive else None
+        # one stretch of the shared cadence — the cohort key pins the
+        # sampling phase, so the stretch is valid for every member
+        # regardless of absolute steps_done
+        is_sample, chunk = next(roll_schedule(
+            lead.steps_done, n_steps, every, cap=self.scan_window))
+        if len(group) == 1 or lead.solver.solve_mode == "full_mesh":
+            for sid in group:
+                last[sid] = self._advance_one(self.sessions[sid],
+                                              is_sample, chunk)
+        else:
+            self._advance_cohort(group, is_sample, chunk, last)
+        return chunk
+
     def _advance_cohort(self, group, is_sample: bool, chunk: int,
                         last) -> None:
-        """Advance one multi-session cohort through one schedule stretch."""
+        """Advance one multi-session cohort through one schedule stretch.
+
+        A padded (size-class) cohort threads the per-session ``n_active``
+        vector through the batched executor — each lane's activity masks
+        are computed from its own real slab count inside the compiled
+        program.  With ``lane_classes`` on, the batch axis is additionally
+        padded to the next power of two with zero **filler lanes**
+        (``n_active=0``, ``dt`` copied from the lead so the ``V/dt``
+        diagonal stays finite): a cohort whose occupancy drifts between
+        scheduler rounds reuses one of log2(S) compiled batch shapes
+        instead of recompiling per occupancy.
+        """
         from repro.fvm.piso import stack_states, unstack_states
 
         sessions = [self.sessions[sid] for sid in group]
         lead = sessions[0]
-        exe = lead.solver.batched_executor(len(group))
-        states = stack_states([s.state for s in sessions])
-        dts = jnp.asarray([s.dt for s in sessions], lead.solver.dtype)
+        padded = getattr(lead.solver, "padded", False)
+        n = len(group)
+        lanes = n
+        if self.lane_classes and padded:
+            from repro.serving.scheduler import size_class
+
+            lanes = size_class(n)
+        exe = lead.solver.batched_executor(lanes)
+        states = stack_states([s.state for s in sessions], pad_to=lanes)
+        dts = jnp.asarray([s.dt for s in sessions]
+                          + [lead.dt] * (lanes - n), lead.solver.dtype)
+        extras = ()
+        if padded:
+            extras = (jnp.asarray(
+                [s.solver.n_active for s in sessions] + [0] * (lanes - n),
+                jnp.int32),)
+        t0 = self._clock() if self.track_latency else 0.0
         if is_sample:
-            states, stats, rows = exe.timed_step(states, dts)
+            states, stats, rows = exe.timed_step(states, dts, *extras)
             self.counters["sample_steps"] += 1
             per_stats = [jax.tree.map(lambda a, i=i: a[i], stats)
-                         for i in range(len(group))]
+                         for i in range(n)]
         else:
-            states, window = exe.run_steps(states, dts, chunk)
+            states, window = exe.run_steps(states, dts, chunk, *extras)
             self.counters["cohort_dispatches"] += 1
             self.counters["rolled_windows"] += 1
             rows = None
             per_stats = [jax.tree.map(lambda a, i=i: a[-1, i], window)
-                         for i in range(len(group))]
+                         for i in range(n)]
+        if self.track_latency:
+            jax.block_until_ready(states)
+            per_step = (self._clock() - t0) / chunk
         for i, (sess, state) in enumerate(zip(sessions,
-                                              unstack_states(states))):
+                                              unstack_states(states, n))):
             sess.state = state
             sess.steps_done += chunk
             last[sess.sid] = per_stats[i]
+            if self.track_latency:
+                sess.latency_samples.extend([per_step] * chunk)
             if rows is not None:
                 alpha = sess.controller.step(rows[i])
                 if alpha != sess.solver.alpha:
@@ -350,16 +456,53 @@ class SimulationEngine:
             out.setdefault(self._cohort_key(sess), []).append(sid)
         return out
 
+    def reset_stats(self) -> None:
+        """Zero the dispatch counters, latency samples, and plan-cache
+        hit/miss meters (cached plans themselves are kept — resetting is
+        about *accounting*, so a multi-config benchmark run can report
+        per-config counts instead of a running total)."""
+        for k in self.counters:
+            self.counters[k] = 0
+        for sess in self.sessions.values():
+            sess.latency_samples.clear()
+        reset = getattr(self.plan_cache, "reset_stats", None)
+        if reset is not None:
+            reset()
+
+    def latency_stats(self) -> dict:
+        """p50/p99 session-step latency, per session and pooled per
+        priority class (nearest-rank percentiles; empty when the engine
+        runs without ``track_latency``)."""
+        from repro.serving.scheduler import percentile
+
+        per_session, pooled = {}, {}
+        for sid, s in self.sessions.items():
+            if s.latency_samples:
+                per_session[sid] = {
+                    "n": len(s.latency_samples),
+                    "p50": percentile(s.latency_samples, 50),
+                    "p99": percentile(s.latency_samples, 99),
+                }
+            pooled.setdefault(s.priority, []).extend(s.latency_samples)
+        classes = {
+            prio: {"n": len(xs), "p50": percentile(xs, 50),
+                   "p99": percentile(xs, 99)}
+            for prio, xs in pooled.items() if xs
+        }
+        return {"per_session": per_session, "classes": classes}
+
     def stats(self) -> dict:
         return {
             "sessions": {
                 sid: {"steps": s.steps_done, "alpha": s.controller.alpha,
                       "solve_mode": s.controller.solve_mode,
                       "solver_backend": s.controller.solver_backend,
-                      "switches": len(s.controller.switches)}
+                      "switches": len(s.controller.switches),
+                      "priority": s.priority}
                 for sid, s in self.sessions.items()
             },
             "cohorts": [len(g) for g in self.cohorts().values()],
             "counters": dict(self.counters),
             "plan_cache": self.plan_cache.stats(),
+            "latency": self.latency_stats(),
         }

@@ -1,0 +1,352 @@
+"""Continuous-batching scheduler: policy, accounting, and engine adapter.
+
+The policy tests run the REAL :class:`~repro.serving.scheduler.
+CohortScheduler` against the deterministic virtual-clock harness
+(``tests/sched_sim.py``) — no solver, no compile, every decision exact.
+The adapter tests at the bottom drive a real :class:`SimulationEngine`
+through :class:`EngineScheduler` on tiny heterogeneous meshes.
+"""
+import numpy as np
+import pytest
+
+from sched_sim import FakeExecutor, build_sim, poisson_trace
+from repro.serving.scheduler import (BULK, DEADLINE, CohortScheduler,
+                                     EngineScheduler, SessionSpec,
+                                     VirtualClock, pad_mesh, percentile,
+                                     size_class)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_size_class_pow2_buckets():
+    assert [size_class(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 16]
+    assert size_class(1, floor=4) == 4
+    assert size_class(3, floor=8) == 8
+    with pytest.raises(ValueError):
+        size_class(0)
+
+
+def test_pad_mesh_buckets_and_passthrough():
+    from repro.fvm.mesh import CavityMesh, PaddedCavityMesh
+
+    m3 = CavityMesh(nx=4, ny=4, nz=6, n_parts=3, h=0.025)
+    p = pad_mesh(m3)
+    assert isinstance(p, PaddedCavityMesh)
+    assert (p.n_parts, p.n_parts_real, p.nzl) == (4, 3, 2)
+    assert pad_mesh(p) is p  # already padded: pass through
+    # same per-part structure, different slab counts -> one fingerprint
+    from repro.core.repartition import mesh_fingerprint
+
+    m2 = CavityMesh(nx=4, ny=4, nz=4, n_parts=2, h=0.025)
+    assert mesh_fingerprint(pad_mesh(m2, 4)) == mesh_fingerprint(p)
+    # and identical to a PLAIN mesh of the padded shape (class identity)
+    assert mesh_fingerprint(p) == mesh_fingerprint(
+        CavityMesh(nx=4, ny=4, nz=8, n_parts=4, h=0.025))
+
+
+def test_percentile_nearest_rank():
+    assert percentile([1, 2, 3, 4], 50) == 2
+    assert percentile([1, 2, 3, 4], 100) == 4
+    assert percentile([4, 3, 2, 1], 25) == 1
+    xs = list(range(1, 101))
+    assert percentile(xs, 99) == 99
+    assert percentile(xs, 50) == 50
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1], 0)
+
+
+# ---------------------------------------------------------------------------
+# policy: admission
+# ---------------------------------------------------------------------------
+
+def test_admission_order_deadline_first_then_fifo():
+    """Among arrivals due at one round: earlier arrival first; among
+    simultaneous arrivals the deadline class preempts bulk; submission
+    order breaks remaining ties."""
+    specs = [
+        SessionSpec("b0", "X", 1e-3, 4, arrival_t=0.0, priority=BULK),
+        SessionSpec("d0", "X", 1e-3, 4, arrival_t=0.0, priority=DEADLINE,
+                    deadline_ms=5.0),
+        SessionSpec("b1", "X", 1e-3, 4, arrival_t=0.0, priority=BULK),
+        SessionSpec("a2", "X", 1e-3, 4, arrival_t=-1.0, priority=BULK),
+    ]
+    sched, _fake, admitted, _ev = build_sim(specs)
+    sched.round()
+    assert admitted == ["a2", "d0", "b0", "b1"]
+    admits = [e for e in sched.events if e["kind"] == "admit"]
+    assert [e["sid"] for e in admits] == admitted
+
+
+def test_arrivals_join_at_round_boundaries():
+    """A session arriving mid-trace is admitted at the first round whose
+    clock has reached it — never mid-window — and the idle fast-forward
+    jumps the clock to the next arrival instead of spinning."""
+    specs = [
+        SessionSpec("a", "X", 1e-3, 4, arrival_t=0.0),
+        SessionSpec("late", "X", 1e-3, 4, arrival_t=100.0),
+    ]
+    sched, fake, admitted, _ev = build_sim(specs, scan_window=4,
+                                           dispatch_cost=1.0,
+                                           per_lane_cost=0.0)
+    sched.round()             # admit a, dispatch a (t 0 -> 1), evict a
+    assert admitted == ["a"] and sched.active == {}
+    sched.round()             # idle: fast-forward to t=100, admit late
+    assert admitted == ["a", "late"]
+    assert sched.clock.now() >= 100.0
+    sched.run()
+    assert not sched.active and not sched.pending
+    # "late" never shared a dispatch with "a"
+    assert all(c["sids"] in (("a",), ("late",)) for c in fake.calls)
+
+
+def test_round_reports_idle_without_work():
+    sched, _f, _a, _e = build_sim([])
+    assert sched.round() is False
+    assert sched.run() >= 0
+
+
+# ---------------------------------------------------------------------------
+# policy: eviction
+# ---------------------------------------------------------------------------
+
+def test_eviction_at_window_boundary():
+    """A finished session leaves in the same round its last window ends —
+    and its cohort-mates keep going without it, with no recompile-like
+    re-grouping of unrelated cohorts."""
+    specs = [
+        SessionSpec("short", "X", 1e-3, 4, arrival_t=0.0),
+        SessionSpec("long", "X", 1e-3, 12, arrival_t=0.0),
+    ]
+    sched, fake, _adm, evicted = build_sim(specs, scan_window=4,
+                                           per_lane_cost=0.0)
+    sched.round()
+    # both dispatched together for min(4, 12) = 4 steps; short finishes
+    assert fake.calls[0]["sids"] == ("short", "long")
+    assert evicted == ["short"]
+    sched.run()
+    assert evicted == ["short", "long"]
+    # after the boundary, "long" dispatches alone
+    assert all(c["sids"] == ("long",) for c in fake.calls[1:])
+    ev = [e["kind"] for e in sched.events]
+    assert ev.index("evict") > ev.index("dispatch")
+
+
+def test_external_evict_cancels_session():
+    specs = [SessionSpec("a", "X", 1e-3, 100, arrival_t=0.0)]
+    sched, fake, _adm, evicted = build_sim(specs, scan_window=4)
+    sched.round()
+    sched.evict("a")
+    assert evicted == ["a"]
+    assert sched.run() >= 0 and not sched.active
+    with pytest.raises(KeyError):
+        sched.evict("a")
+
+
+# ---------------------------------------------------------------------------
+# policy: deadline preemption + anti-starvation
+# ---------------------------------------------------------------------------
+
+def test_deadline_preempts_bulk_and_edf_order():
+    """While deadline cohorts have work, bulk cohorts defer; among
+    deadline cohorts the earliest deadline dispatches first."""
+    specs = [
+        SessionSpec("bulk", "B", 1e-3, 8, arrival_t=0.0, priority=BULK),
+        SessionSpec("d-loose", "L", 1e-3, 8, arrival_t=0.0,
+                    priority=DEADLINE, deadline_ms=50.0),
+        SessionSpec("d-tight", "T", 1e-3, 8, arrival_t=0.0,
+                    priority=DEADLINE, deadline_ms=5.0),
+    ]
+    sched, fake, _adm, _ev = build_sim(specs, scan_window=8,
+                                       max_wait_rounds=4)
+    sched.round()
+    # EDF: tight before loose; bulk deferred entirely
+    assert [c["sids"] for c in fake.calls] == [("d-tight",), ("d-loose",)]
+    defers = [e for e in sched.events if e["kind"] == "defer"]
+    assert defers and defers[0]["sids"] == ("bulk",)
+    # deadline work done -> bulk dispatches next round
+    sched.round()
+    assert fake.calls[-1]["sids"] == ("bulk",)
+
+
+def test_no_starvation_of_bulk():
+    """A bulk cohort deferred max_wait_rounds times overrides the
+    deadline preemption and dispatches even though deadline work
+    remains."""
+    specs = [
+        SessionSpec("bulk", "B", 1e-3, 4, arrival_t=0.0, priority=BULK),
+        SessionSpec("dl", "D", 1e-3, 1000, arrival_t=0.0,
+                    priority=DEADLINE, deadline_ms=5.0),
+    ]
+    sched, fake, _adm, evicted = build_sim(specs, scan_window=4,
+                                           max_wait_rounds=3)
+    for _ in range(3):          # rounds 1-3: bulk deferred each time
+        sched.round()
+        assert all(c["sids"] == ("dl",) for c in fake.calls)
+    sched.round()               # round 4: wait_rounds hit the cap
+    assert ("bulk",) in [c["sids"] for c in fake.calls]
+    assert evicted == ["bulk"]
+    # the deadline session was never paused on bulk's behalf
+    assert sum(c["sids"] == ("dl",) for c in fake.calls) == 4
+
+
+# ---------------------------------------------------------------------------
+# accounting: exact p50/p99 on a hand-computable trace
+# ---------------------------------------------------------------------------
+
+def test_exact_latency_accounting_hand_trace():
+    """Hand-computed timeline (dispatch_cost=1, per_lane=0, window=4):
+
+    round 1: admit d (deadline, 4 steps) and b (bulk, 8 steps) at t=0.
+      d dispatches (t 0->1): four steps at (1-0)/4 = 0.25 each; d evicts.
+      b defers (wait=1).
+    round 2: b dispatches (t 1->2): four steps at (2-0)/4 = 0.5 each.
+    round 3: b dispatches (t 2->3): four steps at (3-2)/4 = 0.25 each.
+
+    So d: p50 = p99 = 0.25; b: samples [0.5]*4+[0.25]*4, nearest-rank
+    p50 = 0.25 (4th of 8), p99 = 0.5 — and deadline p99 <= bulk p99.
+    """
+    specs = [
+        SessionSpec("d", "D", 1e-3, 4, arrival_t=0.0, priority=DEADLINE,
+                    deadline_ms=5.0),
+        SessionSpec("b", "B", 1e-3, 8, arrival_t=0.0, priority=BULK),
+    ]
+    sched, _fake, _adm, _ev = build_sim(specs, scan_window=4,
+                                        dispatch_cost=1.0,
+                                        per_lane_cost=0.0)
+    sched.run()
+    assert sched.samples["d"] == [0.25] * 4
+    assert sched.samples["b"] == [0.5] * 4 + [0.25] * 4
+    lat = sched.latency_stats()
+    assert lat["per_session"]["d"] == {"n": 4, "p50": 0.25, "p99": 0.25}
+    assert lat["per_session"]["b"] == {"n": 8, "p50": 0.25, "p99": 0.5}
+    assert lat["classes"][DEADLINE]["p99"] <= lat["classes"][BULK]["p99"]
+
+
+def test_latency_includes_queueing_delay():
+    """Deferral is charged to the deferred session: the first dispatched
+    step after a wait covers the whole span since last progress."""
+    specs = [
+        SessionSpec("b", "B", 1e-3, 4, arrival_t=0.0, priority=BULK),
+        SessionSpec("d", "D", 1e-3, 8, arrival_t=0.0, priority=DEADLINE,
+                    deadline_ms=1.0),
+    ]
+    sched, _fake, _adm, _ev = build_sim(specs, scan_window=4,
+                                        dispatch_cost=1.0,
+                                        per_lane_cost=0.0,
+                                        max_wait_rounds=10)
+    sched.run()
+    # d ran rounds 1-2 (t=1, t=2); b waited both, dispatching at t=3:
+    # per-step latency (3-0)/4 — strictly above d's undisturbed 0.25
+    assert sched.samples["b"] == [0.75] * 4
+    lat = sched.latency_stats()
+    assert lat["classes"][DEADLINE]["p99"] < lat["classes"][BULK]["p50"]
+
+
+# ---------------------------------------------------------------------------
+# seeded traces: determinism + co-batching under heterogeneous mixes
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_replay_is_deterministic():
+    a = poisson_trace(7, 32, rate=2.0)
+    b = poisson_trace(7, 32, rate=2.0)
+    assert a == b
+    c = poisson_trace(8, 32, rate=2.0)
+    assert a != c
+
+    s1, f1, _, _ = build_sim(a)
+    s2, f2, _, _ = build_sim(b)
+    s1.run(), s2.run()
+    assert s1.events == s2.events
+    assert f1.calls == f2.calls
+    assert s1.latency_stats() == s2.latency_stats()
+
+
+def test_trace_forms_multi_session_cohorts():
+    """With size-class keys, a heterogeneous Poisson mix co-batches:
+    strictly fewer dispatches than session-windows, and at least one
+    dispatch carries >= 2 sessions."""
+    specs = poisson_trace(3, 24, rate=5.0, classes=("c4", "c8"),
+                          n_steps=16)
+    sched, fake, _adm, evicted = build_sim(specs, scan_window=8)
+    sched.run()
+    assert len(evicted) == 24
+    windows = sum(-(-s.n_steps // 8) for s in specs)  # per-session windows
+    assert sched.dispatches < windows
+    assert max(len(c["sids"]) for c in fake.calls) >= 2
+    # every session got exactly its requested steps
+    stepped = {}
+    for c in fake.calls:
+        for sid in c["sids"]:
+            stepped[sid] = stepped.get(sid, 0) + c["chunk"]
+    assert stepped == {s.sid: s.n_steps for s in specs}
+
+
+# ---------------------------------------------------------------------------
+# the real-engine adapter (tiny meshes; compile-bound, keep it lean)
+# ---------------------------------------------------------------------------
+
+def test_engine_scheduler_heterogeneous_mix_end_to_end():
+    """EngineScheduler pads a heterogeneous mix to one size class, forms a
+    multi-session cohort (dispatches < per-session windows), finishes and
+    closes every session, and reports class latency percentiles."""
+    from repro.core.controller import ControllerConfig
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+
+    eng = SimulationEngine(config=ControllerConfig(alphas=(1, 2)),
+                           scan_window=4, track_latency=True)
+    sched = EngineScheduler(eng, max_wait_rounds=2)
+    meshes = {
+        2: CavityMesh(nx=4, ny=4, nz=4, n_parts=2, h=0.025),
+        3: CavityMesh(nx=4, ny=4, nz=6, n_parts=3, h=0.025),
+        4: CavityMesh(nx=4, ny=4, nz=8, n_parts=4, h=0.025),
+    }
+    for i, (p, mesh) in enumerate(meshes.items()):
+        sched.submit(SessionSpec(
+            sid=f"s{p}", mesh=mesh, dt=1e-3, n_steps=8, arrival_t=0.0,
+            priority=DEADLINE if i == 0 else BULK,
+            deadline_ms=50.0 if i == 0 else None,
+            open_kwargs={"adaptive": False, "alpha0": 1}))
+    sched.run()
+
+    assert set(sched.closed) == {"s2", "s3", "s4"}
+    assert not eng.sessions
+    # the padded mix co-batched: sessions shared cohort dispatches.  The
+    # deadline session rode solo rounds too (preemption), so the bound is
+    # dispatches < total per-session windows = 3 sessions * 2 windows
+    assert eng.counters["cohort_dispatches"] >= 1
+    total = (eng.counters["cohort_dispatches"]
+             + eng.counters["solo_dispatches"])
+    assert total < 6
+    lat = sched.core.latency_stats()
+    assert set(lat["classes"]) == {BULK, DEADLINE}
+    for row in lat["classes"].values():
+        assert row["p50"] > 0 and row["p99"] >= row["p50"]
+
+
+def test_engine_scheduler_respects_prepadded_and_plain_meshes():
+    """pad=False leaves meshes alone; a pre-padded mesh is never re-padded
+    (admission must not stack PaddedCavityMesh on itself)."""
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+    from repro.serving.scheduler import pad_mesh
+
+    eng = SimulationEngine(scan_window=4)
+    sched = EngineScheduler(eng, pad=True)
+    pre = pad_mesh(CavityMesh(nx=4, ny=4, nz=6, n_parts=3, h=0.025))
+    sched.submit(SessionSpec("pre", pre, 1e-3, 4, arrival_t=0.0,
+                             open_kwargs={"adaptive": False, "alpha0": 1}))
+    sched.run()
+    assert "pre" in sched.closed
+
+    plain = EngineScheduler(SimulationEngine(scan_window=4), pad=False)
+    plain.submit(SessionSpec(
+        "raw", CavityMesh(nx=4, ny=4, nz=4, n_parts=2, h=0.025), 1e-3, 4,
+        arrival_t=0.0, open_kwargs={"adaptive": False, "alpha0": 1}))
+    plain.run()
+    assert "raw" in plain.closed

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from hyp_compat import given, settings, st
 from repro.configs.registry import get_smoke_config
 from repro.core.controller import ControllerConfig
 from repro.fvm.mesh import CavityMesh
@@ -259,6 +260,185 @@ def test_step_all_input_validation():
     with pytest.raises(ValueError):
         eng.step_all(-1)
     assert eng.step_all(0) == {}
+
+
+# ---------------------------------------------------------------------------
+# size-class (padded) cohorts
+# ---------------------------------------------------------------------------
+
+def _slab_mesh(n_parts):
+    """Meshes sharing per-part structure (nx=ny=4, nzl=2, h) but differing
+    in slab count — the heterogeneous mix size classes exist to co-batch."""
+    return CavityMesh(nx=4, ny=4, nz=2 * n_parts, n_parts=n_parts, h=0.025)
+
+
+def _solo_reference(n_parts, dt, n_steps):
+    """Unpadded solo run: the ground truth a padded lane must reproduce."""
+    from repro.fvm.piso import PisoSolver
+
+    solver = PisoSolver(_slab_mesh(n_parts), alpha=1)
+    state = solver.initial_state()
+    stats = None
+    for _ in range(n_steps):
+        state, stats = solver.step(state, dt)
+    return state, stats
+
+
+def _check_padded_mix_matches_solo(parts, n_steps=3):
+    """Pad a ragged mix to one class, step it as ONE engine cohort, and
+    require every lane to match its unpadded solo run <= 1e-10 with
+    identical Krylov iteration counts (the acceptance bar)."""
+    from repro.serving.scheduler import size_class
+
+    cls = size_class(max(parts))
+    eng = SimulationEngine(scan_window=n_steps)
+    dts = {p: 1e-3 * (1.0 + 0.25 * i) for i, p in enumerate(parts)}
+    for p in parts:
+        eng.open_session(f"p{p}", _slab_mesh(p), dt=dts[p], alpha0=1,
+                         adaptive=False, pad_to_class=cls)
+    assert [len(g) for g in eng.cohorts().values()] == [len(parts)]
+    last = eng.step_all(n_steps)
+    assert eng.counters["cohort_dispatches"] == (1 if len(parts) > 1 else 0)
+    for p in parts:
+        ref_state, ref_stats = _solo_reference(p, dts[p], n_steps)
+        got = eng.sessions[f"p{p}"].state
+        np.testing.assert_allclose(np.asarray(got.U[:p]),
+                                   np.asarray(ref_state.U), atol=1e-10)
+        np.testing.assert_allclose(np.asarray(got.p[:p]),
+                                   np.asarray(ref_state.p), atol=1e-10)
+        # ghost slabs stay exactly zero
+        if p < cls:
+            assert float(jnp.max(jnp.abs(got.U[p:]))) == 0.0
+            assert float(jnp.max(jnp.abs(got.p[p:]))) == 0.0
+        # identical Krylov iteration counts, lane vs solo
+        assert int(last[f"p{p}"].mom_iters) == int(ref_stats.mom_iters)
+        assert [int(i) for i in last[f"p{p}"].p_iters] == \
+            [int(i) for i in ref_stats.p_iters]
+
+
+def test_padded_heterogeneous_cohort_matches_solo():
+    """The tentpole acceptance: a 2/3/4-slab mix padded to class 4 forms
+    ONE cohort whose per-lane results equal the unpadded solo runs."""
+    _check_padded_mix_matches_solo([2, 3, 4])
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.sampled_from([1, 2, 3, 4]), min_size=2, max_size=3,
+                unique=True))
+def test_padded_mix_property(parts):
+    """Property form (skips without hypothesis): ANY ragged mix of slab
+    counts padded to one size class preserves solve results and iteration
+    counts vs solo."""
+    _check_padded_mix_matches_solo(sorted(parts), n_steps=2)
+
+
+def test_size_class_migration_rejoins_cohort_trajectory_unchanged():
+    """A padded session whose controller switches alpha re-keys into the
+    cohort of its new (class, alpha) on the next round, and its
+    trajectory equals an unmigrated solo run applying the same switch at
+    the same step."""
+    dt, pre, post = 1e-3, 4, 4
+
+    # solo control: padded solver, rebind alpha 1 -> 2 after `pre` steps
+    from repro.fvm.mesh import PaddedCavityMesh
+    from repro.fvm.piso import PisoSolver
+
+    solver = PisoSolver(PaddedCavityMesh.pad(_slab_mesh(3), 4), alpha=1)
+    ref = solver.initial_state()
+    for _ in range(pre):
+        ref, _ = solver.step(ref, dt)
+    solver.rebind_alpha(2)
+    for _ in range(post):
+        ref, _ = solver.step(ref, dt)
+
+    eng = SimulationEngine(scan_window=4)
+    eng.open_session("mig", _slab_mesh(3), dt=dt, alpha0=1,
+                     adaptive=False, pad_to_class=4)
+    eng.open_session("stay", _slab_mesh(2), dt=dt, alpha0=1,
+                     adaptive=False, pad_to_class=4)
+    eng.open_session("tgt", _slab_mesh(4), dt=dt, alpha0=2,
+                     adaptive=False, pad_to_class=4)
+    assert sorted(len(g) for g in eng.cohorts().values()) == [1, 2]
+    eng.step_all(pre)
+
+    # the migration: mig's solver re-binds (what a controller switch does)
+    eng.sessions["mig"].solver.rebind_alpha(2)
+    groups = {tuple(sorted(g)) for g in eng.cohorts().values()}
+    assert ("mig", "tgt") in groups          # rejoined the alpha-2 cohort
+    before = eng.counters["cohort_dispatches"]
+    eng.step_all(post)
+    assert eng.counters["cohort_dispatches"] > before
+
+    got = eng.sessions["mig"].state
+    np.testing.assert_allclose(np.asarray(got.U), np.asarray(ref.U),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.asarray(got.p), np.asarray(ref.p),
+                               atol=1e-10)
+
+
+def test_lane_classes_pad_batch_to_pow2():
+    """With lane_classes on, a 3-session padded cohort rides the 4-lane
+    compiled batch (one filler lane, n_active=0) and matches the
+    exact-occupancy engine <= 1e-10; occupancy changes then reuse the
+    same compiled batch shape instead of recompiling."""
+    def build(lane_classes):
+        eng = SimulationEngine(scan_window=4, lane_classes=lane_classes)
+        for i in range(3):
+            eng.open_session(f"s{i}", _slab_mesh(3), dt=1e-3, alpha0=1,
+                             adaptive=False, pad_to_class=4)
+        eng.step_all(4)
+        return eng
+
+    lc, exact = build(True), build(False)
+    lead = lc.sessions["s0"].solver
+    assert list(lead._exec._batched) == [4]      # pow2 lanes, not 3
+    assert list(exact.sessions["s0"].solver._exec._batched) == [3]
+    for sid in ("s0", "s1", "s2"):
+        np.testing.assert_allclose(
+            np.asarray(lc.sessions[sid].state.U),
+            np.asarray(exact.sessions[sid].state.U), atol=1e-10)
+
+    # occupancy drifts stay within the pow2 shape set: evicting to 2
+    # sessions uses the 2-lane shape, re-admitting a third REUSES the
+    # already-compiled 4-lane executor (no per-occupancy recompiles)
+    lc.close_session("s2")
+    lc.step_all(4)
+    assert sorted(lead._exec._batched) == [2, 4]
+    four = lead._exec._batched[4]
+    disp = four.dispatches
+    lc.open_session("s3", _slab_mesh(3), dt=1e-3, alpha0=1,
+                    adaptive=False, pad_to_class=4)
+    lc.step_all(4, sids=["s0", "s1", "s3"])
+    assert sorted(lead._exec._batched) == [2, 4]   # no new shape
+    assert four.dispatches > disp                  # same executor reused
+
+
+def test_reset_stats_zeroes_accounting_keeps_caches():
+    """reset_stats() zeroes dispatch counters, latency samples, and plan
+    cache hit/miss meters — but keeps cached plans (warm caches are the
+    point of a shared PlanCache)."""
+    eng = SimulationEngine(scan_window=4, track_latency=True)
+    eng.open_session("a", _slab_mesh(2), dt=1e-3, alpha0=1,
+                     adaptive=False)
+    eng.open_session("b", _slab_mesh(2), dt=1e-3, alpha0=1,
+                     adaptive=False)
+    eng.step_all(4)
+    s = eng.stats()
+    assert s["counters"]["cohort_dispatches"] > 0
+    assert s["latency"]["classes"]["bulk"]["n"] == 8
+    entries = s["plan_cache"]["entries"]
+    assert entries > 0
+
+    eng.reset_stats()
+    s = eng.stats()
+    assert all(v == 0 for v in s["counters"].values())
+    assert s["latency"]["classes"] == {}
+    assert s["plan_cache"]["hits"] == 0 and s["plan_cache"]["misses"] == 0
+    assert s["plan_cache"]["entries"] == entries   # plans kept
+
+    # per-config accounting now starts clean
+    eng.step_all(4)
+    assert eng.stats()["counters"]["cohort_dispatches"] == 1
 
 
 def test_engine_default_config_not_aliased():

@@ -287,8 +287,16 @@ def test_stack_unstack_round_trip():
         np.testing.assert_array_equal(np.asarray(a.U), np.asarray(b.U))
     with pytest.raises(ValueError):
         stack_states([])
+    # n below the lead axis drops trailing lanes (the lane-class filler
+    # contract); asking for more sessions than lanes is still an error
+    assert len(unstack_states(stacked, 2)) == 2
     with pytest.raises(ValueError):
-        unstack_states(stacked, 2)
+        unstack_states(stacked, 4)
+    padded = stack_states(states, pad_to=4)
+    assert padded.U.shape == (4,) + states[0].U.shape
+    assert float(np.abs(np.asarray(padded.U[3])).max()) == 0.0
+    with pytest.raises(ValueError):
+        stack_states(states, pad_to=2)
 
 
 def test_batched_executor_matches_solo_runs():
