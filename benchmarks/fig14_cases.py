@@ -1,0 +1,174 @@
+"""Fig. 14: program/case grid — SIMPLE vs PISO cost-to-steady per case.
+
+The Program/Case abstraction makes "which segregated program" and "which
+flow case" independent axes (`repro.fvm.step_program.PROGRAMS` x
+`repro.fvm.cases.CASES`).  This figure measures the axis product: for
+every registered case at two mesh sizes,
+
+* **SIMPLE** — outer iterations to the program's own convergence
+  predicate (continuity + velocity-change gates) under the ONE-dispatch
+  ``lax.while_loop`` executor (``run_steady``), and seconds per outer
+  iteration from a second, warm, full run.
+* **PISO** — transient timesteps until pseudo-steadiness (the per-step
+  velocity change averaged over a rolled chunk drops under the same
+  ``tol_u`` gate), and seconds per timestep as the median warm chunk
+  time.  PISO reaches the same flow but pays many cheap timesteps where
+  SIMPLE pays few expensive under-relaxed outer iterations — the classic
+  trade the two programs exist to make.
+
+``--dry-run`` keeps the small mesh only and writes ``BENCH_cases.json``
+so CI can assert that every (case, program) cell converged and that
+SIMPLE's outer-iteration count stays within its cap.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _simple_cell(case: str, n: int, parts: int, nu: float) -> dict:
+    from repro.fvm.mesh import CavityMesh
+    from repro.fvm.piso import make_solver
+
+    solver = make_solver("simple", CavityMesh.cube(n, parts), alpha=2,
+                         nu=nu, case=case)
+    # first run carries the while-loop compile; the second run (fresh
+    # initial state, identical trajectory) times the converged loop warm
+    state, stats, n_outer = solver.run_steady()
+    jax.block_until_ready(state.U)
+    t0 = time.perf_counter()
+    state, stats, n_outer = solver.run_steady()
+    jax.block_until_ready(state.U)
+    wall = time.perf_counter() - t0
+    k = int(n_outer)
+    return {
+        "case": case, "program": "simple", "n": n, "parts": parts,
+        "iterations": k, "cap": solver.max_outer,
+        "converged": bool(solver.program.converged(stats)),
+        "continuity_err": float(stats.continuity_err),
+        "u_delta": float(stats.u_delta),
+        "seconds_per_iteration": wall / max(k, 1),
+    }
+
+
+def _piso_cell(case: str, n: int, parts: int, nu: float, dt: float,
+               chunk: int, max_steps: int, tol_u: float) -> dict:
+    from repro.fvm.mesh import CavityMesh
+    from repro.fvm.piso import make_solver
+
+    solver = make_solver("piso", CavityMesh.cube(n, parts), alpha=2,
+                         nu=nu, case=case)
+    state = solver.initial_state()
+    steps, converged, chunk_times = 0, False, []
+    cont = float("nan")
+    while steps < max_steps:
+        # run_steps donates state — snapshot U on the host first
+        u_prev = np.asarray(state.U)
+        t0 = time.perf_counter()
+        state, stats = solver.run_steps(state, dt, chunk)
+        jax.block_until_ready(state.U)
+        chunk_times.append(time.perf_counter() - t0)
+        steps += chunk
+        cont = float(stats.continuity_err[-1])
+        # pseudo-steady: per-step velocity change averaged over the chunk
+        # under the same gate SIMPLE applies per outer iteration
+        delta = float(np.abs(np.asarray(state.U) - u_prev).max()) / chunk
+        if delta < tol_u:
+            converged = True
+            break
+    # median warm chunk (drop the compile-carrying first chunk if any
+    # other sample exists)
+    warm = chunk_times[1:] or chunk_times
+    per_step = sorted(warm)[len(warm) // 2] / chunk
+    return {
+        "case": case, "program": "piso", "n": n, "parts": parts,
+        "iterations": steps, "cap": max_steps, "converged": converged,
+        "continuity_err": cont, "dt": dt, "chunk": chunk,
+        "seconds_per_iteration": per_step,
+    }
+
+
+def run(cases=("cavity", "channel", "backstep"), sizes=((6, 2), (8, 4)),
+        nu: float = 0.01, dt: float = 5e-3, chunk: int = 50,
+        max_steps: int = 2000, tol_u: float = 1e-6,
+        out: str | None = None, dry_run: bool = False) -> dict:
+    jax.config.update("jax_enable_x64", True)
+
+    if dry_run:
+        sizes = ((4, 2),)
+
+    cells = []
+    for n, parts in sizes:
+        for case in cases:
+            simple = _simple_cell(case, n, parts, nu)
+            piso = _piso_cell(case, n, parts, nu, dt, chunk, max_steps,
+                              tol_u)
+            cells += [simple, piso]
+            for cell in (simple, piso):
+                unit = ("outer" if cell["program"] == "simple" else "step")
+                emit(f"fig14_{case}_{cell['program']}_n{n}",
+                     cell["seconds_per_iteration"],
+                     f"{cell['iterations']}{unit}s "
+                     f"converged={cell['converged']} "
+                     f"continuity={cell['continuity_err']:.1e}")
+
+    report = {
+        "bench": "fig14_cases",
+        "method": {
+            "simple": (
+                "run_steady: the program's converged(stats) predicate "
+                "(continuity + u_delta gates) iterated under ONE "
+                "lax.while_loop dispatch, capped at solver.max_outer; "
+                "seconds_per_iteration from a second warm full run"),
+            "piso": (
+                "transient march in rolled chunks until the per-step "
+                "velocity change averaged over a chunk drops under the "
+                "same tol_u gate; seconds_per_iteration is the median "
+                "warm chunk time per step"),
+        },
+        "nu": nu, "piso_dt": dt, "tol_u": tol_u,
+        "cells": cells,
+    }
+    if out:
+        pathlib.Path(out).write_text(json.dumps(report, indent=2) + "\n")
+        emit("fig14_cases_json", 0.0, f"wrote {out}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small mesh only, write BENCH_cases.json")
+    ap.add_argument("--cases", default="cavity,channel,backstep")
+    ap.add_argument("--sizes", default="6:2,8:4",
+                    help="comma-separated n:parts mesh sizes")
+    ap.add_argument("--nu", type=float, default=0.01)
+    ap.add_argument("--dt", type=float, default=5e-3,
+                    help="PISO timestep for the march-to-steady cells")
+    ap.add_argument("--max-steps", type=int, default=2000,
+                    help="PISO pseudo-steady step cap")
+    ap.add_argument("--out", default=None,
+                    help="JSON report path (default: BENCH_cases.json at "
+                         "the repo root when --dry-run)")
+    args = ap.parse_args()
+    out = args.out
+    if out is None and args.dry_run:
+        out = str(pathlib.Path(__file__).resolve().parent.parent
+                  / "BENCH_cases.json")
+    sizes = tuple(tuple(int(v) for v in tok.split(":"))
+                  for tok in args.sizes.split(","))
+    print("name,us_per_call,derived")
+    run(cases=tuple(args.cases.split(",")), sizes=sizes, nu=args.nu,
+        dt=args.dt, max_steps=args.max_steps, out=out,
+        dry_run=args.dry_run)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,8 +22,8 @@ def main() -> None:
                             fig7_strong_scaling, fig8_speedup,
                             fig9_gpu_aware, fig10_adaptive,
                             fig11_fused_krylov, fig12_step_program,
-                            fig13_engine_throughput, hillclimb,
-                            kernels_bench, roofline)
+                            fig13_engine_throughput, fig14_cases,
+                            hillclimb, kernels_bench, roofline)
 
     suites = {
         "fig4": fig4_lsp_vs_alpha.run,
@@ -37,6 +37,7 @@ def main() -> None:
         "fig11": fig11_fused_krylov.run,
         "fig12": fig12_step_program.run,
         "fig13": fig13_engine_throughput.run,
+        "fig14": fig14_cases.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "cfd_dryrun": cfd_dryrun.run,
@@ -44,7 +45,7 @@ def main() -> None:
         "hillclimb": hillclimb.run,
     }
     heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm", "fig10",
-             "fig11", "fig12", "fig13"}
+             "fig11", "fig12", "fig13", "fig14"}
 
     ap = argparse.ArgumentParser()
     ap.add_argument("names", nargs="*",

@@ -1,2 +1,17 @@
-"""Finite-volume substrate: structured cavity mesh, assembly, PISO (icoFOAM)."""
+"""Finite-volume substrate: structured box mesh, case-aware assembly, and
+the segregated programs (transient PISO, steady SIMPLE) over it."""
 from repro.fvm.mesh import CavityMesh  # noqa: F401
+from repro.fvm.cases import FlowCase, get_case, case_names  # noqa: F401
+
+
+def __getattr__(name):
+    # solver/program entry points, lazily: importing repro.fvm must not
+    # drag in jax before a launcher sets its platform flags
+    if name in ("PisoSolver", "SimpleSolver", "SegregatedSolver",
+                "make_solver", "SOLVERS"):
+        import repro.fvm.piso as piso
+        return getattr(piso, name)
+    if name in ("get_program", "program_names", "StepProgram"):
+        import repro.fvm.step_program as sp
+        return getattr(sp, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

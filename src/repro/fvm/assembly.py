@@ -1,17 +1,28 @@
-"""FVM assembly for icoFOAM on the distributed cavity mesh (paper fig. 1).
+"""FVM assembly for icoFOAM on the distributed slab-decomposed box mesh.
 
 Assembles, on the **fine (CPU/assembly) partition**, the LDU coefficients of
 
 * the momentum predictor  ``ddt(U) + div(phi, U) - nu*laplacian(U) = -grad(p)``
   (upwind convection, central diffusion — the same matrix for all three
   velocity components, per OpenFOAM), and
-* the PISO pressure equation ``laplacian(rAU, p) = div(phiHbyA)``.
+* the segregated pressure equation ``laplacian(rAU, p) = div(phiHbyA)``.
 
 All arrays are stacked over the fine part axis (P, ...) — the SPMD layout.
-Boundary conditions: no-slip walls, moving lid (1,0,0) at z=max, zeroGradient
-pressure with a reference cell (OpenFOAM ``setReference``).  All cavity
-boundary faces have zero normal velocity, so boundary convective fluxes
-vanish identically; boundary diffusion uses the half-cell distance h/2.
+
+Boundary conditions come from a :class:`~repro.fvm.cases.FlowCase` (one
+:class:`~repro.fvm.cases.PatchBC` per box face).  The default is the
+paper's lid-driven cavity — no-slip walls, moving lid (1,0,0) at z=max,
+zeroGradient pressure with a reference cell (OpenFOAM ``setReference``) —
+whose boundary faces all have zero normal velocity, so its boundary
+convective fluxes vanish identically.  Inlet/outlet cases additionally
+carry a **boundary-flux plane pair** ``phi_b`` of shape ``(P, 2, B)``
+(slot ``DOWN`` = the ``z0`` face, slot ``UP`` = ``z1`` — the same plane
+layout as the interface fluxes): inlets contribute a fixed Dirichlet flux
+and a convective inflow source, outlets drop the boundary diffusion term
+(zero-gradient U), pin ``p = 0`` over the half cell (no reference cell
+needed), and get their flux corrected conservatively alongside the
+internal faces.  Boundary diffusion of Dirichlet patches uses the
+half-cell distance h/2.
 """
 from __future__ import annotations
 
@@ -23,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fvm.cases import (FlowCase, INLET, MOVING_WALL, OUTLET, PatchBC,
+                             get_case)
 from repro.fvm.mesh import CavityMesh, DOWN, UP
 from repro.sparse.distributed import halo_exchange
 
@@ -49,6 +62,7 @@ class PressureSystem:
     source: jax.Array  # (P, m)
     g_int: jax.Array   # (P, F) face conductances (for flux correction)
     g_if: jax.Array    # (P, 2, B)
+    g_b: jax.Array     # (P, 2, B) outlet (Dirichlet-p) boundary conductances
 
 
 # pytree registration lets the systems cross jit boundaries — the
@@ -61,15 +75,35 @@ for _cls in (MomentumSystem, PressureSystem):
         meta_fields=[])
 
 
+def _patch_role(normal) -> str:
+    """Geometric role of a patch from its outward normal (cases.ROLES)."""
+    axis = int(np.argmax(np.abs(normal)))
+    return "xyz"[axis] + ("1" if normal[axis] > 0 else "0")
+
+
 class CavityAssembly:
-    """Precomputed static addressing + assembly routines for one mesh."""
+    """Precomputed static addressing + assembly routines for one mesh.
+
+    ``case`` binds a :class:`~repro.fvm.cases.FlowCase` BC set (name,
+    instance, or ``None`` for the classic cavity built from
+    ``lid_speed``); assembly masks, Dirichlet velocities, boundary-flux
+    slots and the pressure reference policy all derive from it.
+    """
 
     def __init__(self, mesh: CavityMesh, *, nu: float = 0.01,
-                 lid_speed: float = 1.0, dtype=jnp.float64):
+                 lid_speed: float = 1.0, dtype=jnp.float64,
+                 case: FlowCase | str | None = None):
         self.mesh = mesh
         self.nu = nu
         self.lid_speed = lid_speed
         self.dtype = dtype
+        if case is None:
+            # the historical default: the cavity with its lid at lid_speed
+            case = get_case("cavity", u_ref=lid_speed)
+            case = dataclasses.replace(
+                case, bcs={"z1": PatchBC(MOVING_WALL,
+                                         U=(lid_speed, 0.0, 0.0))})
+        self.case = get_case(case)
         P = mesh.n_parts
         self.owner = jnp.asarray(mesh.owner, jnp.int32)
         self.neigh = jnp.asarray(mesh.neigh, jnp.int32)
@@ -78,12 +112,14 @@ class CavityAssembly:
         self.if_rows = jnp.asarray(np.stack([s.rows for s in ifs]), jnp.int32)
         # (P, 2) presence mask for interfaces, broadcast over faces
         self.if_mask = jnp.asarray(mesh.iface_mask(), dtype)[:, :, None]
-        # boundary patches
+        # boundary patches: per-patch BC kind + Dirichlet velocity, bound
+        # from the case by geometric role.  patch_Ub entries are (3,)
+        # uniform values or (n_bf, 3) per-face values (profiled inlets).
         self.patch_rows = [jnp.asarray(p.rows, jnp.int32) for p in mesh.patches]
         self.patch_mask = jnp.asarray(mesh.patch_mask(), dtype)  # (P, n_patches)
-        self.patch_Ub = [jnp.asarray(
-            (lid_speed, 0.0, 0.0) if p.name == "lid" else (0.0, 0.0, 0.0), dtype)
-            for p in mesh.patches]
+        self.patch_kind = [self.case.bc(_patch_role(p.normal)).kind
+                           for p in mesh.patches]
+        self.patch_Ub = [self._patch_Ub(p) for p in mesh.patches]
         self.V = mesh.volume
         self.A = mesh.area
         self.h = mesh.h
@@ -91,9 +127,36 @@ class CavityAssembly:
         self.n_parts = P
         self.m = mesh.n_cells
         # outward z-normal per patch, for dynamic part-activity masks: the
-        # +z patch is the lid (rides on the last active part), the -z patch
-        # the bottom wall (part 0); everything else is on every active part
+        # +z patch rides on the last active part, the -z patch on part 0;
+        # everything else is on every active part
         self._patch_nz = [p.normal[2] for p in mesh.patches]
+        # z-plane patches own the (P, 2, B) boundary-flux slots: slot DOWN
+        # is the z0 face, slot UP the z1 face (rows match if_rows order)
+        self._z_patch = {DOWN if nz < 0 else UP: pi
+                         for pi, nz in enumerate(self._patch_nz) if nz != 0}
+        self._needs_ref = self.case.needs_ref
+
+    def _patch_Ub(self, patch) -> jax.Array:
+        """Dirichlet boundary velocity of one patch: (3,) uniform, or
+        (n_bf, 3) per-face for a profiled inlet (outlets get zeros —
+        their velocity is zero-gradient, never sourced)."""
+        bc = self.case.bc(_patch_role(patch.normal))
+        U = jnp.asarray(bc.U if bc.kind != OUTLET else (0.0, 0.0, 0.0),
+                        self.dtype)
+        if bc.kind == INLET and bc.profile == "upper_half":
+            # plane rows are _plane_cells order: t -> (i = t % nx,
+            # j = t // nx); the inlet spans the j >= ny/2 half
+            j = np.arange(len(patch.rows)) // self.mesh.nx
+            prof = jnp.asarray(j >= self.mesh.ny // 2, self.dtype)
+            return prof[:, None] * U[None, :]
+        return U
+
+    def _z_Ub_face(self, slot: int) -> jax.Array:
+        """(B, 3) Dirichlet velocity over a z-plane slot (zeros for
+        outlet: inflow across an outlet convects nothing)."""
+        Ub = self.patch_Ub[self._z_patch[slot]]
+        return jnp.broadcast_to(jnp.atleast_2d(Ub),
+                                (self.plane, 3)).astype(self.dtype)
 
     # ------------------------------------------------------------------
     # part-activity masks (size-class padding support)
@@ -161,6 +224,31 @@ class CavityAssembly:
         phi_if = jnp.stack([phi_down, phi_up], axis=1) * self.if_mask
         return phi, phi_if
 
+    def boundary_flux(self, U: jax.Array) -> jax.Array:
+        """(P, 2, B) outward boundary fluxes of the z-plane patches.
+
+        Dirichlet patches (walls, lid, inlets) contribute their *fixed*
+        flux ``U_b . n A`` — independent of ``U``, zero for every wall —
+        while an outlet's zero-gradient flux extrapolates the owner-cell
+        velocity.  x/y wall patches never carry a normal flux (the case
+        registry restricts inlet/outlet to z-faces), so the plane pair
+        covers every nonzero boundary flux.  Masked by the active
+        ``patch_mask`` view, so padded ghost slabs stay flux-free.
+        """
+        P = U.shape[0]
+        phi_b = jnp.zeros((P, 2, self.plane), self.dtype)
+        for slot, pi in self._z_patch.items():
+            rows = self.patch_rows[pi]
+            mask = self.patch_mask[:, pi]
+            nz = self._patch_nz[pi]
+            if self.patch_kind[pi] == OUTLET:
+                f = U[:, rows, 2] * (nz * self.A)
+            else:
+                w = jnp.atleast_2d(self.patch_Ub[pi])[:, 2]  # (1,) or (B,)
+                f = jnp.broadcast_to(w * (nz * self.A), (P, self.plane))
+            phi_b = phi_b.at[:, slot].set(f * mask[:, None])
+        return phi_b.astype(self.dtype)
+
     # ------------------------------------------------------------------
     # Gauss gradient with zero-gradient boundary pressure
     # ------------------------------------------------------------------
@@ -179,22 +267,32 @@ class CavityAssembly:
         pf_up = 0.5 * (p[:, self.if_rows[UP]] + up) * self.if_mask[:, UP]
         g = g.at[:, self.if_rows[DOWN], 2].add(-self.A * pf_down)
         g = g.at[:, self.if_rows[UP], 2].add(self.A * pf_up)
-        # boundaries: zero-gradient ⇒ p_b = p_owner, S = A n_outward
-        for rows, mask, patch in zip(self.patch_rows, self.patch_mask.T,
-                                     self.mesh.patches):
+        # boundaries: zero-gradient ⇒ p_b = p_owner, S = A n_outward;
+        # outlets pin p_b = 0 (Dirichlet), so their face term vanishes
+        for rows, mask, kind, patch in zip(self.patch_rows,
+                                           self.patch_mask.T,
+                                           self.patch_kind,
+                                           self.mesh.patches):
+            if kind == OUTLET:
+                continue
             n = jnp.asarray(patch.normal, self.dtype)
             pb = p[:, rows] * mask[:, None]
             g = g.at[:, rows, :].add(pb[:, :, None] * (self.A * n)[None, None, :])
         return g / self.V
 
-    def divergence(self, phi: jax.Array, phi_if: jax.Array) -> jax.Array:
-        """(P, m) cell divergence of face fluxes (outward-positive)."""
+    def divergence(self, phi: jax.Array, phi_if: jax.Array,
+                   phi_b: jax.Array | None = None) -> jax.Array:
+        """(P, m) cell divergence of face fluxes (outward-positive);
+        ``phi_b`` adds the z-plane boundary fluxes (inlet/outlet cases)."""
         P = phi.shape[0]
         d = jnp.zeros((P, self.m), self.dtype)
         d = d.at[:, self.owner].add(phi)
         d = d.at[:, self.neigh].add(-phi)
         d = d.at[:, self.if_rows[DOWN]].add(phi_if[:, DOWN])
         d = d.at[:, self.if_rows[UP]].add(phi_if[:, UP])
+        if phi_b is not None:
+            d = d.at[:, self.if_rows[DOWN]].add(phi_b[:, DOWN])
+            d = d.at[:, self.if_rows[UP]].add(phi_b[:, UP])
         return d
 
     # ------------------------------------------------------------------
@@ -202,7 +300,8 @@ class CavityAssembly:
     # ------------------------------------------------------------------
     def assemble_momentum(self, U_old: jax.Array, phi: jax.Array,
                           phi_if: jax.Array, p: jax.Array,
-                          dt: float) -> MomentumSystem:
+                          dt: float,
+                          phi_b: jax.Array | None = None) -> MomentumSystem:
         P, m = U_old.shape[:2]
         F = phi.shape[1]
         diag = jnp.full((P, m), self.V / dt, self.dtype)
@@ -220,6 +319,20 @@ class CavityAssembly:
         diag = diag.at[:, self.if_rows[UP]].add(jnp.maximum(phi_if[:, UP], 0.0))
         iface = iface + jnp.minimum(phi_if, 0.0)
 
+        # boundary convection (z-plane patches, upwind): outflow convects
+        # the owner value (diagonal), inflow convects the Dirichlet
+        # boundary velocity (source).  Identically zero for the cavity
+        # (every wall flux vanishes).
+        if phi_b is not None:
+            for slot in (DOWN, UP):
+                rows = self.if_rows[slot]
+                diag = diag.at[:, rows].add(
+                    jnp.maximum(phi_b[:, slot], 0.0))
+                Ub = self._z_Ub_face(slot)
+                source = source.at[:, rows, :].add(
+                    (-jnp.minimum(phi_b[:, slot], 0.0))[..., None]
+                    * Ub[None, :, :])
+
         # diffusion, central
         g = self.nu * self.A / self.h
         diag = diag.at[:, self.owner].add(g)
@@ -230,13 +343,16 @@ class CavityAssembly:
         diag = diag.at[:, self.if_rows[UP]].add(g * self.if_mask[:, UP])
         iface = iface - g * self.if_mask
 
-        # boundary diffusion (Dirichlet walls/lid, half-cell distance)
+        # boundary diffusion (Dirichlet walls/lid/inlets, half-cell
+        # distance); outlets are zero-gradient — no boundary term
         gb = self.nu * self.A / (0.5 * self.h)
-        for rows, mask, Ub in zip(self.patch_rows, self.patch_mask.T,
-                                  self.patch_Ub):
+        for rows, mask, Ub, kind in zip(self.patch_rows, self.patch_mask.T,
+                                        self.patch_Ub, self.patch_kind):
+            if kind == OUTLET:
+                continue
             diag = diag.at[:, rows].add(gb * mask[:, None])
             source = source.at[:, rows, :].add(
-                gb * mask[:, None, None] * Ub[None, None, :])
+                gb * mask[:, None, None] * jnp.atleast_2d(Ub)[None, ...])
 
         # pressure gradient source
         source = source - self.V * self.grad(p)
@@ -257,12 +373,18 @@ class CavityAssembly:
     # ------------------------------------------------------------------
     def assemble_pressure(self, rAU: jax.Array, phiHbyA: jax.Array,
                           phiHbyA_if: jax.Array,
+                          phiHbyA_b: jax.Array | None = None,
                           ref_boost: float = 1.0) -> PressureSystem:
         """-laplacian(rAU, p) = -div(phiHbyA), SPD form for CG.
 
         Face conductance ``g_f = rAU_f * A / h`` with linear interpolation of
-        rAU.  ``setReference``: the global reference cell (part 0, cell 0) gets
-        its diagonal boosted (refValue = 0), removing the Neumann nullspace.
+        rAU.  Outlet patches carry a Dirichlet p = 0 at the half-cell
+        boundary distance (``g_b = rAU * A / (h/2)`` added to the diagonal
+        only — the fixed boundary value contributes nothing to the source),
+        which pins the pressure level.  Cases without an outlet are
+        all-Neumann; there, ``setReference``: the global reference cell
+        (part 0, cell 0) gets its diagonal boosted (refValue = 0),
+        removing the nullspace.
         """
         P, m = rAU.shape
         rAUf = 0.5 * (rAU[:, self.owner] + rAU[:, self.neigh])
@@ -280,11 +402,25 @@ class CavityAssembly:
         upper = -g_int
         lower = -g_int
         iface = -g_if
-        source = -self.divergence(phiHbyA, phiHbyA_if)
-        # reference cell: diag *= (1 + boost) at global cell 0 (OpenFOAM-like)
-        boost = jnp.zeros((P, m), self.dtype).at[0, 0].set(ref_boost)
-        diag = diag * (1.0 + boost)
-        return PressureSystem(diag, upper, lower, iface, source, g_int, g_if)
+
+        # outlet Dirichlet-p conductances, (P, 2, B) plane pair
+        g_b = jnp.zeros((P, 2, self.plane), self.dtype)
+        for slot, pi in self._z_patch.items():
+            if self.patch_kind[pi] != OUTLET:
+                continue
+            rows = self.if_rows[slot]
+            gb = rAU[:, rows] * (self.A / (0.5 * self.h))
+            g_b = g_b.at[:, slot].set(gb * self.patch_mask[:, pi][:, None])
+            diag = diag.at[:, rows].add(g_b[:, slot])
+
+        source = -self.divergence(phiHbyA, phiHbyA_if, phiHbyA_b)
+        if self._needs_ref:
+            # reference cell: diag *= (1 + boost) at global cell 0
+            # (OpenFOAM-like); redundant (and skipped) with an outlet
+            boost = jnp.zeros((P, m), self.dtype).at[0, 0].set(ref_boost)
+            diag = diag * (1.0 + boost)
+        return PressureSystem(diag, upper, lower, iface, source,
+                              g_int, g_if, g_b)
 
     def correct_flux(self, sysP: PressureSystem, phiHbyA, phiHbyA_if, p):
         """phi = phiHbyA - g_f (p_n - p_o); conservative by construction."""
@@ -296,3 +432,17 @@ class CavityAssembly:
         phi_if = phiHbyA_if - jnp.stack(
             [sysP.g_if[:, DOWN] * dp_down, sysP.g_if[:, UP] * dp_up], axis=1)
         return phi, phi_if * self.if_mask
+
+    def correct_boundary_flux(self, sysP: PressureSystem, phiHbyA_b, p):
+        """phi_b = phiHbyA_b - g_b (p_b - p_o) with outlet p_b = 0.
+
+        ``g_b`` is zero except on outlet planes, so inlet/wall boundary
+        fluxes pass through unchanged; outlet fluxes pick up the Dirichlet
+        correction that makes the corrected field conservative cell-wise
+        (same ``g_b`` as the matrix diagonal, mirroring OpenFOAM's
+        ``fixedValue`` pressure-flux correction).
+        """
+        corr = jnp.stack(
+            [sysP.g_b[:, DOWN] * p[:, self.if_rows[DOWN]],
+             sysP.g_b[:, UP] * p[:, self.if_rows[UP]]], axis=1)
+        return phiHbyA_b + corr

@@ -17,9 +17,16 @@ corrector ``assemble_p → update_p → solve_p → correct``) and compiled thre
 ways from that single definition — fused one-dispatch (``step`` /
 scan-rolled ``run_steps``), per-phase instrumented (``timed_step``, the
 adaptive controller's feedback), and the serving engine's sampled mix.
-``PisoSolver`` is the thin *binder*: it owns the plans, the SolverOps
-backend dispatch and the SPMD layout constraints, and memoizes the built
-program + executors per ``(alpha, solve_mode, solver_backend)``.
+
+:class:`SegregatedSolver` is the case- and program-agnostic *binder*: it
+owns the plans, the SolverOps backend dispatch and the SPMD layout
+constraints, binds a :class:`~repro.fvm.cases.FlowCase` BC set into the
+assembly, builds the registered program named by ``program_name``
+(``fvm/step_program.PROGRAMS``), and memoizes the built program +
+executors per ``(program, alpha, solve_mode, solver_backend)``.
+:class:`PisoSolver` and :class:`SimpleSolver` are thin registered
+specializations — the transient PISO marcher and the steady-state
+under-relaxed SIMPLE iterator (``run_steady``).
 
 Under pjit the part axes are sharded and the halo exchanges/reductions
 lower to collectives.
@@ -36,14 +43,16 @@ from repro.core.ldu import buffer_from_parts
 from repro.core.repartition import RepartitionPlan, plan_for_mesh
 from repro.core.update import update_device_direct, update_host_buffer
 from repro.fvm.assembly import CavityAssembly
+from repro.fvm.cases import FlowCase, get_case
 from repro.fvm.mesh import CavityMesh
-from repro.fvm.step_program import ProgramExecutors, build_piso_program
+from repro.fvm.step_program import ProgramExecutors, get_program
 from repro.solvers.jacobi import jacobi_preconditioner
 from repro.solvers.ops import (fused_stacked_ops, reference_ops,
                                resolve_backend)
 from repro.sparse.distributed import spmv_dia
 
-__all__ = ["PisoSolver", "PisoState", "StepStats", "stack_states",
+__all__ = ["SegregatedSolver", "PisoSolver", "SimpleSolver", "SOLVERS",
+           "make_solver", "PisoState", "StepStats", "stack_states",
            "unstack_states"]
 
 
@@ -52,6 +61,7 @@ class PisoState(NamedTuple):
     p: jax.Array       # (P, m)
     phi: jax.Array     # (P, F) conservative face fluxes
     phi_if: jax.Array  # (P, 2, B)
+    phi_b: jax.Array   # (P, 2, B) z-boundary fluxes (zero for the cavity)
 
 
 class StepStats(NamedTuple):
@@ -105,13 +115,21 @@ def unstack_states(stacked: PisoState, n: int | None = None):
 
 
 @dataclasses.dataclass
-class PisoSolver:
-    """Bind a mesh + repartitioning ratio alpha into a compiled PISO stepper.
+class SegregatedSolver:
+    """Bind a mesh + flow case + repartitioning ratio alpha into a compiled
+    segregated stepper.
 
-    The solver is a binder: plans + SolverOps + a StepProgram.  The fused
-    stepper **donates** the input ``PisoState`` buffers (keep using the
-    returned state, never the argument) and traces ``dt`` as an ordinary
-    operand, so varying the timestep size never recompiles.
+    The solver is a binder: plans + SolverOps + a registered StepProgram
+    (``program_name`` → ``fvm/step_program.PROGRAMS``).  The fused stepper
+    **donates** the input ``PisoState`` buffers (keep using the returned
+    state, never the argument) and traces ``dt`` as an ordinary operand,
+    so varying the timestep size never recompiles.  ``case`` names a
+    :class:`~repro.fvm.cases.FlowCase` BC set (or passes one directly);
+    the default cavity keeps the seed's exact lid-driven numerics.
+
+    Use the registered specializations — :class:`PisoSolver` (transient)
+    and :class:`SimpleSolver` (steady, ``run_steady``) — or
+    :func:`make_solver`.
     """
 
     mesh: CavityMesh
@@ -119,6 +137,16 @@ class PisoSolver:
     nu: float = 0.01
     lid_speed: float = 1.0
     n_correctors: int = 2
+    program_name: str = "piso"
+    case: str | FlowCase = "cavity"
+    # SIMPLE's under-relaxation factors + outer-loop convergence gates
+    # (traced per-session operands via the program's extra_keys — unused
+    # by transient programs)
+    relax_u: float = 0.7
+    relax_p: float = 0.3
+    tol_continuity: float = 1e-5
+    tol_u: float = 1e-6
+    max_outer: int = 200
     mom_tol: float = 1e-7
     p_tol: float = 1e-8
     update_schedule: str = "device_direct"  # or "host_buffer" (paper fig. 9)
@@ -176,8 +204,15 @@ class PisoSolver:
         # an explicitly supplied mesh is honoured; otherwise full_mesh mode
         # owns (and re-shapes) its mesh across rebind_alpha
         self._auto_mesh = self.spmd_mesh is None
+        # bind the flow case: the default cavity goes through the
+        # assembly's historical case=None path so lid_speed keeps its
+        # exact legacy meaning (bitwise-identical numerics)
+        self.case_spec = get_case(self.case)
+        self.case = self.case_spec.name
+        asm_case = None if self.case == "cavity" else self.case_spec
         self.asm = CavityAssembly(self.mesh, nu=self.nu,
-                                  lid_speed=self.lid_speed, dtype=self.dtype)
+                                  lid_speed=self.lid_speed, dtype=self.dtype,
+                                  case=asm_case)
         # identity repartition for the momentum (fine-partition) matrix
         self.plan_mom: RepartitionPlan = self._plan_for(1)
         self._update = (update_device_direct
@@ -227,7 +262,8 @@ class PisoSolver:
                 self.spmd_mesh = make_cfd_mesh(
                     self.n_coarse, alpha,
                     devices=list(self.spmd_mesh.devices.flat))
-        key = (alpha, self.solve_mode, self.solver_backend)
+        key = (self.program_name, alpha, self.solve_mode,
+               self.solver_backend)
         exe = self._programs.get(key)
         if exe is None:
             # a fresh program binds fresh closures over the new plans, so
@@ -235,7 +271,7 @@ class PisoSolver:
             # aliased one trace across rebinds and kept executing the
             # first alpha's compiled program)
             exe = self._programs[key] = ProgramExecutors(
-                build_piso_program(self))
+                get_program(self.program_name).build(self))
         self._exec = exe
 
     # ---- helpers ------------------------------------------------------
@@ -244,25 +280,47 @@ class PisoSolver:
         """The bound :class:`~repro.fvm.step_program.StepProgram`."""
         return self._exec.program
 
+    def _extra_value(self, key: str, filler: bool = False):
+        """One extra traced operand by name (``program.extra_keys``).
+
+        ``filler=True`` is the value a zero lane of a padded cohort
+        carries (``n_active=0`` deactivates every mask; the relaxation
+        factors keep their real values — harmless on a zeroed state)."""
+        if key == "n_active":
+            return jnp.asarray(0 if filler else self.n_active, jnp.int32)
+        if key == "relax_u":
+            return jnp.asarray(self.relax_u, self.dtype)
+        if key == "relax_p":
+            return jnp.asarray(self.relax_p, self.dtype)
+        raise KeyError(f"program asks for unknown extra operand {key!r}")
+
     def _extras(self) -> tuple:
         """Extra traced operands the bound program expects per step.
 
-        A padded (size-class) program takes the real slab count
-        ``n_active``; a plain program takes nothing.  Exposed so the
-        serving engine can build the *stacked* per-lane vector for a
-        batched cohort dispatch."""
-        if not self.padded:
-            return ()
-        return (jnp.asarray(self.n_active, jnp.int32),)
+        Driven by ``program.extra_keys``: a padded (size-class) program
+        takes the real slab count ``n_active``; SIMPLE adds its
+        under-relaxation factors.  Exposed so the serving engine can
+        build the *stacked* per-lane vectors for a batched cohort
+        dispatch."""
+        return tuple(self._extra_value(k) for k in self.program.extra_keys)
+
+    def _filler_extras(self) -> tuple:
+        """The extras a padded cohort's zero filler lane carries."""
+        return tuple(self._extra_value(k, filler=True)
+                     for k in self.program.extra_keys)
 
     def initial_state(self) -> PisoState:
         P, m, F = self.mesh.n_parts, self.mesh.n_cells, self.mesh.n_faces
         B = self.mesh.plane
+        U = jnp.zeros((P, m, 3), self.dtype)
         return PisoState(
-            U=jnp.zeros((P, m, 3), self.dtype),
+            U=U,
             p=jnp.zeros((P, m), self.dtype),
             phi=jnp.zeros((P, F), self.dtype),
             phi_if=jnp.zeros((P, 2, B), self.dtype),
+            # Dirichlet boundary fluxes are fixed from step 0 (exact zeros
+            # for the cavity; the inlet flux for inlet/outlet cases)
+            phi_b=self.asm.boundary_flux(U),
         )
 
     def _solve_constraint(self, x):
@@ -406,6 +464,58 @@ class PisoSolver:
             windows.append(w)
         stats = jax.tree.map(lambda *xs: jnp.concatenate(xs), *windows)
         return state, stats
+
+    def run_steady(self, dt: float = 1.0, state: PisoState | None = None,
+                   max_outer: int | None = None):
+        """Outer-iterate to the program's convergence predicate as ONE
+        ``lax.while_loop`` dispatch (steady-state programs only — the
+        program must declare ``converged``).
+
+        ``dt`` is ignored by a true steady program (SIMPLE assembles with
+        an infinite timestep) but stays a traced operand so the executor
+        signature is uniform.  Returns ``(state, stats, n_outer)`` with
+        ``stats`` the last outer iteration's residuals and ``n_outer``
+        the iteration count actually run (== the cap when unconverged).
+        Donates ``state``.
+        """
+        state = self.initial_state() if state is None else state
+        cap = self.max_outer if max_outer is None else max_outer
+        return self._exec.fused.run_converged(state, dt, cap,
+                                              *self._extras())
+
+
+@dataclasses.dataclass
+class PisoSolver(SegregatedSolver):
+    """The transient PISO marcher (the paper's measured solver)."""
+
+    program_name: str = "piso"
+
+
+@dataclasses.dataclass
+class SimpleSolver(SegregatedSolver):
+    """The steady-state under-relaxed SIMPLE iterator (``run_steady``).
+
+    One pressure correction per outer iteration (simpleFoam), implicit
+    momentum under-relaxation by ``relax_u``, explicit pressure
+    relaxation by ``relax_p``; converged when both the continuity error
+    and the outer velocity change drop below their gates.
+    """
+
+    program_name: str = "simple"
+    n_correctors: int = 1
+
+
+SOLVERS: dict[str, type] = {"piso": PisoSolver, "simple": SimpleSolver}
+
+
+def make_solver(program: str, mesh: CavityMesh, **kw) -> SegregatedSolver:
+    """Construct the registered solver specialization for a program name."""
+    try:
+        cls = SOLVERS[program]
+    except KeyError:
+        raise KeyError(f"unknown program {program!r} "
+                       f"(registered: {tuple(sorted(SOLVERS))})") from None
+    return cls(mesh, **kw)
 
 
 def _offdiag3(asm: CavityAssembly, sysM, U: jax.Array) -> jax.Array:

@@ -57,7 +57,8 @@ from repro.core.cost_model import PhaseBreakdown
 __all__ = [
     "Phase", "StepProgram", "FusedExecutor", "InstrumentedExecutor",
     "BatchedExecutor", "ProgramExecutors", "build_piso_program",
-    "PHASE_TAGS",
+    "PHASE_TAGS", "ProgramSpec", "PROGRAMS", "register_program",
+    "get_program", "program_names", "PhaseToolkit",
 ]
 
 # the cost-model buckets a phase may bill to (PhaseBreakdown fields)
@@ -180,6 +181,48 @@ def _memoized_roll(cache: dict, fn: Callable, n_steps: int) -> Callable:
     return roll
 
 
+def _converged_outer(program: StepProgram, max_iters: int) -> Callable:
+    """The per-session outer loop: iterate the program's step under
+    ``lax.while_loop`` until its ``converged`` predicate fires on the
+    step stats, capped at ``max_iters``.
+
+    Returns a pure ``(state, dt, *extra) -> (state, stats, n_outer)``
+    function (``n_outer`` an int32 scalar — the number of outer
+    iterations actually run).  The first step is unrolled so the loop
+    carry ``(state, stats, k)`` has concrete stats to test; the caller
+    jits (donating the state) and optionally vmaps it — under ``vmap``
+    the while-loop's batching rule keeps stepping until every lane's
+    predicate drops while *selecting the old carry* for already-converged
+    lanes, so each session in a cohort stops at its own iteration count.
+    """
+    n = int(max_iters)
+    if n < 1:
+        raise ValueError(f"max_iters must be >= 1, got {max_iters}")
+    if program.converged is None:
+        raise ValueError(
+            "program declares no convergence predicate (converged=None): "
+            "run_converged is only meaningful for steady-state programs")
+    step = program.as_step_fn()
+    conv = program.converged
+
+    def run(state, dt, *extra):
+        state, stats = step(state, dt, *extra)
+
+        def cond(carry):
+            _, st, k = carry
+            return (k < n) & jnp.logical_not(conv(st))
+
+        def body(carry):
+            s, _, k = carry
+            s, st = step(s, dt, *extra)
+            return s, st, k + 1
+
+        return jax.lax.while_loop(
+            cond, body, (state, stats, jnp.asarray(1, jnp.int32)))
+
+    return run
+
+
 @dataclasses.dataclass(frozen=True)
 class StepProgram:
     """An ordered phase list + env seeding/finalization: one timestep.
@@ -201,8 +244,17 @@ class StepProgram:
     # called as seed(state, dt, *extras) and every executor entry point
     # accepts the same trailing operands.  A padded (size-class) program
     # declares ("n_active",) — the traced real-part count each session
-    # carries so one compiled program serves a whole size class.
+    # carries so one compiled program serves a whole size class; SIMPLE
+    # adds its under-relaxation factors ("relax_u", "relax_p") so two
+    # tenants with different factors share one compilation.
     extra_keys: tuple[str, ...] = ()
+    # the program's outer-loop convergence predicate: ``stats -> bool``
+    # on the per-step stats pytree (a traced scalar under jit).  A
+    # steady-state program (SIMPLE) declares one and the executors'
+    # ``run_converged`` iterates the step under ``lax.while_loop`` until
+    # it fires or an iteration cap is hit; ``None`` (transient programs —
+    # PISO) means the program only rolls fixed windows.
+    converged: Callable | None = None
 
     def __post_init__(self):
         available = set(self.seed_keys)
@@ -260,6 +312,7 @@ class FusedExecutor:
         self._fn = program.as_step_fn()
         self._step = jax.jit(self._fn, donate_argnums=(0,))
         self._rolled: dict[int, Callable] = {}
+        self._outer: dict[int, Callable] = {}
         self.dispatches = 0
 
     def step(self, state, dt, *extra):
@@ -275,6 +328,20 @@ class FusedExecutor:
         roll = _memoized_roll(self._rolled, self._fn, n_steps)
         self.dispatches += 1
         return roll(state, dt, *extra)
+
+    def run_converged(self, state, dt, max_iters: int, *extra):
+        """Outer-iterate to the program's convergence predicate as ONE
+        dispatch (``lax.while_loop`` over the step, capped at
+        ``max_iters``).  Returns ``(state, stats, n_outer)`` — the
+        last step's stats and the iteration count actually run.
+        Donates ``state``; memoized per distinct cap."""
+        n = int(max_iters)
+        outer = self._outer.get(n)
+        if outer is None:
+            outer = self._outer[n] = jax.jit(
+                _converged_outer(self.program, n), donate_argnums=(0,))
+        self.dispatches += 1
+        return outer(state, dt, *extra)
 
     @property
     def trace_count(self) -> int:
@@ -369,6 +436,7 @@ class BatchedExecutor:
         self._vfn = jax.vmap(program.as_step_fn(), in_axes=0)
         self._step = jax.jit(self._vfn, donate_argnums=(0,))
         self._rolled: dict[int, Callable] = {}
+        self._outer: dict[int, Callable] = {}
         self.dispatches = 0
         # the batched instrumented walk: per-phase vmapped jits (shared per
         # phase name, like InstrumentedExecutor; the plan cache's pooled
@@ -413,6 +481,27 @@ class BatchedExecutor:
         roll = _memoized_roll(self._rolled, self._vfn, n_steps)
         self.dispatches += 1
         return roll(states, dts, *extras)
+
+    def run_converged(self, states, dts, max_iters: int, *extras):
+        """The whole cohort outer-iterated to convergence as ONE dispatch.
+
+        ``jax.vmap`` of the per-session while loop: the batched predicate
+        keeps the loop alive until every lane converges (or hits the
+        cap), with already-converged lanes frozen by the while-loop
+        batching rule's carry select — each session's final state and
+        ``n_outer`` match its solo ``FusedExecutor.run_converged`` run.
+        Returns ``(states, stats, n_outer)`` with ``n_outer`` a
+        ``(batch,)`` int32 vector.  Donates ``states``.
+        """
+        self._check(states, dts, extras)
+        n = int(max_iters)
+        outer = self._outer.get(n)
+        if outer is None:
+            outer = self._outer[n] = jax.jit(
+                jax.vmap(_converged_outer(self.program, n)),
+                donate_argnums=(0,))
+        self.dispatches += 1
+        return outer(states, dts, *extras)
 
     def timed_step(self, states, dts, *extras):
         """One instrumented cohort step.
@@ -485,33 +574,95 @@ def roll_schedule(start: int, n_steps: int, every: int | None,
 
 
 # ---------------------------------------------------------------------------
-# The PISO program
+# The program registry: timestep programs as first-class artifacts
 # ---------------------------------------------------------------------------
 
-def build_piso_program(solver) -> StepProgram:
-    """Bind a ``PisoSolver``'s plans + SolverOps into the PISO phase list.
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """Registry entry for a timestep program.
 
-    Phases close over the solver's *current* plans and SPMD mesh; the
-    solver memoizes the built program (and its executors) per
-    ``(alpha, solve_mode, solver_backend)``, so a rebind to a new alpha
-    builds a fresh program while a revisited alpha reuses trace + XLA
-    work.  The phase order is the paper's fig. 5/7 decomposition:
-    ``assemble_mom → update_mom → solve_mom`` then, per corrector,
-    ``assemble_p → update_p → solve_p → correct``.
-
-    A solver bound to a size-class :class:`~repro.fvm.mesh.PaddedCavityMesh`
-    (``solver.padded``) builds the **padded** program: the step takes one
-    extra traced operand ``n_active`` (the session's real slab count), the
-    seed derives the interface/patch activity masks from it
-    (:meth:`~repro.fvm.assembly.CavityAssembly.dynamic_masks`), and the
-    assembly phases consume those masks instead of the static ones — so
-    ONE compiled (and vmapped) program serves every session of the size
-    class, whatever its real mesh size.  Ghost slabs stay exactly zero:
-    masked interfaces decouple them, their Krylov residual rows are 0, and
-    every global reduction they join gains only exact zeros.
+    ``build(solver)`` binds a :class:`SegregatedSolver`'s plans +
+    SolverOps into a :class:`StepProgram`; ``transient`` distinguishes
+    time-marching programs (PISO — roll fixed windows) from steady-state
+    ones (SIMPLE — outer-iterate to ``converged``).  Mirrors the flow-case
+    registry (``fvm/cases.py``): the *name* is what solver bindings,
+    serving cohort keys and benchmark cells thread around.
     """
+
+    name: str
+    build: Callable
+    transient: bool = True
+    description: str = ""
+
+
+PROGRAMS: dict[str, ProgramSpec] = {}
+
+
+def register_program(spec: ProgramSpec) -> ProgramSpec:
+    if spec.name in PROGRAMS:
+        raise ValueError(f"program {spec.name!r} already registered")
+    PROGRAMS[spec.name] = spec
+    return spec
+
+
+def program_names() -> tuple[str, ...]:
+    get_program("simple")  # force the lazy registration
+    return tuple(sorted(PROGRAMS))
+
+
+def get_program(name: str) -> ProgramSpec:
+    """Look up a registered program spec by name.
+
+    ``repro.fvm.simple`` registers on import; it is imported lazily here
+    (it imports this module) so ``SimpleSolver`` users never need to
+    touch it directly.
+    """
+    if name not in PROGRAMS:
+        import importlib
+        try:
+            importlib.import_module("repro.fvm.simple")
+        except ImportError:
+            pass
+    try:
+        return PROGRAMS[name]
+    except KeyError:
+        raise KeyError(f"unknown program {name!r} "
+                       f"(registered: {tuple(sorted(PROGRAMS))})") from None
+
+
+# ---------------------------------------------------------------------------
+# The shared phase toolkit (PISO + SIMPLE bind the same phase functions)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PhaseToolkit:
+    """The segregated-scheme phase functions bound to one solver.
+
+    Both registered programs are *phase lists over the same phases*
+    (Tomczak et al., arXiv:1207.1571): momentum assembly/solve, the
+    pressure equation, the conservative flux correction.
+    :func:`build_piso_program` and ``repro.fvm.simple``'s builder draw
+    from this one binding so a phase-function fix lands in both."""
+
+    asm: object
+    padded: bool
+    mask_keys: tuple[str, ...]
+    asm_of: Callable            # (*masks) -> assembly view
+    assemble_mom: Callable
+    update_mom: Callable
+    solve_mom: Callable
+    assemble_p: Callable
+    update_p: Callable
+    solve_p: Callable
+    halo_probe: Callable
+    update_mom_inst: Callable | None
+    update_p_inst: Callable | None
+
+
+def _phase_toolkit(solver) -> PhaseToolkit:
+    """Bind the shared phase functions to a solver's plans + SolverOps."""
     from repro.core.ldu import buffer_from_parts
-    from repro.fvm.piso import PisoState, StepStats, _offdiag3
+    from repro.fvm.piso import _offdiag3
     from repro.solvers.bicgstab import BiCGStabResult, bicgstab
     from repro.solvers.cg import cg
     from repro.sparse.distributed import x_pad
@@ -519,11 +670,8 @@ def build_piso_program(solver) -> StepProgram:
     asm = solver.asm
     plan_m, plan_p = solver.plan_mom, solver.plan_p
     n_c = solver.n_coarse
-    n_corr = solver.n_correctors
     mom_tol, p_tol = solver.mom_tol, solver.p_tol
     padded = getattr(solver, "padded", False)
-    if n_corr < 1:
-        raise ValueError("the PISO program needs at least one corrector")
 
     # the activity-mask binding: a padded program threads per-session
     # (traced) masks through the env; a plain program uses the assembly's
@@ -534,8 +682,9 @@ def build_piso_program(solver) -> StepProgram:
         return asm.with_masks(*masks) if masks else asm
 
     # -- momentum predictor (fine partition, BiCGStab, Jacobi) ------------
-    def assemble_mom(U, phi, phi_if, p, dt, *masks):
-        return _asm_of(*masks).assemble_momentum(U, phi, phi_if, p, dt)
+    def assemble_mom(U, phi, phi_if, phi_b, p, dt, *masks):
+        return _asm_of(*masks).assemble_momentum(U, phi, phi_if, p, dt,
+                                                 phi_b=phi_b)
 
     def update_mom(sysM):
         return solver._bands(plan_m, sysM.diag, sysM.upper, sysM.lower,
@@ -550,14 +699,15 @@ def build_piso_program(solver) -> StepProgram:
         )(sysM.source, U)
         return res.x, jnp.max(res.iters)
 
-    # -- PISO correctors ---------------------------------------------------
+    # -- the pressure equation --------------------------------------------
     def assemble_p(sysM, U, *masks):
         a = _asm_of(*masks)
         rAU = a.V / sysM.diag
         HbyA = (sysM.source - _offdiag3(a, sysM, U)) / sysM.diag[..., None]
         phiH, phiH_if = a.face_flux(HbyA)
-        sysP = a.assemble_pressure(rAU, phiH, phiH_if)
-        return rAU, HbyA, phiH, phiH_if, sysP
+        phiH_b = a.boundary_flux(HbyA)
+        sysP = a.assemble_pressure(rAU, phiH, phiH_if, phiH_b)
+        return rAU, HbyA, phiH, phiH_if, phiH_b, sysP
 
     def update_p(sysP):
         return solver._solve_constraint(
@@ -574,13 +724,6 @@ def build_piso_program(solver) -> StepProgram:
 
     def halo_probe(p):
         return x_pad(p.reshape(n_c, -1), plan_p.plane)
-
-    def correct(sysP, phiH, phiH_if, p, HbyA, rAU, *masks):
-        a = _asm_of(*masks)
-        phi, phi_if = a.correct_flux(sysP, phiH, phiH_if, p)
-        U = HbyA - rAU[..., None] * a.grad(p)
-        cont = jnp.max(jnp.abs(a.divergence(phi, phi_if))) / a.V
-        return phi, phi_if, U, cont
 
     # -- plan-cache hook: pooled compiled updates (instrumented path only) -
     update_mom_inst = update_p_inst = None
@@ -608,6 +751,56 @@ def build_piso_program(solver) -> StepProgram:
         def update_p_inst(sysP):
             return constrain(pooled_p(group_p(sysP)))
 
+    return PhaseToolkit(
+        asm=asm, padded=padded, mask_keys=mask_keys, asm_of=_asm_of,
+        assemble_mom=assemble_mom, update_mom=update_mom,
+        solve_mom=solve_mom, assemble_p=assemble_p, update_p=update_p,
+        solve_p=solve_p, halo_probe=halo_probe,
+        update_mom_inst=update_mom_inst, update_p_inst=update_p_inst)
+
+
+# ---------------------------------------------------------------------------
+# The PISO program
+# ---------------------------------------------------------------------------
+
+def build_piso_program(solver) -> StepProgram:
+    """Bind a ``PisoSolver``'s plans + SolverOps into the PISO phase list.
+
+    Phases close over the solver's *current* plans and SPMD mesh; the
+    solver memoizes the built program (and its executors) per
+    ``(alpha, solve_mode, solver_backend)``, so a rebind to a new alpha
+    builds a fresh program while a revisited alpha reuses trace + XLA
+    work.  The phase order is the paper's fig. 5/7 decomposition:
+    ``assemble_mom → update_mom → solve_mom`` then, per corrector,
+    ``assemble_p → update_p → solve_p → correct``.
+
+    A solver bound to a size-class :class:`~repro.fvm.mesh.PaddedCavityMesh`
+    (``solver.padded``) builds the **padded** program: the step takes one
+    extra traced operand ``n_active`` (the session's real slab count), the
+    seed derives the interface/patch activity masks from it
+    (:meth:`~repro.fvm.assembly.CavityAssembly.dynamic_masks`), and the
+    assembly phases consume those masks instead of the static ones — so
+    ONE compiled (and vmapped) program serves every session of the size
+    class, whatever its real mesh size.  Ghost slabs stay exactly zero:
+    masked interfaces decouple them, their Krylov residual rows are 0, and
+    every global reduction they join gains only exact zeros.
+    """
+    from repro.fvm.piso import PisoState, StepStats
+
+    tk = _phase_toolkit(solver)
+    asm, mask_keys = tk.asm, tk.mask_keys
+    n_corr = solver.n_correctors
+    if n_corr < 1:
+        raise ValueError("the PISO program needs at least one corrector")
+
+    def correct(sysP, phiH, phiH_if, phiH_b, p, HbyA, rAU, *masks):
+        a = tk.asm_of(*masks)
+        phi, phi_if = a.correct_flux(sysP, phiH, phiH_if, p)
+        phi_b = a.correct_boundary_flux(sysP, phiH_b, p)
+        U = HbyA - rAU[..., None] * a.grad(p)
+        cont = jnp.max(jnp.abs(a.divergence(phi, phi_if, phi_b))) / a.V
+        return phi, phi_if, phi_b, U, cont
+
     # phase attribution follows the paper's two partitions: the whole
     # fine-partition share (momentum predictor incl. its BiCGStab solve,
     # pressure assembly, corrections) bills to "assembly"; the coefficient
@@ -615,46 +808,49 @@ def build_piso_program(solver) -> StepProgram:
     # "solve" with its probed per-iteration exchange share on "halo"
     phases = [
         Phase("assemble_mom", "assembly",
-              ("U", "phi", "phi_if", "p", "dt") + mask_keys,
-              ("sysM",), assemble_mom),
-        Phase("update_mom", "assembly", ("sysM",), ("bandsM",), update_mom,
-              instrumented_fn=update_mom_inst),
+              ("U", "phi", "phi_if", "phi_b", "p", "dt") + mask_keys,
+              ("sysM",), tk.assemble_mom),
+        Phase("update_mom", "assembly", ("sysM",), ("bandsM",),
+              tk.update_mom, instrumented_fn=tk.update_mom_inst),
         Phase("solve_mom", "assembly", ("bandsM", "sysM", "U"),
-              ("U", "mom_iters"), solve_mom),
+              ("U", "mom_iters"), tk.solve_mom),
     ]
     for i in range(n_corr):
         phases += [
             Phase("assemble_p", "assembly", ("sysM", "U") + mask_keys,
-                  ("rAU", "HbyA", "phiH", "phiH_if", "sysP"), assemble_p,
-                  corrector=i),
-            Phase("update_p", "update", ("sysP",), ("bandsP",), update_p,
-                  corrector=i, instrumented_fn=update_p_inst),
+                  ("rAU", "HbyA", "phiH", "phiH_if", "phiH_b", "sysP"),
+                  tk.assemble_p, corrector=i),
+            Phase("update_p", "update", ("sysP",), ("bandsP",), tk.update_p,
+                  corrector=i, instrumented_fn=tk.update_p_inst),
             Phase("solve_p", "solve", ("bandsP", "sysP", "p"),
-                  ("p", f"p_iters_{i}", "p_res"), solve_p, corrector=i,
-                  probe=halo_probe, probe_inputs=("p",),
+                  ("p", f"p_iters_{i}", "p_res"), tk.solve_p, corrector=i,
+                  probe=tk.halo_probe, probe_inputs=("p",),
                   probe_iters=f"p_iters_{i}"),
             Phase("correct", "assembly",
-                  ("sysP", "phiH", "phiH_if", "p", "HbyA", "rAU") + mask_keys,
-                  ("phi", "phi_if", "U", "cont"), correct, corrector=i),
+                  ("sysP", "phiH", "phiH_if", "phiH_b", "p", "HbyA", "rAU")
+                  + mask_keys,
+                  ("phi", "phi_if", "phi_b", "U", "cont"), correct,
+                  corrector=i),
         ]
 
-    if padded:
+    if tk.padded:
         def seed(state, dt, n_active):
-            U, p, phi, phi_if = state
+            U, p, phi, phi_if, phi_b = state
             if_mask, patch_mask = asm.dynamic_masks(n_active)
-            return {"U": U, "p": p, "phi": phi, "phi_if": phi_if, "dt": dt,
-                    "n_active": n_active, "if_mask": if_mask,
-                    "patch_mask": patch_mask}
+            return {"U": U, "p": p, "phi": phi, "phi_if": phi_if,
+                    "phi_b": phi_b, "dt": dt, "n_active": n_active,
+                    "if_mask": if_mask, "patch_mask": patch_mask}
 
-        seed_keys = ("U", "p", "phi", "phi_if", "dt", "n_active",
+        seed_keys = ("U", "p", "phi", "phi_if", "phi_b", "dt", "n_active",
                      "if_mask", "patch_mask")
         extra_keys = ("n_active",)
     else:
         def seed(state, dt):
-            U, p, phi, phi_if = state
-            return {"U": U, "p": p, "phi": phi, "phi_if": phi_if, "dt": dt}
+            U, p, phi, phi_if, phi_b = state
+            return {"U": U, "p": p, "phi": phi, "phi_if": phi_if,
+                    "phi_b": phi_b, "dt": dt}
 
-        seed_keys = ("U", "p", "phi", "phi_if", "dt")
+        seed_keys = ("U", "p", "phi", "phi_if", "phi_b", "dt")
         extra_keys = ()
 
     def finalize(env):
@@ -663,7 +859,19 @@ def build_piso_program(solver) -> StepProgram:
             p_iters=jnp.stack([env[f"p_iters_{i}"] for i in range(n_corr)]),
             continuity_err=env["cont"],
             p_residual=env["p_res"])
-        return PisoState(env["U"], env["p"], env["phi"], env["phi_if"]), stats
+        return (PisoState(env["U"], env["p"], env["phi"], env["phi_if"],
+                          env["phi_b"]),
+                stats)
 
     return StepProgram(phases=tuple(phases), seed=seed, finalize=finalize,
                        seed_keys=seed_keys, extra_keys=extra_keys)
+
+
+register_program(ProgramSpec(
+    name="piso",
+    build=build_piso_program,
+    transient=True,
+    description=("transient PISO: momentum predictor + n_correctors "
+                 "pressure corrections per timestep (the paper's fig. 5/7 "
+                 "decomposition)"),
+))

@@ -1,0 +1,248 @@
+"""CFD launcher: any registered flow case under any registered program.
+
+  python -m repro.launch.case --case cavity --program piso --n 12 --steps 10
+  python -m repro.launch.case --case channel --program simple --n 8
+
+Transient programs (PISO) advance ``--steps`` timesteps through the fused
+scan-rolled stepper; with ``--adaptive`` the per-phase timers feed the
+repartitioning controller, which recalibrates the cost model online and
+rebinds alpha when the predicted gain clears the hysteresis threshold.
+Steady programs (SIMPLE) instead iterate the program's convergence
+predicate under ``lax.while_loop`` (``run_steady``), capped at
+``--max-outer`` outer iterations.
+
+``python -m repro.launch.cavity`` is a compatibility shim over this
+driver with the historical defaults (``--case cavity --program piso``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core.controller import (ControllerConfig, PlanCache,
+                                   RepartitionController)
+from repro.core.cost_model import CostModel, TPU_V5E
+from repro.fvm.cases import case_names, get_case
+from repro.fvm.mesh import CavityMesh
+from repro.fvm.piso import SOLVERS, make_solver
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", default="cavity", choices=case_names(),
+                    help="flow case (BC set) from the case registry")
+    ap.add_argument("--program", default="piso",
+                    choices=tuple(sorted(SOLVERS)),
+                    help="timestep program: piso (transient) or simple "
+                         "(steady-state outer iteration)")
+    ap.add_argument("--re", type=float, default=0.0,
+                    help="Reynolds number; > 0 derives --nu from the case "
+                         "(nu = u_ref * L / Re at domain length L = n*h)")
+    ap.add_argument("--n", type=int, default=12, help="cells per axis")
+    ap.add_argument("--parts", type=int, default=4, help="fine parts (n_CPU)")
+    ap.add_argument("--alpha", type=int, default=2,
+                    help="repartitioning ratio (0 = pick via cost model)")
+    ap.add_argument("--steps", type=int, default=10,
+                    help="timesteps (transient programs)")
+    ap.add_argument("--max-outer", type=int, default=0,
+                    help="steady programs: outer-iteration cap "
+                         "(0 = solver default)")
+    ap.add_argument("--co", type=float, default=0.5, help="CFL number")
+    ap.add_argument("--nu", type=float, default=0.01)
+    ap.add_argument("--schedule", default="device_direct",
+                    choices=["device_direct", "host_buffer"])
+    ap.add_argument("--solve-mode", default="stacked",
+                    choices=["stacked", "full_mesh"],
+                    help="SPMD solve layout: stacked replicates solver rows "
+                         "over the assemble axis (paper-faithful C_i-idle); "
+                         "full_mesh row-shards the fused system over all "
+                         "devices (needs --parts visible devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--solver-backend", default="auto",
+                    choices=["auto", "fused", "reference"],
+                    help="Krylov per-iteration backend (repro.solvers.ops): "
+                         "fused = one-pass SpMV+dot and axpy-pair+Jacobi+"
+                         "dots Pallas kernels; reference = the plain jnp op "
+                         "sequence; auto picks fused once a part fills a "
+                         "kernel row block")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="feedback-driven alpha (overrides --alpha; "
+                         "transient programs only)")
+    ap.add_argument("--hysteresis", type=float, default=0.10,
+                    help="min relative predicted gain to switch alpha")
+    ap.add_argument("--sample-every", type=int, default=4,
+                    help="adaptive mode: timesteps per instrumented "
+                         "per-phase sample; steps in between advance via "
+                         "the fused scan-rolled stepper (one XLA dispatch "
+                         "per stretch)")
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="scan-roll window: up to this many timesteps "
+                         "execute as ONE XLA dispatch (StepProgram fused "
+                         "executor) — the whole run in non-adaptive mode, "
+                         "and the rolled stretches between instrumented "
+                         "samples in adaptive mode")
+    return ap
+
+
+def run_steady(args, mesh, alpha, nu) -> None:
+    """Steady program: iterate to the program's convergence predicate."""
+    solver = make_solver(args.program, mesh, alpha=alpha, nu=nu,
+                         case=args.case, update_schedule=args.schedule,
+                         solve_mode=args.solve_mode,
+                         solver_backend=args.solver_backend)
+    dt = args.co * mesh.h  # ignored by steady assembly; kept for the ABI
+    cap = args.max_outer or None
+    t0 = time.time()
+    state, stats, n_outer = solver.run_steady(dt=dt, max_outer=cap)
+    wall = time.time() - t0
+    n_outer = int(n_outer)
+    cont = float(stats.continuity_err)
+    u_delta = float(stats.u_delta)
+    done = bool(solver.program.converged(stats))
+    print(f"{args.case}/{args.program}: {'converged' if done else 'CAPPED'} "
+          f"after {n_outer} outer iterations in {wall:.2f}s "
+          f"({wall / max(n_outer, 1) * 1e3:.1f} ms/outer)")
+    print(f"  continuity={cont:.2e} (tol {solver.tol_continuity:.0e}) "
+          f"u_delta={u_delta:.2e} (tol {solver.tol_u:.0e}) "
+          f"mom_iters={int(stats.mom_iters)} "
+          f"p_iters={[int(i) for i in stats.p_iters]}")
+    print(f"  ({mesh.n_cells_global} cells, alpha={solver.alpha}, "
+          f"relax_u={solver.relax_u}, relax_p={solver.relax_p}, "
+          f"solve_mode={args.solve_mode}, "
+          f"solver_backend={args.solver_backend})")
+
+
+def run_transient(args, mesh, alpha, nu, cm) -> None:
+    """Transient program: scan-rolled timestepping, optionally adaptive."""
+    from repro.fvm.step_program import roll_schedule
+
+    dt = args.co * mesh.h  # u_ref 1 -> dt = Co*h
+
+    if args.adaptive:
+        cache = PlanCache()
+        # fixed_fine feasibility keeps only divisors of --parts
+        cfg = ControllerConfig(hysteresis=args.hysteresis,
+                               sample_every=max(args.sample_every, 1))
+        ctl = RepartitionController(cm, n_cpu=args.parts, n_gpu=1,
+                                    alpha0=alpha, config=cfg, cache=cache,
+                                    fixed_fine=True,
+                                    solve_mode=args.solve_mode,
+                                    solver_backend=args.solver_backend)
+        solver = make_solver(args.program, mesh, alpha=ctl.alpha, nu=nu,
+                             case=args.case, update_schedule=args.schedule,
+                             plan_cache=cache, solve_mode=args.solve_mode,
+                             solver_backend=args.solver_backend)
+        print(f"controller start: alpha={ctl.alpha} "
+              f"solve_mode={args.solve_mode} "
+              f"solver_backend={args.solver_backend} "
+              f"sample_every={cfg.sample_every}")
+        state = solver.initial_state()
+        t0 = time.time()
+        step = 0
+        # same cadence driver as SimulationEngine.step_session: sample the
+        # instrumented walk on the anchored grid, scan-roll the stretches
+        for is_sample, chunk in roll_schedule(0, args.steps,
+                                              cfg.sample_every,
+                                              cap=max(args.scan_steps, 1)):
+            if is_sample:
+                # instrumented sample: per-phase timers feed the controller
+                state, stats, sample = solver.timed_step(state, dt)
+                new_alpha = ctl.step(sample)
+                if new_alpha != solver.alpha:
+                    print(f"step {step}: controller switch alpha "
+                          f"{solver.alpha} -> {new_alpha}")
+                    solver.rebind_alpha(new_alpha)
+                print(f"step {step}: alpha={solver.alpha} "
+                      f"p_iters={[int(i) for i in stats.p_iters]} "
+                      f"continuity={float(stats.continuity_err):.2e} "
+                      f"phases(ms)=[as {sample.assembly*1e3:.1f} "
+                      f"up {sample.update*1e3:.1f} ha {sample.halo*1e3:.1f} "
+                      f"so {sample.solve*1e3:.1f}]")
+            else:
+                # fused scan-rolled stretch: ONE XLA dispatch
+                state, window = solver.run_steps(state, dt, chunk)
+                print(f"steps {step}..{step + chunk - 1}: "
+                      f"alpha={solver.alpha} rolled x{chunk} "
+                      f"p_iters={[int(i) for i in window.p_iters[-1]]} "
+                      f"continuity={float(window.continuity_err[-1]):.2e}")
+            step += chunk
+        s = ctl.stats()
+        print(f"{args.steps} steps in {time.time() - t0:.2f}s "
+              f"({mesh.n_cells_global} cells); final alpha={ctl.alpha}, "
+              f"{len(s['switches'])} switch(es), "
+              f"plan cache {s['cache']['hits']} hits / "
+              f"{s['cache']['misses']} misses")
+        return
+
+    if alpha is None:
+        alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
+        print(f"cost model picked alpha={alpha}")
+    solver = make_solver(args.program, mesh, alpha=alpha, nu=nu,
+                         case=args.case, update_schedule=args.schedule,
+                         solve_mode=args.solve_mode,
+                         solver_backend=args.solver_backend)
+    state = solver.initial_state()
+    t0 = time.time()
+    scan = max(args.scan_steps, 1)
+    step = 0
+    # every=None: no sampling — pure scan-rolled windows of <= scan steps
+    for _sample, chunk in roll_schedule(0, args.steps, None, cap=scan):
+        # each window is ONE XLA dispatch; stats come back per-step stacked
+        state, stats = solver.run_steps(state, dt, chunk)
+        for j in range(chunk):
+            print(f"step {step + j}: mom_iters={int(stats.mom_iters[j])} "
+                  f"p_iters={[int(i) for i in stats.p_iters[j]]} "
+                  f"continuity={float(stats.continuity_err[j]):.2e}")
+        step += chunk
+    print(f"{args.steps} steps in {time.time() - t0:.2f}s "
+          f"({mesh.n_cells_global} cells, alpha={alpha}, "
+          f"solve_mode={args.solve_mode}, "
+          f"solver_backend={args.solver_backend}, "
+          f"scan_steps={scan})")
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+
+    jax.config.update("jax_enable_x64", True)
+    # resolve "auto" at the fine part size — the smallest solve part any
+    # alpha produces, so the cost model's fused bytes/iter prior flips
+    # only when every candidate alpha runs the fused kernels (larger
+    # alphas fuse parts of alpha * this size and may go fused earlier;
+    # same conservative convention as RepartitionController)
+    from repro.solvers.ops import resolve_backend
+
+    eff_backend = resolve_backend(args.solver_backend,
+                                  args.n ** 3 // args.parts)
+    cm = CostModel(TPU_V5E, n_dofs=args.n ** 3,
+                   fused_solver=eff_backend == "fused")
+    alpha = args.alpha
+    if alpha == 0 or args.adaptive:
+        alpha = None  # let the controller/cost model pick
+
+    mesh = CavityMesh.cube(args.n, args.parts)
+    nu = args.nu
+    if args.re > 0:
+        case = get_case(args.case, reynolds=args.re)
+        nu = case.nu(args.n * mesh.h)
+        print(f"Re={args.re:g}: derived nu={nu:.3e} "
+              f"(u_ref={case.u_ref:g}, L={args.n * mesh.h:g})")
+
+    from repro.fvm.step_program import get_program
+
+    if not get_program(args.program).transient:
+        if args.adaptive:
+            print("note: --adaptive applies to transient programs only; "
+                  "running the steady outer loop at the fixed alpha")
+        if alpha is None:
+            alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
+            print(f"cost model picked alpha={alpha}")
+        run_steady(args, mesh, alpha, nu)
+        return
+    run_transient(args, mesh, alpha, nu, cm)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,168 +8,17 @@ the predicted gain clears the hysteresis threshold (plan switches are served
 from the LRU plan cache):
 
   python -m repro.launch.cavity --n 12 --parts 4 --adaptive --steps 20
+
+This module is a compatibility shim: the driver lives in
+``repro.launch.case`` (``--case cavity --program piso`` defaults match the
+historical behaviour here, and every flag is forwarded unchanged).  Other
+flow cases and the steady SIMPLE program are reached via
+
+  python -m repro.launch.case --case channel --program simple --n 8
 """
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-
-from repro.core.controller import (ControllerConfig, PlanCache,
-                                   RepartitionController)
-from repro.core.cost_model import CostModel, TPU_V5E
-from repro.fvm.mesh import CavityMesh
-from repro.fvm.piso import PisoSolver
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=12, help="cells per axis")
-    ap.add_argument("--parts", type=int, default=4, help="fine parts (n_CPU)")
-    ap.add_argument("--alpha", type=int, default=2,
-                    help="repartitioning ratio (0 = pick via cost model)")
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--co", type=float, default=0.5, help="CFL number")
-    ap.add_argument("--nu", type=float, default=0.01)
-    ap.add_argument("--schedule", default="device_direct",
-                    choices=["device_direct", "host_buffer"])
-    ap.add_argument("--solve-mode", default="stacked",
-                    choices=["stacked", "full_mesh"],
-                    help="SPMD solve layout: stacked replicates solver rows "
-                         "over the assemble axis (paper-faithful C_i-idle); "
-                         "full_mesh row-shards the fused system over all "
-                         "devices (needs --parts visible devices, e.g. "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-    ap.add_argument("--solver-backend", default="auto",
-                    choices=["auto", "fused", "reference"],
-                    help="Krylov per-iteration backend (repro.solvers.ops): "
-                         "fused = one-pass SpMV+dot and axpy-pair+Jacobi+"
-                         "dots Pallas kernels; reference = the plain jnp op "
-                         "sequence; auto picks fused once a part fills a "
-                         "kernel row block")
-    ap.add_argument("--adaptive", action="store_true",
-                    help="feedback-driven alpha (overrides --alpha)")
-    ap.add_argument("--hysteresis", type=float, default=0.10,
-                    help="min relative predicted gain to switch alpha")
-    ap.add_argument("--sample-every", type=int, default=4,
-                    help="adaptive mode: timesteps per instrumented "
-                         "per-phase sample; steps in between advance via "
-                         "the fused scan-rolled stepper (one XLA dispatch "
-                         "per stretch)")
-    ap.add_argument("--scan-steps", type=int, default=8,
-                    help="scan-roll window: up to this many timesteps "
-                         "execute as ONE XLA dispatch (StepProgram fused "
-                         "executor) — the whole run in non-adaptive mode, "
-                         "and the rolled stretches between instrumented "
-                         "samples in adaptive mode")
-    args = ap.parse_args()
-
-    jax.config.update("jax_enable_x64", True)
-    # resolve "auto" at the fine part size — the smallest solve part any
-    # alpha produces, so the cost model's fused bytes/iter prior flips
-    # only when every candidate alpha runs the fused kernels (larger
-    # alphas fuse parts of alpha * this size and may go fused earlier;
-    # same conservative convention as RepartitionController)
-    from repro.solvers.ops import resolve_backend
-
-    eff_backend = resolve_backend(args.solver_backend,
-                                  args.n ** 3 // args.parts)
-    cm = CostModel(TPU_V5E, n_dofs=args.n ** 3,
-                   fused_solver=eff_backend == "fused")
-    alpha = args.alpha
-    if alpha == 0 or args.adaptive:
-        alpha = None  # let the controller/cost model pick
-
-    mesh = CavityMesh.cube(args.n, args.parts)
-    dt = args.co * mesh.h  # lid speed 1 → dt = Co*h
-
-    if args.adaptive:
-        cache = PlanCache()
-        # fixed_fine feasibility keeps only divisors of --parts
-        cfg = ControllerConfig(hysteresis=args.hysteresis,
-                               sample_every=max(args.sample_every, 1))
-        ctl = RepartitionController(cm, n_cpu=args.parts, n_gpu=1,
-                                    alpha0=alpha, config=cfg, cache=cache,
-                                    fixed_fine=True,
-                                    solve_mode=args.solve_mode,
-                                    solver_backend=args.solver_backend)
-        solver = PisoSolver(mesh, alpha=ctl.alpha, nu=args.nu,
-                            update_schedule=args.schedule, plan_cache=cache,
-                            solve_mode=args.solve_mode,
-                            solver_backend=args.solver_backend)
-        print(f"controller start: alpha={ctl.alpha} "
-              f"solve_mode={args.solve_mode} "
-              f"solver_backend={args.solver_backend} "
-              f"sample_every={cfg.sample_every}")
-        from repro.fvm.step_program import roll_schedule
-
-        state = solver.initial_state()
-        t0 = time.time()
-        step = 0
-        # same cadence driver as SimulationEngine.step_session: sample the
-        # instrumented walk on the anchored grid, scan-roll the stretches
-        for is_sample, chunk in roll_schedule(0, args.steps,
-                                              cfg.sample_every,
-                                              cap=max(args.scan_steps, 1)):
-            if is_sample:
-                # instrumented sample: per-phase timers feed the controller
-                state, stats, sample = solver.timed_step(state, dt)
-                new_alpha = ctl.step(sample)
-                if new_alpha != solver.alpha:
-                    print(f"step {step}: controller switch alpha "
-                          f"{solver.alpha} -> {new_alpha}")
-                    solver.rebind_alpha(new_alpha)
-                print(f"step {step}: alpha={solver.alpha} "
-                      f"p_iters={[int(i) for i in stats.p_iters]} "
-                      f"continuity={float(stats.continuity_err):.2e} "
-                      f"phases(ms)=[as {sample.assembly*1e3:.1f} "
-                      f"up {sample.update*1e3:.1f} ha {sample.halo*1e3:.1f} "
-                      f"so {sample.solve*1e3:.1f}]")
-            else:
-                # fused scan-rolled stretch: ONE XLA dispatch
-                state, window = solver.run_steps(state, dt, chunk)
-                print(f"steps {step}..{step + chunk - 1}: "
-                      f"alpha={solver.alpha} rolled x{chunk} "
-                      f"p_iters={[int(i) for i in window.p_iters[-1]]} "
-                      f"continuity={float(window.continuity_err[-1]):.2e}")
-            step += chunk
-        s = ctl.stats()
-        print(f"{args.steps} steps in {time.time() - t0:.2f}s "
-              f"({mesh.n_cells_global} cells); final alpha={ctl.alpha}, "
-              f"{len(s['switches'])} switch(es), "
-              f"plan cache {s['cache']['hits']} hits / "
-              f"{s['cache']['misses']} misses")
-        return
-
-    if alpha is None:
-        alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
-        print(f"cost model picked alpha={alpha}")
-    solver = PisoSolver(mesh, alpha=alpha, nu=args.nu,
-                        update_schedule=args.schedule,
-                        solve_mode=args.solve_mode,
-                        solver_backend=args.solver_backend)
-    from repro.fvm.step_program import roll_schedule
-
-    state = solver.initial_state()
-    t0 = time.time()
-    scan = max(args.scan_steps, 1)
-    step = 0
-    # every=None: no sampling — pure scan-rolled windows of <= scan steps
-    for _sample, chunk in roll_schedule(0, args.steps, None, cap=scan):
-        # each window is ONE XLA dispatch; stats come back per-step stacked
-        state, stats = solver.run_steps(state, dt, chunk)
-        for j in range(chunk):
-            print(f"step {step + j}: mom_iters={int(stats.mom_iters[j])} "
-                  f"p_iters={[int(i) for i in stats.p_iters[j]]} "
-                  f"continuity={float(stats.continuity_err[j]):.2e}")
-        step += chunk
-    print(f"{args.steps} steps in {time.time() - t0:.2f}s "
-          f"({mesh.n_cells_global} cells, alpha={alpha}, "
-          f"solve_mode={args.solve_mode}, "
-          f"solver_backend={args.solver_backend}, "
-          f"scan_steps={scan})")
-
+from repro.launch.case import main
 
 if __name__ == "__main__":
     main()

@@ -29,7 +29,10 @@ from repro.serving.engine import generate
 def mesh_mix(args):
     """The heterogeneous tenant mix: meshes sharing one per-part slab
     structure (nx = ny = cfd_n, nzl = cfd_n // parts) with slab counts
-    {parts/2 .. parts} — exactly what size-class padding co-batches."""
+    {parts/2 .. parts} — exactly what size-class padding co-batches.
+    ``--cases``/``--programs`` widen the mix along the other two tenant
+    axes: arrivals sample a flow case and a timestep program per tenant,
+    so the scheduler faces genuinely heterogeneous cohort keys."""
     from repro.fvm.mesh import CavityMesh
 
     nzl = args.cfd_n // args.parts
@@ -37,6 +40,24 @@ def mesh_mix(args):
                     args.parts})
     return [CavityMesh(nx=args.cfd_n, ny=args.cfd_n, nz=nzl * p,
                        n_parts=p, h=0.1 / args.cfd_n) for p in parts]
+
+
+def _tenant_axes(args) -> tuple[list[str], list[str]]:
+    """Validated (cases, programs) sampling lists from the CLI."""
+    from repro.fvm.cases import case_names
+    from repro.fvm.piso import SOLVERS
+
+    cases = [c.strip() for c in args.cases.split(",") if c.strip()]
+    programs = [p.strip() for p in args.programs.split(",") if p.strip()]
+    bad = sorted(set(cases) - set(case_names()))
+    if bad:
+        raise SystemExit(f"unknown case(s) {bad} (registered: "
+                         f"{case_names()})")
+    bad = sorted(set(programs) - set(SOLVERS))
+    if bad:
+        raise SystemExit(f"unknown program(s) {bad} (registered: "
+                         f"{tuple(sorted(SOLVERS))})")
+    return cases, programs
 
 
 def serve_cfd_arrivals(args) -> dict:
@@ -56,6 +77,7 @@ def serve_cfd_arrivals(args) -> dict:
     sched = EngineScheduler(eng, max_wait_rounds=args.max_wait_rounds)
     rng = np.random.default_rng(args.seed)
     meshes = mesh_mix(args)
+    cases, programs = _tenant_axes(args)
     t = 0.0
     for i in range(args.sessions):
         t += float(rng.exponential(1.0 / args.arrival_rate))
@@ -68,7 +90,9 @@ def serve_cfd_arrivals(args) -> dict:
             deadline_ms=args.deadline_ms if deadline else None,
             open_kwargs={"adaptive": args.adaptive,
                          "alpha0": args.alpha or None, "nu": args.nu,
-                         "solver_backend": args.solver_backend}))
+                         "solver_backend": args.solver_backend,
+                         "program": programs[int(rng.integers(len(programs)))],
+                         "case": cases[int(rng.integers(len(cases)))]}))
     t0 = time.time()
     rounds = sched.run()
     wall = time.time() - t0
@@ -172,6 +196,13 @@ def main():
                     help="bulk anti-starvation bound (scheduler rounds)")
     ap.add_argument("--lane-classes", action="store_true",
                     help="pad cohort batch axes to powers of two")
+    ap.add_argument("--cases", default="cavity",
+                    help="comma-separated flow cases sampled per arrival "
+                         "(cohort keys split on case: mixed-case tenants "
+                         "never co-batch)")
+    ap.add_argument("--programs", default="piso",
+                    help="comma-separated timestep programs (piso,simple) "
+                         "sampled per arrival")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

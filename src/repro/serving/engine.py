@@ -5,8 +5,10 @@ token for every sequence in the batch against a KV cache of ``seq_len``.
 ``generate`` drives it for real batches (examples/serve_lm.py).
 
 The second half of the module is the CFD serving analogue:
-:class:`SimulationEngine` hosts many concurrent PISO simulations
-("solver-as-a-service"), each with its **own**
+:class:`SimulationEngine` hosts many concurrent segregated-solver
+simulations ("solver-as-a-service") — any registered ``(program, case)``
+pair: transient PISO or steady SIMPLE on any flow case — each with its
+**own**
 :class:`~repro.core.controller.RepartitionController` — per-session
 calibration state, so a session on a coarse mesh with heavy assembly and a
 session on a fine mesh with a dominant solve adapt their alpha
@@ -116,7 +118,8 @@ class SimulationEngine:
     Sessions advance either one at a time (:meth:`step_session`) or — the
     throughput path — in **cohorts** (:meth:`step_all`): open sessions
     whose compiled program is interchangeable (same mesh structure, alpha,
-    solve mode, solver backend, viscosity) are stacked along a leading
+    solve mode, solver backend, viscosity, timestep program and flow
+    case) are stacked along a leading
     session axis and advance through ONE batched XLA dispatch per rolled
     window instead of one per tenant, the batching cure for the
     undersubscribed-dispatch regime (one tenant per launch collapses
@@ -171,7 +174,9 @@ class SimulationEngine:
                      solver_backend: str = "auto",
                      pad_to_class: int | None = None,
                      priority: str = "bulk",
-                     deadline_ms: float | None = None) -> SimulationSession:
+                     deadline_ms: float | None = None,
+                     program: str = "piso",
+                     case: str = "cavity") -> SimulationSession:
         """Admit a simulation; its controller starts from the cost model's
         static pick (``alpha0=None``) exactly like the non-adaptive launcher,
         then departs from it as measurements arrive.  ``solve_mode``
@@ -190,10 +195,16 @@ class SimulationEngine:
         fragmentation.  ``priority`` ("bulk" | "deadline") and
         ``deadline_ms`` feed the scheduling policy
         (:mod:`repro.serving.scheduler`); they do not change the numerics.
+
+        ``program`` ("piso" | "simple" — ``repro.fvm.piso.SOLVERS``) and
+        ``case`` (a ``repro.fvm.cases`` registry name) pick the tenant's
+        timestep program and flow-case BC set; both are cohort-key
+        components, so heterogeneous tenants never co-batch across a
+        program or case boundary.
         """
         from repro.core.repartition import mesh_fingerprint
         from repro.fvm.mesh import PaddedCavityMesh
-        from repro.fvm.piso import PisoSolver
+        from repro.fvm.piso import make_solver
 
         if sid in self.sessions:
             raise ValueError(f"session {sid!r} already open")
@@ -210,10 +221,10 @@ class SimulationEngine:
             model, n_cpu=mesh.n_parts, n_gpu=1, alpha0=alpha0,
             config=self.config, cache=self.plan_cache, fixed_fine=True,
             solve_mode=solve_mode, solver_backend=solver_backend)
-        solver = PisoSolver(mesh, alpha=controller.alpha, nu=nu,
-                            plan_cache=self.plan_cache,
-                            solve_mode=solve_mode,
-                            solver_backend=solver_backend)
+        solver = make_solver(program, mesh, alpha=controller.alpha, nu=nu,
+                             case=case, plan_cache=self.plan_cache,
+                             solve_mode=solve_mode,
+                             solver_backend=solver_backend)
         sess = SimulationSession(sid=sid, solver=solver,
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
@@ -295,13 +306,20 @@ class SimulationEngine:
         padded program takes the extra traced ``n_active`` operand, so
         ``padded`` is its own key component (a padded and a plain session
         of equal shape are NOT program-interchangeable).
+
+        ``(program_name, case)`` are key components too: a PISO and a
+        SIMPLE tenant compile different phase lists, and two cases bind
+        different BC masks/boundary sources into the assembly closures —
+        mixed-program or mixed-case tenants are never co-batched.
         """
         s = sess.solver
         phase = (sess.steps_done % self.config.sample_every
                  if sess.adaptive else -1)
         return (sess.mesh_fp, s.alpha, s.solve_mode, s.solver_backend,
                 s.nu, str(s.dtype), sess.adaptive, phase,
-                getattr(s, "padded", False))
+                getattr(s, "padded", False),
+                getattr(s, "program_name", "piso"),
+                getattr(s, "case", "cavity"))
 
     def step_all(self, n_steps: int = 1, sids=None) -> dict:
         """Advance every open session (or ``sids``) by ``n_steps`` through
@@ -365,6 +383,20 @@ class SimulationEngine:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
         last = {} if last is None else last
         lead = self.sessions[group[0]]
+        # cohort contract: every member must be program-interchangeable
+        # with the lead.  An external scheduler handing us a mixed group
+        # (a mis-migrated tenant, a program/case mismatch) would otherwise
+        # stack states into a compiled program with the wrong BC masks —
+        # silently wrong physics, so reject loudly instead.
+        lead_key = self._cohort_key(lead)
+        bad = [sid for sid in group[1:]
+               if self._cohort_key(self.sessions[sid]) != lead_key]
+        if bad:
+            raise ValueError(
+                f"advance_group: session(s) {bad} are not cohort-"
+                f"compatible with lead {group[0]!r} (program/case/mesh/"
+                "alpha mismatch) — migration across cohort keys must go "
+                "through a new scheduling round, not a mixed dispatch")
         every = self.config.sample_every if lead.adaptive else None
         # one stretch of the shared cadence — the cohort key pins the
         # sampling phase, so the stretch is valid for every member
@@ -408,11 +440,12 @@ class SimulationEngine:
         states = stack_states([s.state for s in sessions], pad_to=lanes)
         dts = jnp.asarray([s.dt for s in sessions]
                           + [lead.dt] * (lanes - n), lead.solver.dtype)
-        extras = ()
-        if padded:
-            extras = (jnp.asarray(
-                [s.solver.n_active for s in sessions] + [0] * (lanes - n),
-                jnp.int32),)
+        # per-lane extra operands, driven by the program's extra_keys
+        # (n_active for padded programs, SIMPLE's relaxation factors);
+        # filler lanes carry the lead's filler values (n_active=0)
+        per_lane = ([s.solver._extras() for s in sessions]
+                    + [lead.solver._filler_extras()] * (lanes - n))
+        extras = tuple(jnp.stack(col) for col in zip(*per_lane))
         t0 = self._clock() if self.track_latency else 0.0
         if is_sample:
             states, stats, rows = exe.timed_step(states, dts, *extras)
@@ -498,7 +531,9 @@ class SimulationEngine:
                       "solve_mode": s.controller.solve_mode,
                       "solver_backend": s.controller.solver_backend,
                       "switches": len(s.controller.switches),
-                      "priority": s.priority}
+                      "priority": s.priority,
+                      "program": getattr(s.solver, "program_name", "piso"),
+                      "case": getattr(s.solver, "case", "cavity")}
                 for sid, s in self.sessions.items()
             },
             "cohorts": [len(g) for g in self.cohorts().values()],

@@ -454,3 +454,53 @@ def test_engine_default_config_not_aliased():
     c1 = RepartitionController(cm, n_cpu=4, n_gpu=1, alpha0=2)
     c2 = RepartitionController(cm, n_cpu=4, n_gpu=1, alpha0=2)
     assert c1.config is not c2.config
+
+
+# ---------------------------------------------------------------------------
+# program/case cohort keying (Program/Case abstraction)
+# ---------------------------------------------------------------------------
+
+def test_cohort_keys_split_on_program_and_case():
+    """Tenants differing only in program or flow case land in separate
+    cohorts: a batched executor compiles ONE program over ONE BC set, so
+    cross-program (or cross-case) co-batching would be wrong by
+    construction.  Same-(program, case, shape) tenants still co-batch."""
+    mesh = CavityMesh.cube(4, 2)
+    eng = SimulationEngine(scan_window=4)
+    eng.open_session("a", mesh, dt=1e-3, alpha0=2, adaptive=False)
+    eng.open_session("b", mesh, dt=2e-3, alpha0=2, adaptive=False)
+    eng.open_session("c", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     case="channel")
+    eng.open_session("d", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     program="simple")
+    groups = {tuple(sorted(g)) for g in eng.cohorts().values()}
+    assert groups == {("a", "b"), ("c",), ("d",)}
+
+    # the mixed population still advances: one cohort + two singletons
+    eng.step_all(4)
+    assert eng.counters["cohort_dispatches"] == 1
+    assert eng.counters["solo_dispatches"] == 2
+    s = eng.stats()["sessions"]
+    assert s["c"]["case"] == "channel" and s["c"]["program"] == "piso"
+    assert s["d"]["case"] == "cavity" and s["d"]["program"] == "simple"
+
+
+def test_advance_group_rejects_mixed_program_or_case():
+    """The cohort contract is validated, not assumed: an external
+    scheduler handing advance_group a group whose members disagree on the
+    cohort key (here: flow case, then program) is an error, never a
+    silent mis-batched dispatch."""
+    mesh = CavityMesh.cube(4, 2)
+    eng = SimulationEngine(scan_window=4)
+    eng.open_session("a", mesh, dt=1e-3, alpha0=2, adaptive=False)
+    eng.open_session("c", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     case="channel")
+    eng.open_session("d", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     program="simple")
+    with pytest.raises(ValueError, match="c"):
+        eng.advance_group(["a", "c"], 4)
+    with pytest.raises(ValueError, match="d"):
+        eng.advance_group(["a", "d"], 4)
+    # the legitimate per-key groups still advance fine
+    for group in eng.cohorts().values():
+        assert eng.advance_group(list(group), 4) >= 1
