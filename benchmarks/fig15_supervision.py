@@ -1,0 +1,202 @@
+"""Fig. 15: session supervision — overhead, fault recovery, checkpoint cost.
+
+Production serving keeps tenants alive for hours; the supervision layer
+(PR 8) must therefore be (a) nearly free on the healthy path, (b) surgical
+under faults — one diverging tenant must not perturb its cohort-mates by
+a single bit of rounding — and (c) able to checkpoint/restore the whole
+engine exactly.  This figure measures all three:
+
+* **healthy-path overhead** — wall time per rolled window of an S-session
+  cohort with supervision off vs on (no faults injected).  The supervised
+  path adds one compiled health-flag reduction inside the scan plus a
+  host-side deep-copy checkpoint per clean window; the overhead cell
+  reports the ratio.
+* **fault recovery** — the same cohort with a seeded NaN injected into
+  one lane (`repro.faults.ChaosMonkey`): the faulty session is rolled
+  back, stepped solo at halved dt, and recovers; healthy sessions must
+  match the no-fault run ≤ 1e-10 with identical pressure-CG iteration
+  counts.  Reports retries used, supervision events, and the healthy-lane
+  max diff.
+* **checkpoint cost** — `engine.snapshot()` / `SimulationEngine.restore()`
+  wall time and on-disk bytes for the cohort, plus a bitwise resume-parity
+  check (restored engine stepped one window vs the original stepped one
+  window: max |ΔU| must be exactly 0.0).
+
+``--dry-run`` shrinks the mesh and writes ``BENCH_supervision.json`` so
+CI can assert overhead sanity, healthy-lane isolation, recovery, and
+exact resume parity.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import emit
+
+
+def _open(eng, n_sessions, mesh, dt0):
+    for i in range(n_sessions):
+        eng.open_session(f"s{i}", mesh, dt=dt0 * (1.0 + 0.1 * i),
+                         alpha0=2, adaptive=False)
+    return [f"s{i}" for i in range(n_sessions)]
+
+
+def run(n: int = 8, parts: int = 4, window: int = 8, sessions: int = 4,
+        windows: int = 3, reps: int = 3, out: str | None = None,
+        dry_run: bool = False) -> dict:
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.faults import ChaosMonkey
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+    from repro.serving.supervisor import SupervisorConfig
+
+    if dry_run:
+        n, reps = min(n, 4), 3
+
+    mesh = CavityMesh.cube(n, parts)
+    dt0 = 0.5 * mesh.h
+
+    # -- healthy-path overhead: supervised vs plain, same cohort ----------
+    def timed_windows(supervise):
+        eng = SimulationEngine(scan_window=window, supervise=supervise)
+        _open(eng, sessions, mesh, dt0)
+        eng.step_all(window)  # compile warm-up
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(windows):
+                eng.step_all(window)
+            jax.block_until_ready(eng.sessions["s0"].state.U)
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2] / windows
+
+    t_plain = timed_windows(False)
+    t_sup = timed_windows(True)
+    overhead = {"plain_s_per_window": t_plain,
+                "supervised_s_per_window": t_sup,
+                "ratio": t_sup / t_plain}
+    emit(f"fig15_overhead_S{sessions}", t_sup / (sessions * window),
+         f"supervised/plain={t_sup / t_plain:.3f}x")
+
+    # -- fault recovery: NaN one lane, healthy lanes must be untouched ----
+    total = window * (windows + 1)
+    ref = SimulationEngine(scan_window=window, supervise=True)
+    _open(ref, sessions, mesh, dt0)
+    ref.step_all(total)
+    ref_stats = ref.step_all(window)
+
+    eng = SimulationEngine(scan_window=window, supervise=True)
+    sids = _open(eng, sessions, mesh, dt0)
+    chaos = ChaosMonkey(0, [sids[1]], kinds=("nan",), n_events=1,
+                        horizon=2)
+    while any(s.steps_done < total for s in eng.sessions.values()):
+        live = [s for s in eng.sessions.values() if s.steps_done < total]
+        eng.step_all(min([window] + [total - s.steps_done for s in live]),
+                     sids=[s.sid for s in live])
+        chaos.poke(eng)
+    stats = eng.step_all(window)
+
+    healthy = [s for s in sids if s != sids[1]]
+    max_diff = max(
+        float(jnp.abs(eng.sessions[s].state.U
+                      - ref.sessions[s].state.U).max()) for s in healthy)
+    iters_equal = all(
+        [int(i) for i in stats[s].p_iters]
+        == [int(i) for i in ref_stats[s].p_iters] for s in healthy)
+    sup = eng.sessions[sids[1]].supervisor
+    recovery = {
+        "faults_applied": len(chaos.applied),
+        "faulty_session": sids[1],
+        "faulty_events": [(e.step, e.kind, e.detail) for e in sup.events],
+        "faulty_final_state": sup.state,
+        "fault_windows": sum(1 for e in sup.events if e.kind == "fault"),
+        "healthy_max_diff": max_diff,
+        "healthy_iters_equal": iters_equal,
+    }
+    emit(f"fig15_recovery_S{sessions}", 0.0,
+         f"faulty={sup.state} healthy_maxdiff={max_diff:.1e} "
+         f"iters_equal={iters_equal}")
+
+    # -- checkpoint cost + bitwise resume parity --------------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        snap = str(pathlib.Path(tmp) / "snap")
+        t0 = time.perf_counter()
+        eng.snapshot(snap)
+        t_save = time.perf_counter() - t0
+        nbytes = sum(p.stat().st_size
+                     for p in pathlib.Path(snap).rglob("*") if p.is_file())
+        t0 = time.perf_counter()
+        eng2 = SimulationEngine.restore(snap)
+        t_load = time.perf_counter() - t0
+        eng.step_all(window)
+        eng2.step_all(window)
+        resume_diff = max(
+            float(jnp.abs(eng2.sessions[s].state.U
+                          - eng.sessions[s].state.U).max()) for s in sids)
+    checkpoint = {"save_s": t_save, "restore_s": t_load, "bytes": nbytes,
+                  "resume_max_diff": resume_diff}
+    emit(f"fig15_checkpoint_S{sessions}", t_save,
+         f"bytes={nbytes} restore={t_load * 1e3:.0f}ms "
+         f"resume_maxdiff={resume_diff:.1e}")
+
+    report = {
+        "bench": "fig15_supervision",
+        "mesh": {"n": n, "parts": parts, "window": window,
+                 "sessions": sessions},
+        "method": {
+            "overhead": (
+                "median wall time per rolled window of the S-session "
+                "cohort, supervision off vs on, no faults: the supervised "
+                "path adds the compiled health-flag reduction plus one "
+                "deep-copy checkpoint per clean window"),
+            "recovery": (
+                "seeded NaN into one lane between windows; healthy "
+                "sessions must match the no-fault run <= 1e-10 with "
+                "identical pressure-CG iteration counts while the faulty "
+                "session rolls back, retries at halved dt, and recovers"),
+            "checkpoint": (
+                "engine.snapshot()/restore() wall time and bytes; the "
+                "restored engine stepped one window must match the "
+                "original bitwise (resume_max_diff == 0.0)"),
+        },
+        "overhead": overhead,
+        "recovery": recovery,
+        "checkpoint": checkpoint,
+    }
+    if out:
+        pathlib.Path(out).write_text(json.dumps(report, indent=2) + "\n")
+        emit("fig15_supervision_json", 0.0, f"wrote {out}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small mesh, write BENCH_supervision.json")
+    ap.add_argument("--n", type=int, default=8, help="cells per axis")
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--out", default=None,
+                    help="JSON report path (default: "
+                         "BENCH_supervision.json at the repo root when "
+                         "--dry-run)")
+    args = ap.parse_args()
+    out = args.out
+    if out is None and args.dry_run:
+        out = str(pathlib.Path(__file__).resolve().parent.parent
+                  / "BENCH_supervision.json")
+    print("name,us_per_call,derived")
+    run(n=args.n, parts=args.parts, window=args.window,
+        sessions=args.sessions, out=out, dry_run=args.dry_run)
+
+
+if __name__ == "__main__":
+    main()

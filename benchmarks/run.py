@@ -23,7 +23,8 @@ def main() -> None:
                             fig9_gpu_aware, fig10_adaptive,
                             fig11_fused_krylov, fig12_step_program,
                             fig13_engine_throughput, fig14_cases,
-                            hillclimb, kernels_bench, roofline)
+                            fig15_supervision, hillclimb, kernels_bench,
+                            roofline)
 
     suites = {
         "fig4": fig4_lsp_vs_alpha.run,
@@ -38,6 +39,7 @@ def main() -> None:
         "fig12": fig12_step_program.run,
         "fig13": fig13_engine_throughput.run,
         "fig14": fig14_cases.run,
+        "fig15": fig15_supervision.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "cfd_dryrun": cfd_dryrun.run,
@@ -45,7 +47,7 @@ def main() -> None:
         "hillclimb": hillclimb.run,
     }
     heavy = {"cfd_dryrun", "cfd_modes", "hillclimb", "fig7fm", "fig10",
-             "fig11", "fig12", "fig13", "fig14"}
+             "fig11", "fig12", "fig13", "fig14", "fig15"}
 
     ap = argparse.ArgumentParser()
     ap.add_argument("names", nargs="*",

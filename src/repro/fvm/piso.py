@@ -69,6 +69,12 @@ class StepStats(NamedTuple):
     p_iters: jax.Array        # (n_correctors,)
     continuity_err: jax.Array  # max |div(phi)| after correction
     p_residual: jax.Array
+    # compiled health signals (step_program.health_flags): every Krylov
+    # solve met tolerance on a finite state / a non-finite leaf appeared /
+    # some solve exited at maxiter — one bool word each, no host syncs
+    converged: jax.Array
+    diverged: jax.Array
+    hit_cap: jax.Array
 
 
 def stack_states(states, pad_to: int | None = None) -> PisoState:
@@ -149,6 +155,10 @@ class SegregatedSolver:
     max_outer: int = 200
     mom_tol: float = 1e-7
     p_tol: float = 1e-8
+    # Krylov iteration caps (the silent-divergence knob: a capped exit now
+    # raises StepStats.hit_cap instead of masquerading as convergence)
+    mom_maxiter: int = 500
+    p_maxiter: int = 2000
     update_schedule: str = "device_direct"  # or "host_buffer" (paper fig. 9)
     dtype: jnp.dtype = jnp.float64
     # SPMD solve-phase layout (paper-faithful vs beyond-paper, DESIGN.md §3):

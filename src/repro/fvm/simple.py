@@ -42,7 +42,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.fvm.step_program import (Phase, ProgramSpec, StepProgram,
-                                    _phase_toolkit, register_program)
+                                    _phase_toolkit, health_flags,
+                                    register_program)
 
 __all__ = ["SimpleStats", "build_simple_program"]
 
@@ -59,6 +60,11 @@ class SimpleStats(NamedTuple):
     continuity_err: jax.Array  # max |div(phi)| / V after correction
     p_residual: jax.Array
     u_delta: jax.Array         # max |U - U_prev| over the outer iteration
+    # compiled health signals, same semantics as StepStats (see
+    # step_program.health_flags)
+    converged: jax.Array
+    diverged: jax.Array
+    hit_cap: jax.Array
 
 
 def build_simple_program(solver) -> StepProgram:
@@ -106,14 +112,15 @@ def build_simple_program(solver) -> StepProgram:
         Phase("update_mom", "assembly", ("sysM",), ("bandsM",),
               tk.update_mom, instrumented_fn=tk.update_mom_inst),
         Phase("solve_mom", "assembly", ("bandsM", "sysM", "U"),
-              ("U", "mom_iters"), tk.solve_mom),
+              ("U", "mom_iters", "mom_ok", "mom_cap"), tk.solve_mom),
         Phase("assemble_p", "assembly", ("sysM", "U") + mask_keys,
               ("rAU", "HbyA", "phiH", "phiH_if", "phiH_b", "sysP"),
               tk.assemble_p),
         Phase("update_p", "update", ("sysP",), ("bandsP",), tk.update_p,
               instrumented_fn=tk.update_p_inst),
         Phase("solve_p", "solve", ("bandsP", "sysP", "p"),
-              ("p_new", "p_iters_0", "p_res"), tk.solve_p,
+              ("p_new", "p_iters_0", "p_res", "p_ok_0", "p_cap_0"),
+              tk.solve_p,
               probe=tk.halo_probe, probe_inputs=("p",),
               probe_iters="p_iters_0"),
         Phase("correct", "assembly",
@@ -153,15 +160,20 @@ def build_simple_program(solver) -> StepProgram:
         extra_keys = ("relax_u", "relax_p")
 
     def finalize(env):
+        state = PisoState(env["U"], env["p"], env["phi"], env["phi_if"],
+                          env["phi_b"])
+        ok = env["mom_ok"] & env["p_ok_0"]
+        cap = env["mom_cap"] | env["p_cap_0"]
+        krylov_ok, diverged, hit_cap = health_flags(
+            state, ok, cap, env["cont"], env["p_res"], env["u_delta"])
         stats = SimpleStats(
             mom_iters=env["mom_iters"],
             p_iters=jnp.stack([env["p_iters_0"]]),
             continuity_err=env["cont"],
             p_residual=env["p_res"],
-            u_delta=env["u_delta"])
-        return (PisoState(env["U"], env["p"], env["phi"], env["phi_if"],
-                          env["phi_b"]),
-                stats)
+            u_delta=env["u_delta"],
+            converged=krylov_ok, diverged=diverged, hit_cap=hit_cap)
+        return state, stats
 
     def converged(stats):
         return (stats.continuity_err < tol_c) & (stats.u_delta < tol_u)

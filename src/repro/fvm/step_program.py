@@ -631,6 +631,29 @@ def get_program(name: str) -> ProgramSpec:
 
 
 # ---------------------------------------------------------------------------
+# Compiled health signals
+# ---------------------------------------------------------------------------
+
+def health_flags(state, solver_ok, solver_cap, *scalars):
+    """Reduce a step's health to three scalar flags, inside the trace.
+
+    ``finite`` is an ``isfinite`` all-reduce over every state leaf plus any
+    extra per-step scalars (residuals, continuity error) — one boolean word
+    per step, carried through the scan-rolled window like any other stat,
+    so supervision costs no extra host syncs.  Returns
+    ``(converged, diverged, hit_cap)``: ``converged`` means every Krylov
+    solve met its tolerance AND the state is finite; ``diverged`` means a
+    non-finite leaf appeared; ``hit_cap`` means some solve exited at
+    ``maxiter`` on an otherwise finite state (the three are disjoint-ish:
+    a NaN state makes the Krylov conds exit immediately, so ``solver_cap``
+    stays False under divergence)."""
+    flags = [jnp.all(jnp.isfinite(leaf)) for leaf in jax.tree.leaves(state)]
+    flags += [jnp.all(jnp.isfinite(s)) for s in scalars]
+    finite = functools.reduce(jnp.logical_and, flags)
+    return solver_ok & finite, ~finite, solver_cap & finite
+
+
+# ---------------------------------------------------------------------------
 # The shared phase toolkit (PISO + SIMPLE bind the same phase functions)
 # ---------------------------------------------------------------------------
 
@@ -671,6 +694,8 @@ def _phase_toolkit(solver) -> PhaseToolkit:
     plan_m, plan_p = solver.plan_mom, solver.plan_p
     n_c = solver.n_coarse
     mom_tol, p_tol = solver.mom_tol, solver.p_tol
+    mom_maxiter = getattr(solver, "mom_maxiter", 500)
+    p_maxiter = getattr(solver, "p_maxiter", 2000)
     padded = getattr(solver, "padded", False)
 
     # the activity-mask binding: a padded program threads per-session
@@ -693,11 +718,14 @@ def _phase_toolkit(solver) -> PhaseToolkit:
     def solve_mom(bandsM, sysM, U):
         opsM = solver._solver_ops(plan_m, bandsM, sysM.diag)
         res = jax.vmap(
-            lambda b, x0: bicgstab(opsM, b, x0, tol=mom_tol, maxiter=500),
+            lambda b, x0: bicgstab(opsM, b, x0, tol=mom_tol,
+                                   maxiter=mom_maxiter),
             in_axes=(2, 2),
-            out_axes=BiCGStabResult(x=2, iters=0, residual=0),
+            out_axes=BiCGStabResult(x=2, iters=0, residual=0,
+                                    converged=0, hit_cap=0),
         )(sysM.source, U)
-        return res.x, jnp.max(res.iters)
+        return (res.x, jnp.max(res.iters),
+                jnp.all(res.converged), jnp.any(res.hit_cap))
 
     # -- the pressure equation --------------------------------------------
     def assemble_p(sysM, U, *masks):
@@ -719,8 +747,9 @@ def _phase_toolkit(solver) -> PhaseToolkit:
         x0_c = solver._solve_constraint(p.reshape(n_c, -1))
         diag_c = sysP.diag.reshape(n_c, -1)
         opsP = solver._solver_ops(plan_p, bandsP, diag_c)
-        sol = cg(opsP, b_c, x0_c, tol=p_tol, maxiter=2000)
-        return sol.x.reshape(p.shape), sol.iters, sol.residual
+        sol = cg(opsP, b_c, x0_c, tol=p_tol, maxiter=p_maxiter)
+        return (sol.x.reshape(p.shape), sol.iters, sol.residual,
+                sol.converged, sol.hit_cap)
 
     def halo_probe(p):
         return x_pad(p.reshape(n_c, -1), plan_p.plane)
@@ -813,7 +842,7 @@ def build_piso_program(solver) -> StepProgram:
         Phase("update_mom", "assembly", ("sysM",), ("bandsM",),
               tk.update_mom, instrumented_fn=tk.update_mom_inst),
         Phase("solve_mom", "assembly", ("bandsM", "sysM", "U"),
-              ("U", "mom_iters"), tk.solve_mom),
+              ("U", "mom_iters", "mom_ok", "mom_cap"), tk.solve_mom),
     ]
     for i in range(n_corr):
         phases += [
@@ -823,7 +852,8 @@ def build_piso_program(solver) -> StepProgram:
             Phase("update_p", "update", ("sysP",), ("bandsP",), tk.update_p,
                   corrector=i, instrumented_fn=tk.update_p_inst),
             Phase("solve_p", "solve", ("bandsP", "sysP", "p"),
-                  ("p", f"p_iters_{i}", "p_res"), tk.solve_p, corrector=i,
+                  ("p", f"p_iters_{i}", "p_res", f"p_ok_{i}", f"p_cap_{i}"),
+                  tk.solve_p, corrector=i,
                   probe=tk.halo_probe, probe_inputs=("p",),
                   probe_iters=f"p_iters_{i}"),
             Phase("correct", "assembly",
@@ -854,14 +884,22 @@ def build_piso_program(solver) -> StepProgram:
         extra_keys = ()
 
     def finalize(env):
+        state = PisoState(env["U"], env["p"], env["phi"], env["phi_if"],
+                          env["phi_b"])
+        ok = env["mom_ok"]
+        cap = env["mom_cap"]
+        for i in range(n_corr):
+            ok = ok & env[f"p_ok_{i}"]
+            cap = cap | env[f"p_cap_{i}"]
+        converged, diverged, hit_cap = health_flags(
+            state, ok, cap, env["cont"], env["p_res"])
         stats = StepStats(
             mom_iters=env["mom_iters"],
             p_iters=jnp.stack([env[f"p_iters_{i}"] for i in range(n_corr)]),
             continuity_err=env["cont"],
-            p_residual=env["p_res"])
-        return (PisoState(env["U"], env["p"], env["phi"], env["phi_if"],
-                          env["phi_b"]),
-                stats)
+            p_residual=env["p_res"],
+            converged=converged, diverged=diverged, hit_cap=hit_cap)
+        return state, stats
 
     return StepProgram(phases=tuple(phases), seed=seed, finalize=finalize,
                        seed_keys=seed_keys, extra_keys=extra_keys)

@@ -108,6 +108,112 @@ def serve_cfd_arrivals(args) -> dict:
     return stats
 
 
+def _state_digest(eng) -> dict:
+    """Parse-exact per-session state digests (sha256 over raw leaf bytes)
+    — the kill-and-resume parity gate compares these across runs."""
+    import hashlib
+
+    out = {}
+    for sid in sorted(eng.sessions):
+        h = hashlib.sha256()
+        for leaf in eng.sessions[sid].state:
+            h.update(np.asarray(leaf).tobytes())
+        out[sid] = h.hexdigest()[:16]
+    return out
+
+
+def serve_cfd_supervised(args) -> None:
+    """Supervised/chaos/checkpointed CFD serving (the correctness driver).
+
+    Windows of ``--scan-steps`` advance every session toward ``--steps``
+    **total** steps each; the :class:`~repro.faults.ChaosMonkey` pokes its
+    seeded fault schedule between windows; ``--snapshot-dir`` checkpoints
+    the engine (at ``--snapshot-every`` boundaries and at the end) and
+    ``--resume`` restores from it.  The ``digest`` lines printed at the
+    end are byte-exact state hashes: a killed run resumed from its
+    snapshot must reproduce the uninterrupted run's digests bit-for-bit
+    (the CI chaos-smoke job asserts exactly that).
+    """
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.controller import ControllerConfig
+    from repro.faults import ChaosMonkey, parse_kinds
+    from repro.fvm.mesh import CavityMesh
+    from repro.serving.engine import SimulationEngine
+    from repro.serving.supervisor import SupervisorConfig
+
+    if args.resume:
+        if not args.snapshot_dir:
+            raise SystemExit("--resume needs --snapshot-dir")
+        eng = SimulationEngine.restore(args.snapshot_dir)
+        print(f"resumed {len(eng.sessions)} sessions from "
+              f"{args.snapshot_dir} at steps "
+              f"{sorted({s.steps_done for s in eng.sessions.values()})}")
+    else:
+        cfg = ControllerConfig(sample_every=max(args.sample_every, 1))
+        sup_cfg = SupervisorConfig(
+            fallback_backend=args.fallback_backend or None)
+        mesh = CavityMesh.cube(args.cfd_n, args.parts)
+        eng = SimulationEngine(config=cfg,
+                               scan_window=max(args.scan_steps, 1),
+                               supervise=True, supervisor_config=sup_cfg)
+        base_dt = args.co * mesh.h
+        for i in range(args.sessions):
+            eng.open_session(f"tenant{i}", mesh, dt=base_dt * (1 + 0.1 * i),
+                             alpha0=args.alpha or None, nu=args.nu,
+                             adaptive=args.adaptive,
+                             solver_backend=args.solver_backend)
+        print(f"opened {args.sessions} supervised sessions, cohorts="
+              f"{[len(g) for g in eng.cohorts().values()]}")
+
+    chaos = None
+    if args.chaos is not None:
+        seed = args.seed if args.chaos_seed is None else args.chaos_seed
+        chaos = ChaosMonkey(seed, sorted(eng.sessions),
+                            kinds=parse_kinds(args.chaos),
+                            n_events=args.chaos_events or None,
+                            horizon=max(2, args.steps))
+        print("chaos schedule:",
+              [(e.step, e.sid, e.kind) for e in chaos.events])
+
+    window = max(args.scan_steps, 1)
+    next_snap = args.snapshot_every or 0
+    while True:
+        live = [s for s in eng.sessions.values()
+                if s.steps_done < args.steps]
+        if not live:
+            break
+        n = min([window] + [args.steps - s.steps_done for s in live])
+        eng.step_all(n, sids=[s.sid for s in live])
+        if chaos is not None:
+            for ev in chaos.poke(eng):
+                print(f"chaos: injected {ev.kind} into {ev.sid} "
+                      f"(scheduled step {ev.step})")
+        if (args.snapshot_dir and next_snap and eng.sessions
+                and min(s.steps_done for s in eng.sessions.values())
+                >= next_snap):
+            eng.snapshot(args.snapshot_dir)
+            print(f"snapshot @ step {next_snap} -> {args.snapshot_dir}")
+            next_snap += args.snapshot_every
+    if args.snapshot_dir:
+        eng.snapshot(args.snapshot_dir)
+        print(f"snapshot -> {args.snapshot_dir}")
+
+    counts = {"healthy": 0, "degraded": 0, "quarantined": 0,
+              "failed": len(eng.failed)}
+    for s in eng.sessions.values():
+        counts[s.supervisor.state] += 1
+    print("supervision:", " ".join(f"{k}={v}" for k, v in counts.items()))
+    for sid, s in sorted(eng.sessions.items()):
+        print(f"health {sid} {s.supervisor.state} steps={s.steps_done} "
+              f"events={len(s.supervisor.events)}")
+    for sid in sorted(eng.failed):
+        print(f"health {sid} failed "
+              f"events={len(eng.failed[sid]['events'])}")
+    for sid, h in _state_digest(eng).items():
+        print(f"digest {sid} {h}")
+    print(f"counters: {eng.stats()['counters']}")
+
+
 def serve_cfd(args) -> None:
     """Multi-tenant PISO serving: cohort-batched stepping of N sessions."""
     jax.config.update("jax_enable_x64", True)
@@ -204,10 +310,37 @@ def main():
                     help="comma-separated timestep programs (piso,simple) "
                          "sampled per arrival")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--supervise", action="store_true",
+                    help="attach a SessionSupervisor to every session "
+                         "(divergence detection, backoff, quarantine)")
+    ap.add_argument("--chaos", default=None, metavar="KINDS",
+                    help="deterministic fault injection: 'all' or a "
+                         "comma list of nan,blowup,cap,slow "
+                         "(implies --supervise)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="fault-schedule seed (defaults to --seed)")
+    ap.add_argument("--chaos-events", type=int, default=0,
+                    help="number of scheduled faults (0 = one per two "
+                         "sessions)")
+    ap.add_argument("--fallback-backend", default="",
+                    help="solver backend quarantined sessions fall back "
+                         "to (e.g. 'reference'; empty = keep backend)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="engine checkpoint directory (written at "
+                         "--snapshot-every boundaries and at exit)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot once all sessions pass each multiple "
+                         "of this step count (0 = only at exit)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the engine from --snapshot-dir and "
+                         "continue to --steps total steps per session")
     args = ap.parse_args()
 
-    if args.sessions > 0:
-        if args.arrival_rate > 0:
+    if args.sessions > 0 or args.resume:
+        if (args.supervise or args.resume or args.chaos is not None
+                or args.snapshot_dir):
+            serve_cfd_supervised(args)
+        elif args.arrival_rate > 0:
             serve_cfd_arrivals(args)
         else:
             serve_cfd(args)

@@ -105,6 +105,9 @@ class SimulationSession:
     # per-session-step wall latencies (seconds), appended when the engine
     # runs with track_latency=True; stats() folds them into p50/p99
     latency_samples: list = dataclasses.field(default_factory=list)
+    # health state machine (serving.supervisor) — None when the engine
+    # runs unsupervised (the default; legacy behavior is bit-identical)
+    supervisor: object | None = None
 
 
 class SimulationEngine:
@@ -129,7 +132,8 @@ class SimulationEngine:
     def __init__(self, plan_cache: PlanCache | None = None,
                  config: ControllerConfig | None = None,
                  scan_window: int = 8, lane_classes: bool = False,
-                 track_latency: bool = False, clock=None):
+                 track_latency: bool = False, clock=None,
+                 supervise: bool = False, supervisor_config=None):
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.plan_cache = PlanCache() if plan_cache is None else plan_cache
         # per-instance default: a shared ControllerConfig() *instance*
@@ -158,6 +162,23 @@ class SimulationEngine:
         import time as _time
 
         self._clock = _time.perf_counter if clock is None else clock
+        # supervised mode: every session gets a SessionSupervisor that
+        # watches the compiled health flags per window, rolls faulty
+        # sessions back to their last clean snapshot, and escalates
+        # degraded → quarantined → failed (serving.supervisor).  Costs one
+        # tiny host readback of the flag words per window, so it is
+        # opt-in; unsupervised engines are untouched.
+        self.supervise = supervise
+        if supervise:
+            from repro.serving.supervisor import SupervisorConfig
+
+            self.supervisor_config = (SupervisorConfig()
+                                      if supervisor_config is None
+                                      else supervisor_config)
+        else:
+            self.supervisor_config = supervisor_config
+        # failed sessions' post-mortems: sid -> final stats + event log
+        self.failed: dict[str, dict] = {}
         self.sessions: dict[str, SimulationSession] = {}
         # dispatch accounting for the two stepping paths: "solo" counts
         # single-session fused launches, "cohort" one launch per batched
@@ -231,6 +252,12 @@ class SimulationEngine:
                                  mesh_fp=mesh_fingerprint(mesh),
                                  adaptive=adaptive, priority=priority,
                                  deadline_ms=deadline_ms)
+        if self.supervise:
+            from repro.serving.supervisor import SessionSupervisor
+
+            sess.supervisor = SessionSupervisor(self.supervisor_config)
+            # the initial condition is by definition a clean snapshot
+            sess.supervisor.checkpoint(sess.state, 0)
         self.sessions[sid] = sess
         return sess
 
@@ -256,28 +283,44 @@ class SimulationEngine:
         from repro.fvm.step_program import roll_schedule
 
         sess = self.sessions[sid]
-        every = self.config.sample_every if sess.adaptive else None
+        if sess.supervisor is not None:
+            # supervised sessions may roll back mid-request, which
+            # invalidates a pre-computed schedule — drive them through the
+            # target-based loop instead
+            return self.step_all(n_steps, sids=[sid]).get(sid)
+        every = self._every(sess)
         stats = None
         for is_sample, chunk in roll_schedule(sess.steps_done, n_steps,
                                               every, cap=self.scan_window):
             stats = self._advance_one(sess, is_sample, chunk)
         return stats
 
+    def _every(self, sess: SimulationSession) -> int | None:
+        """The session's sampling cadence: ``sample_every`` for adaptive
+        sessions, None otherwise — and None while a supervised session is
+        unhealthy (a degraded tenant's timings would feed the controller
+        retry noise, and its rolled-back step counter would thrash the
+        cohort sampling phase)."""
+        healthy = sess.supervisor is None or sess.supervisor.healthy
+        return (self.config.sample_every
+                if (sess.adaptive and healthy) else None)
+
     # ---- cohort-batched stepping ----------------------------------------
     def _advance_one(self, sess: SimulationSession, is_sample: bool,
                      chunk: int):
         """Advance one session through one schedule stretch (solo path)."""
         t0 = self._clock() if self.track_latency else 0.0
+        sup = sess.supervisor
+        dt = sess.dt if sup is None else sess.dt * sup.dt_scale
+        sample = None
         if is_sample:
             sess.state, stats, sample = sess.solver.timed_step(
-                sess.state, sess.dt)
+                sess.state, dt)
             self.counters["sample_steps"] += 1
-            alpha = sess.controller.step(sample)
-            if alpha != sess.solver.alpha:
-                sess.solver.rebind_alpha(alpha)
+            window = stats
         else:
             sess.state, window = sess.solver.run_steps(
-                sess.state, sess.dt, chunk)
+                sess.state, dt, chunk)
             stats = jax.tree.map(lambda a: a[-1], window)
             self.counters["solo_dispatches"] += 1
             self.counters["rolled_windows"] += 1
@@ -286,6 +329,11 @@ class SimulationEngine:
             per_step = (self._clock() - t0) / chunk
             sess.latency_samples.extend([per_step] * chunk)
         sess.steps_done += chunk
+        verdict = self._supervise(sess, window) if sup is not None else None
+        if sample is not None and verdict is None:
+            alpha = sess.controller.step(sample)
+            if alpha != sess.solver.alpha:
+                sess.solver.rebind_alpha(alpha)
         return stats
 
     def _cohort_key(self, sess: SimulationSession) -> tuple:
@@ -315,11 +363,26 @@ class SimulationEngine:
         s = sess.solver
         phase = (sess.steps_done % self.config.sample_every
                  if sess.adaptive else -1)
+        # supervision token: an unhealthy session keys on its own sid, so
+        # it steps solo (degraded retries replay private windows; a
+        # quarantined tenant must not drag its rollbacks, scaled dt or
+        # fallback backend into a shared dispatch) while healthy
+        # cohort-mates keep their 1-dispatch window.  Recovery clears the
+        # token and the session re-joins its cohort on the next round.
+        quarantine = (None if sess.supervisor is None
+                      or sess.supervisor.healthy else sess.sid)
+        # Krylov tolerances/caps are compiled into the program (and into
+        # the health flags): a session whose solve config was retuned at
+        # runtime is no longer numerically interchangeable with its old
+        # cohort — it must step through its own rebuilt executor, not
+        # silently ride the lead session's
+        tols = (s.mom_tol, s.p_tol, getattr(s, "mom_maxiter", 500),
+                getattr(s, "p_maxiter", 2000))
         return (sess.mesh_fp, s.alpha, s.solve_mode, s.solver_backend,
-                s.nu, str(s.dtype), sess.adaptive, phase,
+                s.nu, str(s.dtype), sess.adaptive, phase, tols,
                 getattr(s, "padded", False),
                 getattr(s, "program_name", "piso"),
-                getattr(s, "case", "cavity"))
+                getattr(s, "case", "cavity"), quarantine)
 
     def step_all(self, n_steps: int = 1, sids=None) -> dict:
         """Advance every open session (or ``sids``) by ``n_steps`` through
@@ -350,20 +413,34 @@ class SimulationEngine:
         missing = [sid for sid in sids if sid not in self.sessions]
         if missing:
             raise KeyError(f"unknown session(s) {missing}")
-        todo = dict.fromkeys(sids, n_steps)
+        # target-based accounting (absolute step goals, not remaining
+        # decrements): a supervised rollback moves steps_done backwards
+        # and the session simply stays live until it re-earns its target;
+        # a FAILED session leaves self.sessions and drops out of the loop
+        # (its retry budget bounds the extra rounds, so this terminates)
+        target = {sid: self.sessions[sid].steps_done + n_steps
+                  for sid in sids}
         last: dict[str, object] = {}
-        while any(r > 0 for r in todo.values()):
+        while True:
+            live = [sid for sid in target
+                    if sid in self.sessions
+                    and self.sessions[sid].steps_done < target[sid]]
+            if not live:
+                break
             self.counters["scheduling_rounds"] += 1
             cohorts: dict[tuple, list[str]] = {}
-            for sid, rem in todo.items():
-                if rem > 0:
-                    key = self._cohort_key(self.sessions[sid])
-                    cohorts.setdefault(key, []).append(sid)
+            for sid in live:
+                key = self._cohort_key(self.sessions[sid])
+                cohorts.setdefault(key, []).append(sid)
             for group in cohorts.values():
-                rem = min(todo[sid] for sid in group)
-                chunk = self.advance_group(group, rem, last)
-                for sid in group:
-                    todo[sid] -= chunk
+                # a supervised failure earlier in this round may have
+                # closed a member of a later group
+                group = [sid for sid in group if sid in self.sessions]
+                if not group:
+                    continue
+                rem = min(target[sid] - self.sessions[sid].steps_done
+                          for sid in group)
+                self.advance_group(group, rem, last)
         return last
 
     def advance_group(self, group, n_steps: int, last=None) -> int:
@@ -397,7 +474,7 @@ class SimulationEngine:
                 f"compatible with lead {group[0]!r} (program/case/mesh/"
                 "alpha mismatch) — migration across cohort keys must go "
                 "through a new scheduling round, not a mixed dispatch")
-        every = self.config.sample_every if lead.adaptive else None
+        every = self._every(lead)
         # one stretch of the shared cadence — the cohort key pins the
         # sampling phase, so the stretch is valid for every member
         # regardless of absolute steps_done
@@ -469,12 +546,247 @@ class SimulationEngine:
             last[sess.sid] = per_stats[i]
             if self.track_latency:
                 sess.latency_samples.extend([per_step] * chunk)
-            if rows is not None:
+            verdict = None
+            if sess.supervisor is not None:
+                # this lane's flag column over the whole window: vmap
+                # lanes are independent, so a poisoned neighbour never
+                # perturbs this verdict (or this lane's numerics)
+                lane_window = (per_stats[i] if rows is not None
+                               else jax.tree.map(lambda a, i=i: a[:, i],
+                                                 window))
+                verdict = self._supervise(sess, lane_window)
+            if rows is not None and verdict is None:
                 alpha = sess.controller.step(rows[i])
                 if alpha != sess.solver.alpha:
                     # rebind now; the new cohort key migrates the session
                     # on the next scheduling round
                     sess.solver.rebind_alpha(alpha)
+
+    # ---- supervision -----------------------------------------------------
+    def _supervise(self, sess: SimulationSession, window_stats):
+        """Apply one window's health verdict to a supervised session.
+
+        Clean window: checkpoint the state and let the supervisor count
+        toward recovery (restoring the original backend on
+        QUARANTINED → DEGRADED).  Faulty window: roll the session back to
+        its last clean snapshot and escalate — "quarantine" additionally
+        rebinds the configured fallback backend, "fail" closes the
+        session and parks its post-mortem in :attr:`failed`.  Returns the
+        supervisor directive (None for a clean window).
+        """
+        import dataclasses as _dc
+
+        from repro.serving.supervisor import FAILED, window_verdict
+
+        sup = sess.supervisor
+        if sup is None or sup.state == FAILED:
+            return None
+        kind = window_verdict(window_stats)
+        if kind is None:
+            act = sup.on_clean_window(sess.steps_done)
+            if act == "recover" and sup.orig_backend is not None:
+                self._rebind_backend(sess, sup.orig_backend)
+                sup.orig_backend = None
+            sup.checkpoint(sess.state, sess.steps_done)
+            return None
+        act = sup.on_fault(kind, sess.steps_done)
+        if act == "fail":
+            final = self.close_session(sess.sid)
+            self.failed[sess.sid] = {
+                "steps_done": sess.steps_done,
+                "controller": final,
+                "events": [_dc.asdict(e) for e in sup.events],
+            }
+            return act
+        # roll back to the pre-fault snapshot; the halved dt (and, under
+        # quarantine, the fallback backend) applies to the replay
+        sess.state, sess.steps_done = sup.rollback()
+        if act == "quarantine" and sup.config.fallback_backend:
+            fb = sup.config.fallback_backend
+            if sess.solver.solver_backend != fb:
+                sup.orig_backend = sess.solver.solver_backend
+                self._rebind_backend(sess, fb)
+        return act
+
+    def _rebind_backend(self, sess: SimulationSession, backend: str):
+        """Swap the session's Krylov per-iteration backend in place; the
+        solver memoizes executors per (program, alpha, mode, backend), so
+        a backend the session used before rebinds without a retrace."""
+        sess.solver.solver_backend = backend
+        sess.controller.solver_backend = backend
+        sess.solver.rebind_alpha(sess.solver.alpha)
+
+    # ---- exact checkpoint/restore ---------------------------------------
+    def snapshot(self, path, scheduler=None) -> None:
+        """Serialize the whole engine to ``path`` (a directory): every
+        session's PisoState leaves (plus its supervisor's ``last_good``
+        snapshot), controller calibration + decision state, supervisor
+        state machine, dispatch counters and — when a scheduler is handed
+        in — its bookkeeping.  Written atomically (tmp + rename) in the
+        ``training/checkpoint.py`` idiom: one ``arrays.npz`` of leaves and
+        one ``manifest.json`` of everything else, so
+        :meth:`restore` resumes **exactly** — same states, same controller
+        decisions, same supervision posture.
+        """
+        import json
+        import os
+        import shutil
+
+        import numpy as np
+
+        from repro.fvm.piso import PisoState
+
+        arrays: dict[str, np.ndarray] = {}
+        sessions = []
+        for sid, sess in self.sessions.items():
+            for field, leaf in zip(PisoState._fields, sess.state):
+                arrays[f"{sid}|state|{field}"] = np.asarray(leaf)
+            sup = sess.supervisor
+            if sup is not None and sup.last_good is not None:
+                for field, leaf in zip(PisoState._fields, sup.last_good[0]):
+                    arrays[f"{sid}|good|{field}"] = np.asarray(leaf)
+            c = sess.controller
+            mesh = sess.solver.mesh
+            sessions.append({
+                "sid": sid,
+                "mesh": {"nx": mesh.nx, "ny": mesh.ny, "nz": mesh.nz,
+                         "n_parts": mesh.n_parts, "h": mesh.h,
+                         "n_parts_real": getattr(mesh, "n_parts_real",
+                                                 None)},
+                "dt": sess.dt, "adaptive": sess.adaptive,
+                "steps_done": sess.steps_done,
+                "priority": sess.priority, "deadline_ms": sess.deadline_ms,
+                "program": getattr(sess.solver, "program_name", "piso"),
+                "case": str(getattr(sess.solver, "case", "cavity")),
+                "nu": sess.solver.nu,
+                "alpha": sess.solver.alpha,
+                "solve_mode": sess.solver.solve_mode,
+                "solver_backend": sess.solver.solver_backend,
+                "latency_samples": list(sess.latency_samples),
+                "controller": {
+                    "alpha": c.alpha,
+                    "step_count": c.step_count,
+                    "last_switch_step": c.last_switch_step,
+                    "calibration": {
+                        "log_scales": list(c.calibration._log_scales),
+                        "n_obs": c.calibration.n_obs},
+                    "switches": [dataclasses.asdict(s) for s in c.switches],
+                    "history": [dataclasses.asdict(h) for h in c.history],
+                    "challenger": c._challenger,
+                    "challenger_wins": c._challenger_wins,
+                },
+                "supervisor": None if sup is None else sup.to_dict(),
+            })
+        manifest = {
+            "format": 1,
+            "engine": {
+                "scan_window": self.scan_window,
+                "lane_classes": self.lane_classes,
+                "track_latency": self.track_latency,
+                "supervise": self.supervise,
+                "supervisor_config": (
+                    None if self.supervisor_config is None
+                    else dataclasses.asdict(self.supervisor_config)),
+                "config": dataclasses.asdict(self.config),
+                "counters": dict(self.counters),
+            },
+            "failed": self.failed,
+            "scheduler": (None if scheduler is None
+                          else scheduler.bookkeeping()),
+            "sessions": sessions,
+        }
+        path = os.fspath(path)
+        tmp = path.rstrip("/") + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, default=float)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+
+    @classmethod
+    def restore(cls, path, plan_cache: PlanCache | None = None,
+                clock=None) -> "SimulationEngine":
+        """Rebuild an engine from :meth:`snapshot` output.  Sessions are
+        re-opened in manifest order (so cohort stacking order — and hence
+        batched reduction order — matches the snapshotting engine), then
+        every leaf, counter and decision variable is overwritten with the
+        serialized value: the resumed engine's next window is bit-identical
+        to what the snapshotted engine would have computed."""
+        import json
+        import os
+
+        import numpy as np
+
+        from repro.core.controller import SwitchEvent
+        from repro.core.cost_model import PhaseBreakdown
+        from repro.fvm.mesh import CavityMesh, PaddedCavityMesh
+        from repro.fvm.piso import PisoState
+        from repro.serving.supervisor import (SessionSupervisor,
+                                              SupervisorConfig)
+
+        with open(os.path.join(os.fspath(path), "manifest.json")) as f:
+            manifest = json.load(f)
+        arrs = np.load(os.path.join(os.fspath(path), "arrays.npz"))
+        e = manifest["engine"]
+        cfg = dict(e["config"])
+        cfg["alphas"] = tuple(cfg["alphas"])
+        sup_cfg = (None if e["supervisor_config"] is None
+                   else SupervisorConfig(**e["supervisor_config"]))
+        eng = cls(plan_cache=plan_cache, config=ControllerConfig(**cfg),
+                  scan_window=int(e["scan_window"]),
+                  lane_classes=e["lane_classes"],
+                  track_latency=e["track_latency"], clock=clock,
+                  supervise=e["supervise"], supervisor_config=sup_cfg)
+        eng.counters.update({k: int(v) for k, v in e["counters"].items()})
+        eng.failed = dict(manifest["failed"])
+        for m in manifest["sessions"]:
+            md = m["mesh"]
+            if md["n_parts_real"] is not None:
+                mesh = PaddedCavityMesh(
+                    nx=int(md["nx"]), ny=int(md["ny"]), nz=int(md["nz"]),
+                    n_parts=int(md["n_parts"]), h=float(md["h"]),
+                    n_parts_real=int(md["n_parts_real"]))
+            else:
+                mesh = CavityMesh(nx=int(md["nx"]), ny=int(md["ny"]),
+                                  nz=int(md["nz"]),
+                                  n_parts=int(md["n_parts"]),
+                                  h=float(md["h"]))
+            sid = m["sid"]
+            sess = eng.open_session(
+                sid, mesh, dt=float(m["dt"]), alpha0=int(m["alpha"]),
+                nu=float(m["nu"]), adaptive=m["adaptive"],
+                solve_mode=m["solve_mode"],
+                solver_backend=m["solver_backend"],
+                priority=m["priority"], deadline_ms=m["deadline_ms"],
+                program=m["program"], case=m["case"])
+            sess.state = PisoState(*[jnp.asarray(arrs[f"{sid}|state|{f}"])
+                                     for f in PisoState._fields])
+            sess.steps_done = int(m["steps_done"])
+            sess.latency_samples = list(m["latency_samples"])
+            c, cd = sess.controller, m["controller"]
+            c.alpha = int(cd["alpha"])
+            c.step_count = int(cd["step_count"])
+            c.last_switch_step = int(cd["last_switch_step"])
+            c.calibration._log_scales = [
+                float(s) for s in cd["calibration"]["log_scales"]]
+            c.calibration.n_obs = int(cd["calibration"]["n_obs"])
+            c.switches = [SwitchEvent(**s) for s in cd["switches"]]
+            c.history = [PhaseBreakdown(**h) for h in cd["history"]]
+            c._challenger = cd["challenger"]
+            c._challenger_wins = int(cd["challenger_wins"])
+            if m["supervisor"] is not None:
+                sup = SessionSupervisor.from_dict(m["supervisor"])
+                if m["supervisor"]["last_good_step"] is not None:
+                    good = PisoState(*[jnp.asarray(arrs[f"{sid}|good|{f}"])
+                                       for f in PisoState._fields])
+                    sup.last_good = (good,
+                                     int(m["supervisor"]["last_good_step"]))
+                sess.supervisor = sup
+        return eng
 
     def close_session(self, sid: str) -> dict:
         """Evict the tenant; returns its final controller stats."""
@@ -533,11 +845,14 @@ class SimulationEngine:
                       "switches": len(s.controller.switches),
                       "priority": s.priority,
                       "program": getattr(s.solver, "program_name", "piso"),
-                      "case": getattr(s.solver, "case", "cavity")}
+                      "case": getattr(s.solver, "case", "cavity"),
+                      "health": (None if s.supervisor is None
+                                 else s.supervisor.state)}
                 for sid, s in self.sessions.items()
             },
             "cohorts": [len(g) for g in self.cohorts().values()],
             "counters": dict(self.counters),
+            "failed": sorted(self.failed),
             "plan_cache": self.plan_cache.stats(),
             "latency": self.latency_stats(),
         }

@@ -249,18 +249,30 @@ class CohortScheduler:
                 self.active[s]["wait_rounds"] += 1
             self._log("defer", sids=tuple(sids), t=now, key=str(key))
         for key, sids in dispatch_list:
-            n = min(self.active[s]["remaining"] for s in sids)
-            chunk = self.dispatch(list(sids), n)
+            # an earlier dispatch this round may have evicted/failed a
+            # member (supervised engine closure, external cancellation) —
+            # dispatch only what is still active, and skip drained groups
+            alive = [s for s in sids if s in self.active]
+            if not alive:
+                continue
+            n = min(self.active[s]["remaining"] for s in alive)
+            chunk = self.dispatch(list(alive), n)
             self.dispatches += 1
             t1 = self.clock.now()
-            self._log("dispatch", sids=tuple(sids), chunk=chunk, t=t1,
+            self._log("dispatch", sids=tuple(alive), chunk=chunk, t=t1,
                       key=str(key))
-            for s in sids:
-                st = self.active[s]
-                per_step = (t1 - st["last_t"]) / chunk
-                self.samples[s].extend([per_step] * chunk)
+            for s in alive:
+                st = self.active.get(s)
+                if st is None:
+                    # evicted inside the dispatch itself: its queueing
+                    # time stops counting toward the p50/p99 meters at
+                    # the moment of removal — book nothing
+                    continue
+                if chunk > 0:
+                    per_step = (t1 - st["last_t"]) / chunk
+                    self.samples[s].extend([per_step] * chunk)
+                    st["remaining"] -= chunk
                 st["last_t"] = t1
-                st["remaining"] -= chunk
                 st["wait_rounds"] = 0
         # evictions happen at the window boundary just crossed
         for sid in [s for s, st in self.active.items()
@@ -319,6 +331,28 @@ class CohortScheduler:
             "latency": self.latency_stats(),
         }
 
+    def bookkeeping(self) -> dict:
+        """JSON-serializable scheduler bookkeeping for the engine
+        snapshot (``SimulationEngine.snapshot(path, scheduler=...)``):
+        per-active-session progress/wait state, round/dispatch counters
+        and the booked latency samples — enough to audit or re-seed a
+        scheduler after a kill-and-resume."""
+        return {
+            "rounds": self.rounds,
+            "dispatches": self.dispatches,
+            "max_wait_rounds": self.max_wait_rounds,
+            "clock_t": self.clock.now(),
+            "n_pending": len(self.pending),
+            "active": {
+                sid: {"remaining": st["remaining"],
+                      "last_t": st["last_t"],
+                      "wait_rounds": st["wait_rounds"],
+                      "priority": st["spec"].priority}
+                for sid, st in self.active.items()
+            },
+            "samples": {sid: list(xs) for sid, xs in self.samples.items()},
+        }
+
 
 class EngineScheduler:
     """The production adapter: :class:`CohortScheduler` policy over a
@@ -362,15 +396,29 @@ class EngineScheduler:
         return self.engine._cohort_key(self.engine.sessions[sid])
 
     def _dispatch(self, sids, n_steps: int) -> int:
+        alive = [s for s in sids if s in self.engine.sessions]
+        if not alive:
+            return 0
         t0 = time.perf_counter()
-        chunk = self.engine.advance_group(list(sids), n_steps,
-                                          self.last_stats)
+        chunk = self.engine.advance_group(alive, n_steps, self.last_stats)
         if hasattr(self.clock, "advance"):
             self.clock.advance(time.perf_counter() - t0)
+        # a supervised session may have FAILED inside the dispatch (the
+        # engine closed it already) — sync the policy core's bookkeeping
+        # so the heap/active maps never desync from the engine
+        for s in alive:
+            if s not in self.engine.sessions and s in self.core.active:
+                self.core._evict(s)
         return chunk
 
     def _evict(self, sid: str) -> None:
-        self.closed[sid] = self.engine.close_session(sid)
+        if sid in self.engine.sessions:
+            self.closed[sid] = self.engine.close_session(sid)
+        else:
+            # already closed engine-side (supervised failure): keep the
+            # post-mortem instead of double-closing
+            self.closed[sid] = getattr(self.engine, "failed", {}).get(sid,
+                                                                      {})
 
     def round(self) -> bool:
         return self.core.round()
@@ -382,3 +430,10 @@ class EngineScheduler:
         out = self.core.stats()
         out["engine"] = self.engine.stats()
         return out
+
+    def bookkeeping(self) -> dict:
+        return self.core.bookkeeping()
+
+    def snapshot(self, path) -> None:
+        """Engine snapshot with this scheduler's bookkeeping attached."""
+        self.engine.snapshot(path, scheduler=self)

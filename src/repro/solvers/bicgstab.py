@@ -22,6 +22,8 @@ class BiCGStabResult(NamedTuple):
     x: jax.Array
     iters: jax.Array
     residual: jax.Array
+    converged: jax.Array  # bool: ||r|| <= threshold at exit (False on NaN)
+    hit_cap: jax.Array    # bool: exited at maxiter without converging
 
 
 def _safe_div(num, den):
@@ -91,4 +93,10 @@ def bicgstab(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
     init = (x0, r0, jnp.zeros_like(b), jnp.zeros_like(b), one, one, one,
             rr0, jnp.array(0, jnp.int32), jnp.array(False))
     x, r, *_, rr, k, _ = jax.lax.while_loop(cond, body, init)
-    return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(rr))
+    # NaN rr yields converged=False and hit_cap=False: the silent-maxiter
+    # exit is now distinguishable from convergence AND from divergence.
+    # (A breakdown exit before the cap reports converged=False too.)
+    converged = rr <= threshold_sq
+    hit_cap = (k >= maxiter) & ~converged
+    return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(rr),
+                          converged=converged, hit_cap=hit_cap)

@@ -33,6 +33,8 @@ class CGResult(NamedTuple):
     x: jax.Array
     iters: jax.Array
     residual: jax.Array   # final ||r||_2
+    converged: jax.Array  # bool: ||r|| <= threshold at exit (False on NaN)
+    hit_cap: jax.Array    # bool: exited at maxiter without converging
 
 
 def cg(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
@@ -73,4 +75,9 @@ def cg(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
 
     init = (x0, r0, z0, gamma0, rr0, jnp.array(0, jnp.int32))
     x, r, _, _, rr, k = jax.lax.while_loop(cond, body, init)
-    return CGResult(x=x, iters=k, residual=jnp.sqrt(rr))
+    # NaN rr compares False on both sides: converged and hit_cap both stay
+    # False, which the health plumbing upstream reads as divergence.
+    converged = rr <= threshold_sq
+    hit_cap = (k >= maxiter) & ~converged
+    return CGResult(x=x, iters=k, residual=jnp.sqrt(rr),
+                    converged=converged, hit_cap=hit_cap)

@@ -260,6 +260,66 @@ def test_cg_fused_ragged_zero_padded_part():
 
 
 # ---------------------------------------------------------------------------
+# health flags: converged / hit_cap parity, reference vs fused (ISSUE 8)
+# ---------------------------------------------------------------------------
+def _spd_ops_pair(alpha=2):
+    """The laplacian system of test_cg_fused_matches_reference through
+    both backends, plus its rhs/x0."""
+    mesh = CavityMesh.cube(4, 4)
+    layout, buffers, diag = laplacian_buffers(mesh)
+    A_dense = global_dense(layout, buffers)
+    plan = plan_for_mesh(mesh, alpha)
+    n_c = mesh.n_parts // alpha
+    grouped = jnp.asarray(buffers).reshape(n_c, alpha, -1)
+    bands = update_device_direct(plan, grouped, target="dia")
+    offsets = tuple(int(o) for o in plan.dia_offsets)
+    diag_c = jnp.asarray(diag).reshape(n_c, plan.m_coarse)
+    rng = np.random.default_rng(8)
+    x_true = rng.standard_normal(mesh.n_cells_global)
+    b = jnp.asarray((A_dense @ x_true).reshape(n_c, plan.m_coarse))
+
+    def A(v):
+        return spmv_dia(bands, v, offsets=offsets, plane=plan.plane)
+
+    ops_ref = reference_ops(A, jacobi_preconditioner(diag_c))
+    ops_fus = fused_stacked_ops(bands, diag_c, offsets=offsets,
+                                plane=plan.plane)
+    return ops_ref, ops_fus, b, jnp.zeros_like(b)
+
+
+@pytest.mark.parametrize("solver", [cg, bicgstab])
+def test_krylov_flags_parity_reference_vs_fused(solver):
+    """converged/hit_cap must agree across backends, both on a solve that
+    converges and on one clamped below the iterations it needs."""
+    ops_ref, ops_fus, b, x0 = _spd_ops_pair()
+    res_ref = solver(ops_ref, b, x0, tol=1e-10)
+    res_fus = solver(ops_fus, b, x0, tol=1e-10)
+    assert bool(res_ref.converged) and bool(res_fus.converged)
+    assert not bool(res_ref.hit_cap) and not bool(res_fus.hit_cap)
+    assert int(res_ref.iters) == int(res_fus.iters)
+
+    cap_ref = solver(ops_ref, b, x0, tol=1e-14, maxiter=2)
+    cap_fus = solver(ops_fus, b, x0, tol=1e-14, maxiter=2)
+    for res in (cap_ref, cap_fus):
+        assert not bool(res.converged) and bool(res.hit_cap)
+        assert int(res.iters) == 2
+    # the capped residual is still reported (finite, nonzero)
+    assert np.isfinite(float(cap_ref.residual))
+    assert np.isfinite(float(cap_fus.residual))
+
+
+@pytest.mark.parametrize("solver", [cg, bicgstab])
+def test_krylov_flags_nan_rhs_signature(solver):
+    """A NaN rhs is the divergence signature: the NaN residual makes the
+    while-cond False immediately — 0 iterations, converged False AND
+    hit_cap False (distinct from a capped solve)."""
+    b = jnp.ones((2, 32)).at[0, 0].set(jnp.nan)
+    res = solver(lambda v: 2.0 * v, b, jnp.zeros_like(b), tol=1e-10)
+    assert int(res.iters) == 0
+    assert not bool(res.converged) and not bool(res.hit_cap)
+
+
+# ---------------------------------------------------------------------------
 # regression: cond carries the residual norm — no reduction per check
 # ---------------------------------------------------------------------------
 _REDUCTIONS = {"dot_general", "reduce_sum", "reduce", "psum"}

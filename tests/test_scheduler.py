@@ -350,3 +350,91 @@ def test_engine_scheduler_respects_prepadded_and_plain_meshes():
         arrival_t=0.0, open_kwargs={"adaptive": False, "alpha0": 1}))
     plain.run()
     assert "raw" in plain.closed
+
+
+# ---------------------------------------------------------------------------
+# mid-round eviction: close_session during an active round (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def _mid_round_harness(victim_group_sids, evict_inside):
+    """A CohortScheduler whose dispatch costs 1.0s, advances 4 steps, and
+    evicts ``evict_inside`` sessions while the dispatch is in flight —
+    the shape of a supervised engine closing a FAILED session mid-round."""
+    clock = VirtualClock()
+    holder = {}
+
+    def dispatch(sids, n):
+        clock.advance(1.0)
+        for sid in evict_inside:
+            if sid in holder["sched"].active:
+                holder["sched"].evict(sid)
+        return min(n, 4)
+
+    sched = CohortScheduler(dispatch, key_fn=lambda s: s[0], clock=clock)
+    holder["sched"] = sched
+    for sid in victim_group_sids:
+        sched.submit(SessionSpec(sid, "m", 1e-3, 8, arrival_t=0.0))
+    return sched
+
+
+def test_evict_during_dispatch_books_no_queueing_time():
+    """A session evicted inside the dispatch stops accruing p50/p99
+    samples at the moment of removal: the round's post-dispatch
+    accounting must book nothing for it (and not KeyError), while its
+    cohort-mates book the full window normally."""
+    sched = _mid_round_harness(["Xa", "Xb"], evict_inside=["Xa"])
+    assert sched.round() is True
+    assert "Xa" not in sched.active
+    assert sched.samples["Xa"] == []          # queueing time not charged
+    assert sched.samples["Xb"] == [0.25] * 4  # (1.0 - 0.0) / 4 per step
+    assert sched.active["Xb"]["remaining"] == 4
+    # the eviction landed in the log, and the drain still terminates
+    kinds = [e["kind"] for e in sched.events]
+    assert "evict" in kinds
+    sched.run()
+    assert not sched.active
+
+
+def test_group_fully_evicted_before_its_dispatch_is_skipped():
+    """An earlier dispatch this round may drain a *later* group (the
+    supervised engine failing a session in another cohort): the drained
+    group must be skipped, not dispatched empty."""
+    sched = _mid_round_harness(["Xa", "Yb"], evict_inside=["Yb"])
+    sched.round()
+    assert sched.dispatches == 1              # Y's dispatch never ran
+    assert [e["sids"] for e in sched.events
+            if e["kind"] == "dispatch"] == [("Xa",)]
+    assert sched.samples["Yb"] == []
+
+
+def test_zero_chunk_dispatch_books_nothing():
+    """A dispatch reporting zero progress (every target closed under it)
+    must not divide by zero, book samples, or decrement remaining."""
+    clock = VirtualClock()
+
+    def dispatch(sids, n):
+        clock.advance(1.0)
+        return 0
+
+    sched = CohortScheduler(dispatch, key_fn=lambda s: "X", clock=clock)
+    sched.submit(SessionSpec("a", "m", 1e-3, 8, arrival_t=0.0))
+    sched.round()
+    assert sched.samples["a"] == []
+    assert sched.active["a"]["remaining"] == 8
+    # last progress point still advances: the stall is not later charged
+    # to the session as queueing latency
+    assert sched.active["a"]["last_t"] == 1.0
+
+
+def test_bookkeeping_snapshot_shape():
+    """bookkeeping() is JSON-serializable and captures per-active
+    progress — the payload engine.snapshot(path, scheduler=...) embeds."""
+    import json
+
+    sched = _mid_round_harness(["Xa", "Xb"], evict_inside=[])
+    sched.round()
+    book = sched.bookkeeping()
+    json.dumps(book)
+    assert book["rounds"] == 1 and book["dispatches"] == 1
+    assert book["active"]["Xa"]["remaining"] == 4
+    assert book["samples"]["Xa"] == [0.25] * 4

@@ -504,3 +504,77 @@ def test_advance_group_rejects_mixed_program_or_case():
     # the legitimate per-key groups still advance fine
     for group in eng.cohorts().values():
         assert eng.advance_group(list(group), 4) >= 1
+
+
+# ---------------------------------------------------------------------------
+# supervision: a poisoned lane never perturbs its cohort-mates (ISSUE 8)
+# ---------------------------------------------------------------------------
+def test_nan_lane_leaves_cohort_mates_unperturbed():
+    """NaN-poison one lane of a 4-session batched cohort between windows:
+    the poisoned window still runs batched (vmap lanes are independent),
+    healthy sessions must match the no-fault run <= 1e-10 with identical
+    pressure-CG iteration counts, and the supervisor quarantines the
+    faulty session out of the cohort within that one window."""
+    mesh = CavityMesh.cube(4, 4)
+    window = 4
+
+    ref = SimulationEngine(scan_window=window, supervise=True)
+    sids = _open_mixed_dt(ref, 4, mesh, adaptive=False)
+    ref_stats = [ref.step_all(window) for _ in range(3)]
+
+    eng = SimulationEngine(scan_window=window, supervise=True)
+    _open_mixed_dt(eng, 4, mesh, adaptive=False)
+    assert [len(g) for g in eng.cohorts().values()] == [4]
+    stats = [eng.step_all(window)]
+    s1 = eng.sessions["s1"]
+    s1.state = s1.state._replace(U=s1.state.U.at[0, 0, 0].set(jnp.nan))
+    stats.append(eng.step_all(window))
+
+    # the faulty session was detected in the poisoned window, rolled back,
+    # and quarantined out of the cohort within that window: the next
+    # grouping co-batches the healthy trio and steps s1 solo
+    sup = s1.supervisor
+    assert any(e.kind == "fault" and e.detail == "diverged"
+               for e in sup.events)
+    assert sup.state == "degraded"
+    assert sorted(len(g) for g in eng.cohorts().values()) == [1, 3]
+    # ...but it still earned its full step budget (rollback + solo retry)
+    assert s1.steps_done == 2 * window
+    assert np.isfinite(np.asarray(s1.state.U)).all()
+
+    stats.append(eng.step_all(window))
+    healthy = [s for s in sids if s != "s1"]
+    for sid in healthy:
+        a, b = ref.sessions[sid].state, eng.sessions[sid].state
+        assert float(jnp.abs(b.U - a.U).max()) <= 1e-10
+        assert float(jnp.abs(b.p - a.p).max()) <= 1e-10
+        # identical CG iteration counts through the poisoned window AND on
+        # the window after it
+        for call in (1, 2):
+            assert [int(i) for i in stats[call][sid].p_iters] == \
+                [int(i) for i in ref_stats[call][sid].p_iters]
+        assert eng.sessions[sid].supervisor.state == "healthy"
+        assert eng.sessions[sid].steps_done == 3 * window
+
+
+def test_supervised_session_recovers_and_rejoins_cohort():
+    """After the configured number of clean windows the degraded session
+    de-escalates to healthy, its dt scale resets, and the next scheduling
+    round co-batches it with its old cohort again."""
+    mesh = CavityMesh.cube(4, 4)
+    window = 4
+    eng = SimulationEngine(scan_window=window, supervise=True)
+    _open_mixed_dt(eng, 4, mesh, adaptive=False)
+    eng.step_all(window)
+    s1 = eng.sessions["s1"]
+    s1.state = s1.state._replace(U=s1.state.U.at[0, 0, 0].set(jnp.nan))
+    eng.step_all(window)                      # fault -> degrade -> retry
+    assert s1.supervisor.state == "degraded"
+    assert s1.supervisor.dt_scale < 1.0
+    # recovery_windows clean windows de-escalate back to healthy
+    for _ in range(eng.supervisor_config.recovery_windows):
+        eng.step_all(window)
+    assert s1.supervisor.state == "healthy"
+    assert s1.supervisor.dt_scale == 1.0
+    assert [len(g) for g in eng.cohorts().values()] == [4]
+    assert any(e.kind == "restore" for e in s1.supervisor.events)
