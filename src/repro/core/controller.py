@@ -280,7 +280,8 @@ class RepartitionController:
                  cache: PlanCache | None = None,
                  fixed_fine: bool = False,
                  solve_mode: str = "stacked",
-                 solver_backend: str = "auto"):
+                 solver_backend: str = "auto",
+                 pipelined: bool = False):
         """``fixed_fine`` selects the partition parametrization:
 
         * ``False`` (paper §2): the solve side is pinned to ``n_gpu``
@@ -305,6 +306,16 @@ class RepartitionController:
         the constant-factor bytes difference within the warmup window —
         launch surfaces that want the static prior right resolve auto
         against their part size themselves (``repro.launch.cavity``).
+
+        ``pipelined`` tells the controller its session advances through
+        the software-pipelined executor: alpha selection then scores
+        candidates with the overlap objective
+        ``max(assembly, solve + halo) + update``
+        (:meth:`CostModel.T_step_pipelined`'s shape) instead of the
+        serial sum — the balance point shifts once assembly hides behind
+        the solve.  Calibration is unaffected: instrumented samples force
+        the serial schedule, so the per-phase scales stay serial truths
+        the max() is applied on top of.
         """
         if solve_mode not in ("stacked", "full_mesh"):
             raise ValueError(f"unknown solve_mode {solve_mode!r}")
@@ -328,6 +339,7 @@ class RepartitionController:
         self.fixed_fine = fixed_fine
         self.solve_mode = solve_mode
         self.solver_backend = solver_backend
+        self.pipelined = pipelined
         self.config = config
         # explicit None test: an empty PlanCache is falsy (it has __len__)
         self.cache = PlanCache() if cache is None else cache
@@ -365,18 +377,39 @@ class RepartitionController:
         return self.model.predict_phases(n_as, n_ls,
                                          self.config.device_direct)
 
+    def predicted_total(self, alpha: int | None = None) -> float:
+        """The per-step objective alpha selection minimizes.
+
+        Serial sessions pay the sum of the four phases; pipelined ones
+        pay ``max(assembly, solve + halo) + update`` — assembly and the
+        device solve overlap (``solve + halo`` IS the model's
+        ``t_solver``), while the coefficient update stays serial
+        (:meth:`CostModel.T_pipelined`)."""
+        ph = self.predicted_phases(alpha)
+        if self.pipelined:
+            return max(ph.assembly, ph.solve + ph.halo) + ph.update
+        return ph.total
+
     def recommend(self) -> int:
         """Unfiltered argmin over feasible alphas on the calibrated model."""
-        return min(self.feasible_alphas(),
-                   key=lambda a: self.predicted_phases(a).total)
+        return min(self.feasible_alphas(), key=self.predicted_total)
 
     # -- the feedback step ------------------------------------------------
     def observe(self, measured: PhaseBreakdown) -> None:
-        """Fold one measured per-phase sample into the calibration."""
-        n_as, n_ls = self.partition_counts(self.alpha)
-        self.calibration.observe(
-            self.base_model, measured, n_as, n_ls,
-            self.config.device_direct)
+        """Fold one measured per-phase sample into the calibration.
+
+        A sample with ``overlapped=True`` (derived from a pipelined
+        window, where phase walls hide behind each other) must never
+        calibrate the serial per-phase model — it is recorded in the
+        history but skipped by the calibration.  The instrumented
+        executors force the serial schedule, so their samples always
+        arrive with ``overlapped=False``.
+        """
+        if not getattr(measured, "overlapped", False):
+            n_as, n_ls = self.partition_counts(self.alpha)
+            self.calibration.observe(
+                self.base_model, measured, n_as, n_ls,
+                self.config.device_direct)
         self.history.append(measured)
 
     def step(self, measured: PhaseBreakdown) -> int:
@@ -401,8 +434,8 @@ class RepartitionController:
             self._challenger, self._challenger_wins = None, 0
             return self.alpha
 
-        t_now = self.predicted_phases(self.alpha).total
-        t_best = self.predicted_phases(best).total
+        t_now = self.predicted_total(self.alpha)
+        t_best = self.predicted_total(best)
         gain = (t_now - t_best) / max(t_now, 1e-30)
         if gain < cfg.hysteresis:
             self._challenger, self._challenger_wins = None, 0
@@ -444,6 +477,7 @@ class RepartitionController:
             "alpha": self.alpha,
             "solve_mode": self.solve_mode,
             "solver_backend": self.solver_backend,
+            "pipelined": self.pipelined,
             "steps": self.step_count,
             "switches": [dataclasses.asdict(e) for e in self.switches],
             "scales": {"assembly": a, "solve": s, "comm": c},

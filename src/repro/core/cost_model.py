@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import ClassVar
 
 __all__ = [
     "HardwareSpec", "CostModel", "PhaseBreakdown", "TPU_V5E", "HOREKA_A100",
@@ -74,12 +75,23 @@ class PhaseBreakdown:
     (:mod:`repro.core.controller`): host-side matrix **assembly**, the
     repartitioning coefficient **update** (paper fig. 3b), the per-iteration
     **halo** exchange of the solve, and the Krylov **solve** itself.
+
+    ``overlapped`` is provenance, not a time: ``True`` marks a breakdown
+    derived from a software-pipelined window
+    (:class:`repro.fvm.step_program.PipelinedExecutor`), whose phase walls
+    overlap and therefore must never calibrate the serial model — the
+    controller's :meth:`~repro.core.controller.RepartitionController.observe`
+    skips calibration for such samples.  The instrumented walk always forces
+    the serial schedule and emits ``overlapped=False``.
     """
+
+    TIME_FIELDS: ClassVar[tuple] = ("assembly", "update", "halo", "solve")
 
     assembly: float
     update: float
     halo: float
     solve: float
+    overlapped: bool = False
 
     @property
     def total(self) -> float:
@@ -247,15 +259,45 @@ class CostModel:
         return (self.T_repartitioned(n_as, n_ls, device_direct)
                 + self.t_dispatch(steps_per_dispatch))
 
+    def T_pipelined(self, n_as: int, n_ls: int,
+                    device_direct: bool = True) -> float:
+        """Eq. (3) under software pipelining: assembly hides behind the
+        solve (or vice versa), so the serial ``t_assembly + t_solver`` sum
+        collapses to a ``max`` — only the longer resource is on the
+        critical path — while the coefficient update (the fine→coarse
+        repartition ship) stays serial: it both consumes the freshly
+        assembled coefficients and gates the next solve."""
+        return (max(self.t_assembly(n_as), self.t_solver(n_ls))
+                + self.t_repartition(n_as, n_ls, device_direct))
+
+    def T_step_pipelined(self, n_as: int, n_ls: int,
+                         device_direct: bool = True,
+                         steps_per_dispatch: int = 1) -> float:
+        """Pipelined whole-timestep wall projection:
+        ``max(t_assembly, t_solver) + t_update + t_dispatch`` — the overlap
+        analogue of :meth:`T_step`.  Because the max flattens the assembly
+        branch wherever the solve dominates, the balance point (and hence
+        the controller's ``optimal_alpha``) shifts relative to the serial
+        sum."""
+        return (self.T_pipelined(n_as, n_ls, device_direct)
+                + self.t_dispatch(steps_per_dispatch))
+
     def optimal_alpha(self, n_cpu: int, n_gpu: int,
-                      candidates=(1, 2, 4, 8, 16, 32)) -> int:
-        """Best repartitioning ratio: fine parts = n_gpu * alpha ranks."""
+                      candidates=(1, 2, 4, 8, 16, 32),
+                      pipelined: bool = False) -> int:
+        """Best repartitioning ratio: fine parts = n_gpu * alpha ranks.
+
+        ``pipelined`` scores candidates with the overlap objective
+        :meth:`T_pipelined` instead of the serial sum — once assembly hides
+        behind the solve, raising alpha past the balance point only buys
+        update latency, so the argmin can land on a smaller alpha."""
         best, best_t = 1, float("inf")
+        objective = self.T_pipelined if pipelined else self.T_repartitioned
         for a in candidates:
             n_as = n_gpu * a
             if n_as > n_cpu:
                 break
-            t = self.T_repartitioned(n_as, n_gpu)
+            t = objective(n_as, n_gpu)
             if t < best_t:
                 best, best_t = a, t
         return best

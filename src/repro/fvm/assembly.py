@@ -301,7 +301,12 @@ class CavityAssembly:
     def assemble_momentum(self, U_old: jax.Array, phi: jax.Array,
                           phi_if: jax.Array, p: jax.Array,
                           dt: float,
-                          phi_b: jax.Array | None = None) -> MomentumSystem:
+                          phi_b: jax.Array | None = None,
+                          gradp: jax.Array | None = None) -> MomentumSystem:
+        """``gradp`` short-circuits the pressure-gradient source: when the
+        caller already holds ``grad(p)`` (the pipelined executor carries it
+        across the step boundary in its ring), it is consumed directly and
+        ``p`` is never touched — pass ``p=None`` in that case."""
         P, m = U_old.shape[:2]
         F = phi.shape[1]
         diag = jnp.full((P, m), self.V / dt, self.dtype)
@@ -355,7 +360,7 @@ class CavityAssembly:
                 gb * mask[:, None, None] * jnp.atleast_2d(Ub)[None, ...])
 
         # pressure gradient source
-        source = source - self.V * self.grad(p)
+        source = source - self.V * (self.grad(p) if gradp is None else gradp)
         return MomentumSystem(diag, upper, lower, iface, source)
 
     def offdiag_apply(self, sys, x: jax.Array) -> jax.Array:
@@ -371,20 +376,17 @@ class CavityAssembly:
     # ------------------------------------------------------------------
     # PISO pressure equation
     # ------------------------------------------------------------------
-    def assemble_pressure(self, rAU: jax.Array, phiHbyA: jax.Array,
-                          phiHbyA_if: jax.Array,
-                          phiHbyA_b: jax.Array | None = None,
-                          ref_boost: float = 1.0) -> PressureSystem:
-        """-laplacian(rAU, p) = -div(phiHbyA), SPD form for CG.
+    def assemble_pressure_matrix(self, rAU: jax.Array,
+                                 ref_boost: float = 1.0) -> PressureSystem:
+        """The corrector-invariant half of :meth:`assemble_pressure`.
 
-        Face conductance ``g_f = rAU_f * A / h`` with linear interpolation of
-        rAU.  Outlet patches carry a Dirichlet p = 0 at the half-cell
-        boundary distance (``g_b = rAU * A / (h/2)`` added to the diagonal
-        only — the fixed boundary value contributes nothing to the source),
-        which pins the pressure level.  Cases without an outlet are
-        all-Neumann; there, ``setReference``: the global reference cell
-        (part 0, cell 0) gets its diagonal boosted (refValue = 0),
-        removing the nullspace.
+        Every matrix coefficient of the pressure equation — conductances,
+        diagonal, off-diagonals, outlet boundary conductances, reference
+        boost — depends only on ``rAU = V / diag(momentum)``, which is fixed
+        for the whole PISO step.  Splitting it out lets the pipelined
+        executor build the matrix once per step (and plan its Jacobi bands
+        once) while each corrector re-assembles only the divergence source.
+        Returns a :class:`PressureSystem` with a **zero** source.
         """
         P, m = rAU.shape
         rAUf = 0.5 * (rAU[:, self.owner] + rAU[:, self.neigh])
@@ -413,14 +415,37 @@ class CavityAssembly:
             g_b = g_b.at[:, slot].set(gb * self.patch_mask[:, pi][:, None])
             diag = diag.at[:, rows].add(g_b[:, slot])
 
-        source = -self.divergence(phiHbyA, phiHbyA_if, phiHbyA_b)
         if self._needs_ref:
             # reference cell: diag *= (1 + boost) at global cell 0
             # (OpenFOAM-like); redundant (and skipped) with an outlet
             boost = jnp.zeros((P, m), self.dtype).at[0, 0].set(ref_boost)
             diag = diag * (1.0 + boost)
+        source = jnp.zeros((P, m), self.dtype)
         return PressureSystem(diag, upper, lower, iface, source,
                               g_int, g_if, g_b)
+
+    def assemble_pressure(self, rAU: jax.Array, phiHbyA: jax.Array,
+                          phiHbyA_if: jax.Array,
+                          phiHbyA_b: jax.Array | None = None,
+                          ref_boost: float = 1.0) -> PressureSystem:
+        """-laplacian(rAU, p) = -div(phiHbyA), SPD form for CG.
+
+        Face conductance ``g_f = rAU_f * A / h`` with linear interpolation of
+        rAU.  Outlet patches carry a Dirichlet p = 0 at the half-cell
+        boundary distance (``g_b = rAU * A / (h/2)`` added to the diagonal
+        only — the fixed boundary value contributes nothing to the source),
+        which pins the pressure level.  Cases without an outlet are
+        all-Neumann; there, ``setReference``: the global reference cell
+        (part 0, cell 0) gets its diagonal boosted (refValue = 0),
+        removing the nullspace.
+
+        Delegates the matrix half to :meth:`assemble_pressure_matrix` and
+        fills in the divergence source — bitwise-identical to the previous
+        monolithic assembly (the matrix block never reads the source).
+        """
+        sys = self.assemble_pressure_matrix(rAU, ref_boost=ref_boost)
+        return dataclasses.replace(
+            sys, source=-self.divergence(phiHbyA, phiHbyA_if, phiHbyA_b))
 
     def correct_flux(self, sysP: PressureSystem, phiHbyA, phiHbyA_if, p):
         """phi = phiHbyA - g_f (p_n - p_o); conservative by construction."""

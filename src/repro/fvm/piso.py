@@ -189,6 +189,13 @@ class SegregatedSolver:
     # value, and the instrumented executor's value updates route through
     # the cache's shared compiled-update pool
     plan_cache: object | None = None
+    # software-pipelined stepping (fvm/step_program.PipelinedExecutor):
+    # "auto" takes the pipelined path whenever the registered program
+    # declares one (PISO does; steady programs degrade to the serial
+    # executors), "on" demands it (ValueError on a program without a
+    # PipelineForm), "off" forces the serial fused path.  The resolved
+    # boolean is ``self.pipelined`` and keys the executor memoization.
+    pipeline: str = "auto"
 
     def __post_init__(self):
         if self.mesh.n_parts % self.alpha != 0:
@@ -200,6 +207,17 @@ class SegregatedSolver:
         if self.solver_backend not in ("auto", "fused", "reference"):
             raise ValueError(
                 f"unknown solver_backend {self.solver_backend!r}")
+        if self.pipeline not in ("auto", "on", "off"):
+            raise ValueError(f"unknown pipeline mode {self.pipeline!r} "
+                             f"(choose auto|on|off)")
+        spec = get_program(self.program_name)
+        if self.pipeline == "on" and not spec.pipelined:
+            raise ValueError(
+                f"program {self.program_name!r} declares no pipelined form "
+                f"(steady programs cannot software-pipeline across an "
+                f"unknown outer trip count) — use pipeline='auto' or 'off'")
+        self.pipelined = (self.pipeline == "on"
+                          or (self.pipeline == "auto" and spec.pipelined))
         self.full_mesh_solve = self.solve_mode == "full_mesh"
         # size-class serving: a PaddedCavityMesh carries ghost slabs whose
         # activity is decided by a *traced* per-session n_active operand
@@ -250,8 +268,9 @@ class SegregatedSolver:
         The velocity/pressure state is alpha-independent (fine-partition
         layout), so a running simulation can switch plans between steps.
         Plans come from ``plan_cache`` when present; the built StepProgram
-        and its executors are memoized per (alpha, mode, backend), so a
-        revisited alpha pays zero re-plan, re-trace or re-compile cost.
+        and its executors are memoized per (program, alpha, mode, backend,
+        pipelined), so a revisited alpha pays zero re-plan, re-trace or
+        re-compile cost.
         """
         if self.mesh.n_parts % alpha != 0:
             raise ValueError("alpha must divide the number of fine parts")
@@ -273,7 +292,7 @@ class SegregatedSolver:
                     self.n_coarse, alpha,
                     devices=list(self.spmd_mesh.devices.flat))
         key = (self.program_name, alpha, self.solve_mode,
-               self.solver_backend)
+               self.solver_backend, self.pipelined)
         exe = self._programs.get(key)
         if exe is None:
             # a fresh program binds fresh closures over the new plans, so
@@ -395,7 +414,16 @@ class SegregatedSolver:
 
         return reference_ops(A, jacobi_preconditioner(diag))
 
-    # ---- the three executors --------------------------------------------
+    # ---- the executors ---------------------------------------------------
+    @property
+    def _stepper(self):
+        """The advancing executor of this binding: the software-pipelined
+        one when the resolved ``pipeline`` knob says so (identical
+        external contract — traced dt, donated state, one dispatch per
+        rolled window), the serial fused one otherwise."""
+        return (self._exec.pipelined if self.pipelined
+                else self._exec.fused)
+
     def step(self, state: PisoState, dt: float):
         """One timestep as ONE fused XLA dispatch.
 
@@ -403,7 +431,7 @@ class SegregatedSolver:
         ``state`` is DONATED — its buffers are invalidated by the call;
         keep using the returned state.  Returns ``(state, StepStats)``.
         """
-        return self._exec.fused.step(state, dt, *self._extras())
+        return self._stepper.step(state, dt, *self._extras())
 
     def run_steps(self, state: PisoState, dt: float, n_steps: int):
         """Advance ``n_steps`` timesteps as ONE scan-rolled XLA dispatch.
@@ -412,20 +440,24 @@ class SegregatedSolver:
         a leading ``n_steps`` axis (per-step history of the window).
         ``state`` is donated; each distinct window length compiles once.
         """
-        return self._exec.fused.run_steps(state, dt, n_steps,
-                                          *self._extras())
+        return self._stepper.run_steps(state, dt, n_steps,
+                                       *self._extras())
 
     def batched_executor(self, batch: int):
         """The cohort stepper for ``batch`` stacked sessions.
 
-        ``jax.vmap`` of this binding's fused program over a leading
-        session axis (:class:`~repro.fvm.step_program.BatchedExecutor`),
+        ``jax.vmap`` of this binding's program over a leading session
+        axis (:class:`~repro.fvm.step_program.BatchedExecutor`, or its
+        pipelined variant when the resolved ``pipeline`` knob is on),
         memoized per cohort size alongside the other executors of the
-        current ``(alpha, solve_mode, solver_backend)`` binding.  Any
-        solver with an equal binding on the same mesh produces a
-        numerically interchangeable batched program — what lets the
-        serving engine step a whole cohort through one member's executor.
+        current ``(alpha, solve_mode, solver_backend, pipelined)``
+        binding.  Any solver with an equal binding on the same mesh
+        produces a numerically interchangeable batched program — what
+        lets the serving engine step a whole cohort through one member's
+        executor.
         """
+        if self.pipelined:
+            return self._exec.batched_pipelined(batch)
         return self._exec.batched(batch)
 
     def timed_step(self, state: PisoState, dt: float):

@@ -183,6 +183,11 @@ def build_simple_program(solver) -> StepProgram:
                        converged=converged)
 
 
+# pipelined stays at the ProgramSpec default (False): SIMPLE runs under
+# run_converged's lax.while_loop, whose trip count is unknown until the
+# convergence gates fire, so there is no static scan window to software-
+# pipeline across — pipeline="auto" degrades to the serial fused
+# executor and pipeline="on" raises ("no pipelined form").
 register_program(ProgramSpec(
     name="simple",
     build=build_simple_program,

@@ -38,9 +38,18 @@ definition:
   instrumented walk emits one apportioned ``PhaseBreakdown`` row per
   session, so per-session controllers stay independent
   (``SimulationEngine.step_all`` is the consumer).
+* :class:`PipelinedExecutor` — the program's **software-pipelined**
+  alternative schedule (:class:`PipelineForm`): the declared phase
+  inputs/outputs are compiled into a dependence DAG, independent phases
+  are hoisted next to the blocking Krylov solves (the legal overlap
+  frontier, computed automatically), and ring-carried values cross the
+  ``lax.scan`` step boundary so step t+1's assembly consumes work issued
+  during step t.  Dispatch count, dt tracing, state donation and the
+  stacked ``StepStats`` semantics all match :class:`FusedExecutor`;
+  :class:`BatchedPipelinedExecutor` is its cohort (vmapped) variant.
 
 Every future phase change (overlap, mixed precision, extra correctors) is
-a one-place edit to the phase list; all three executors pick it up.
+a one-place edit to the phase list; all executors pick it up.
 """
 from __future__ import annotations
 
@@ -56,13 +65,15 @@ from repro.core.cost_model import PhaseBreakdown
 
 __all__ = [
     "Phase", "StepProgram", "FusedExecutor", "InstrumentedExecutor",
-    "BatchedExecutor", "ProgramExecutors", "build_piso_program",
+    "BatchedExecutor", "PipelinedExecutor", "BatchedPipelinedExecutor",
+    "PipelineForm", "ProgramExecutors", "build_piso_program",
     "PHASE_TAGS", "ProgramSpec", "PROGRAMS", "register_program",
     "get_program", "program_names", "PhaseToolkit",
 ]
 
-# the cost-model buckets a phase may bill to (PhaseBreakdown fields)
-PHASE_TAGS = tuple(f.name for f in dataclasses.fields(PhaseBreakdown))
+# the cost-model buckets a phase may bill to (PhaseBreakdown TIME fields —
+# the provenance flag ``overlapped`` is not a billable bucket)
+PHASE_TAGS = PhaseBreakdown.TIME_FIELDS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +96,12 @@ class Phase:
     one ``probe`` dispatch, reads the iteration count from the
     ``probe_iters`` output, and bills ``min(iters * t_probe, t_phase / 2)``
     to ``halo`` with the remainder on ``tag``.
+
+    ``blocking`` marks a latency-bound phase (a Krylov ``while_loop``
+    solve) for the pipelined scheduler: the scheduler issues every
+    dataflow-independent phase *before* a blocking one at the same
+    dependence level, so the compiler sees the overlappable work ahead of
+    the long solve it should hide behind.
     """
 
     name: str
@@ -97,6 +114,7 @@ class Phase:
     probe: Callable | None = None
     probe_inputs: tuple[str, ...] = ()
     probe_iters: str | None = None
+    blocking: bool = False
 
     @property
     def label(self) -> str:
@@ -224,6 +242,144 @@ def _converged_outer(program: StepProgram, max_iters: int) -> Callable:
 
 
 @dataclasses.dataclass(frozen=True)
+class PipelineForm:
+    """A program's software-pipelined alternative schedule.
+
+    ``phases`` is a *restructured* phase list computing the same step as
+    the program's serial list but factored so the dependence DAG exposes
+    overlap — e.g. PISO splits the pressure assembly into a
+    corrector-invariant matrix phase (hoistable next to the momentum
+    solve) and a cheap per-corrector source phase.  ``ring`` names env
+    keys carried **across the scan step boundary**: each listed key must
+    be produced by some phase, and its value at the end of step t feeds
+    step t+1's env — software pipelining proper, since XLA cannot CSE
+    across ``lax.scan`` iterations.  ``prime`` seeds the ring for the
+    first step (the pipeline prologue): ``prime(env) -> {ring key: value}``
+    from the seeded env, run once per window *inside* the jitted program.
+    """
+
+    phases: tuple[Phase, ...]
+    ring: tuple[str, ...] = ()
+    prime: Callable | None = None
+
+
+def _pipeline_schedule(phases: tuple[Phase, ...]):
+    """Compile declared phase inputs/outputs into the pipelined schedule.
+
+    Builds the dependence DAG (RAW + WAW + WAR over env keys, in declared
+    order — predecessors always have smaller indices), levelizes it, and
+    returns ``(schedule, levels, frontier)``:
+
+    * ``schedule`` — the phases re-ordered by ``(level, blocking,
+      declared index)``: at each dependence level every independent
+      non-blocking phase is issued *before* the blocking Krylov solves,
+      so the overlappable work precedes the long latency it hides behind;
+    * ``levels`` — the per-phase dependence depth (declared order);
+    * ``frontier`` — for each blocking phase, the labels of phases with
+      **no transitive dependence either way**: the legal overlap set,
+      computed from the declarations alone (the testable artifact).
+    """
+    n = len(phases)
+    last_writer: dict[str, int] = {}
+    readers: dict[str, list[int]] = {}
+    preds: list[set[int]] = [set() for _ in range(n)]
+    for j, ph in enumerate(phases):
+        for k in ph.inputs:                       # RAW
+            if k in last_writer:
+                preds[j].add(last_writer[k])
+        for k in ph.outputs:
+            if k in last_writer:                  # WAW
+                preds[j].add(last_writer[k])
+            for r in readers.get(k, ()):          # WAR
+                if r != j:
+                    preds[j].add(r)
+        for k in ph.inputs:
+            readers.setdefault(k, []).append(j)
+        for k in ph.outputs:
+            last_writer[k] = j
+            readers[k] = []
+    levels: list[int] = []
+    for j in range(n):
+        levels.append(1 + max((levels[p] for p in preds[j]), default=0))
+    order = sorted(range(n),
+                   key=lambda j: (levels[j], phases[j].blocking, j))
+    anc: list[set[int]] = [set() for _ in range(n)]
+    for j in range(n):
+        for p in preds[j]:
+            anc[j] |= anc[p] | {p}
+    frontier = {
+        ph.label: tuple(phases[k].label for k in range(n)
+                        if k != j and k not in anc[j] and j not in anc[k])
+        for j, ph in enumerate(phases) if ph.blocking
+    }
+    return tuple(phases[j] for j in order), tuple(levels), frontier
+
+
+def _pipeline_step_fn(program: StepProgram) -> Callable:
+    """The pipelined form's pure ``(state, dt, *extras) -> (state, stats)``
+    single step: seed, prime the ring (degenerating to the serial
+    computation when nothing is carried in), run the scheduled phases,
+    finalize.  Ring *outputs* are dead for a lone step — XLA drops them."""
+    form = program.pipeline
+    schedule, _, _ = _pipeline_schedule(form.phases)
+    prime = form.prime
+
+    def step(state, dt, *extra):
+        env = program.seed(state, dt, *extra)
+        if prime is not None:
+            env.update(prime(env))
+        for ph in schedule:
+            _bind(env, ph, ph.fn(*(env[k] for k in ph.inputs)))
+        return program.finalize(env)
+
+    return step
+
+
+def _pipeline_rolled_fn(program: StepProgram, n_steps: int) -> Callable:
+    """The pipelined window: prologue (prime the ring from the seeded
+    env), ``lax.scan`` steady state carrying ``(state, ring)``, implicit
+    epilogue (the final ring values are dropped with the last carry).
+    One dispatch per window, state donated by the caller's jit —
+    identical contract to the fused roll."""
+    n = int(n_steps)
+    if n < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    form = program.pipeline
+    schedule, _, _ = _pipeline_schedule(form.phases)
+    ring_keys = form.ring
+    prime = form.prime
+
+    def rolled(state, dt, *extra):
+        env0 = program.seed(state, dt, *extra)
+        primed = prime(env0) if prime is not None else {}
+        ring0 = tuple(primed[k] for k in ring_keys)
+
+        def body(carry, _):
+            st, ring = carry
+            env = program.seed(st, dt, *extra)
+            env.update(zip(ring_keys, ring))
+            for ph in schedule:
+                _bind(env, ph, ph.fn(*(env[k] for k in ph.inputs)))
+            st2, stats = program.finalize(env)
+            return (st2, tuple(env[k] for k in ring_keys)), stats
+
+        (state, _), stats = jax.lax.scan(body, (state, ring0), None,
+                                         length=n)
+        return state, stats
+
+    return rolled
+
+
+def _require_pipeline(program: StepProgram) -> None:
+    if program.pipeline is None:
+        raise ValueError(
+            "program declares no PipelineForm (pipeline=None): steady "
+            "programs (SIMPLE) cannot software-pipeline — their "
+            "run_converged while-loop has an unknown trip count, so there "
+            "is no static window to carry the ring across")
+
+
+@dataclasses.dataclass(frozen=True)
 class StepProgram:
     """An ordered phase list + env seeding/finalization: one timestep.
 
@@ -255,10 +411,34 @@ class StepProgram:
     # it fires or an iteration cap is hit; ``None`` (transient programs —
     # PISO) means the program only rolls fixed windows.
     converged: Callable | None = None
+    # the program's software-pipelined alternative schedule; ``None``
+    # means the program only runs serially (PipelinedExecutor refuses)
+    pipeline: PipelineForm | None = None
 
     def __post_init__(self):
-        available = set(self.seed_keys)
-        for ph in self.phases:
+        self._validate_phases(self.phases, set(self.seed_keys))
+        if self.pipeline is not None:
+            form = self.pipeline
+            self._validate_phases(form.phases,
+                                  set(self.seed_keys) | set(form.ring))
+            produced = set()
+            for ph in form.phases:
+                produced.update(ph.outputs)
+            missing = [k for k in form.ring if k not in produced]
+            if missing:
+                raise ValueError(
+                    f"pipeline ring keys {missing} are not produced by any "
+                    f"pipeline phase — nothing to carry across the step "
+                    f"boundary")
+            if form.ring and form.prime is None:
+                raise ValueError(
+                    "a pipeline with ring-carried keys needs a prime() "
+                    "prologue to seed them for the first step")
+
+    @staticmethod
+    def _validate_phases(phases, available: set) -> None:
+        """Dataflow validation shared by the serial + pipelined lists."""
+        for ph in phases:
             if ph.tag not in PHASE_TAGS:
                 raise ValueError(
                     f"phase {ph.label}: unknown tag {ph.tag!r} "
@@ -371,6 +551,16 @@ class InstrumentedExecutor:
     share one jit trace (they share ``fn``); a phase's
     ``instrumented_fn`` override (the plan cache's pooled update) is used
     as-is, already composed of jitted pieces.
+
+    The instrumented walk always FORCES THE SERIAL SCHEDULE — even when
+    the program declares a :class:`PipelineForm` and the session advances
+    through the pipelined executor.  Per-phase ``block_until_ready`` walls
+    are meaningless when phases overlap (the wall of the blocking solve
+    would absorb the hidden assembly), so attribution is only defined on
+    the serial order; every emitted :class:`PhaseBreakdown` accordingly
+    carries ``overlapped=False`` and stays valid for calibrating the
+    serial cost model, on top of which the pipelined prediction is a
+    ``max()`` (:meth:`repro.core.cost_model.CostModel.T_step_pipelined`).
     """
 
     def __init__(self, program: StepProgram):
@@ -520,23 +710,185 @@ class BatchedExecutor:
         return states, stats, [PhaseBreakdown(**row) for row in rows]
 
 
+# ---------------------------------------------------------------------------
+# Executor 4: software-pipelined (the PipelineForm schedule, ring-carried
+# across the scan step boundary) + its cohort (vmapped) variant
+# ---------------------------------------------------------------------------
+
+class PipelinedExecutor:
+    """The program's :class:`PipelineForm` as one jitted XLA executable.
+
+    Same external contract as :class:`FusedExecutor` — ``dt`` traced,
+    state donated, ``run_steps`` rolls a window into ONE ``lax.scan``
+    dispatch with stacked ``StepStats`` — but the body runs the
+    *pipelined* schedule: phases re-ordered along the computed dependence
+    levels (independent work hoisted ahead of the blocking solves) and
+    ``ring``-carried values crossing the step boundary, so step t+1's
+    assembly consumes a value produced while step t was still solving
+    (the prologue primes the ring; the epilogue simply drops the last
+    carry).  ``schedule``/``levels``/``frontier`` expose the compiled
+    overlap structure for tests and docs.
+
+    ``run_converged`` refuses: a steady program's while-loop trip count
+    is unknown at trace time, so there is no static window to pipeline
+    across (those programs keep the serial executors).
+    """
+
+    def __init__(self, program: StepProgram):
+        _require_pipeline(program)
+        self.program = program
+        self.schedule, self.levels, self.frontier = _pipeline_schedule(
+            program.pipeline.phases)
+        self._fn = _pipeline_step_fn(program)
+        self._step = jax.jit(self._fn, donate_argnums=(0,))
+        self._rolled: dict[int, Callable] = {}
+        self.dispatches = 0
+
+    def step(self, state, dt, *extra):
+        """One timestep, one dispatch.  Donates ``state``."""
+        self.dispatches += 1
+        return self._step(state, dt, *extra)
+
+    def run_steps(self, state, dt, n_steps: int, *extra):
+        """``n_steps`` pipelined timesteps as ONE dispatch; stacked
+        ``StepStats``; donates ``state``; memoized per window length."""
+        n = int(n_steps)
+        roll = self._rolled.get(n)
+        if roll is None:
+            roll = self._rolled[n] = jax.jit(
+                _pipeline_rolled_fn(self.program, n), donate_argnums=(0,))
+        self.dispatches += 1
+        return roll(state, dt, *extra)
+
+    def run_converged(self, state, dt, max_iters: int, *extra):
+        raise ValueError(
+            "PipelinedExecutor cannot run_converged: the convergence "
+            "while-loop's trip count is unknown at trace time, so there is "
+            "no static window to software-pipeline across — use the fused "
+            "executor for steady outer iteration")
+
+    @property
+    def trace_count(self) -> int:
+        """Compilation-cache entries of the per-step stepper (dt-retrace
+        regression meter; -1 when jax hides the cache)."""
+        try:
+            return self._step._cache_size()
+        except Exception:  # noqa: BLE001 — jax-internal API
+            return -1
+
+    def lower_step(self, state, dt, *extra):
+        """Lowered+compiled per-step executable (donation/HLO inspection)."""
+        return self._step.lower(state, dt, *extra).compile()
+
+
+class BatchedPipelinedExecutor:
+    """The pipelined schedule vmapped over a leading session axis.
+
+    A cohort's window is ONE dispatch of the vmapped pipelined roll —
+    each lane carries its own ring (primed per lane inside the vmap), so
+    per-session numerics match the solo :class:`PipelinedExecutor`.
+    ``timed_step`` deliberately DELEGATES to a serial
+    :class:`BatchedExecutor` walk: per-phase walls are meaningless under
+    an overlapped schedule, so instrumented samples always measure the
+    serial form (and emit ``overlapped=False`` rows the controller may
+    calibrate from).
+    """
+
+    def __init__(self, program: StepProgram, batch: int):
+        _require_pipeline(program)
+        self.program = program
+        self.batch = batch
+        # the serial batched executor validates batch >= 1 and provides
+        # the cohort shape check + the serial instrumented walk
+        self._serial = BatchedExecutor(program, batch)
+        self._vfn = jax.vmap(_pipeline_step_fn(program), in_axes=0)
+        self._step = jax.jit(self._vfn, donate_argnums=(0,))
+        self._rolled: dict[int, Callable] = {}
+        self.dispatches = 0
+        self.samples = 0
+
+    def step(self, states, dts, *extras):
+        """One pipelined cohort timestep, one dispatch.  Donates
+        ``states``; ``dts`` is the per-session ``(batch,)`` vector."""
+        self._serial._check(states, dts, extras)
+        self.dispatches += 1
+        return self._step(states, dts, *extras)
+
+    def run_steps(self, states, dts, n_steps: int, *extras):
+        """``n_steps`` pipelined cohort timesteps as ONE dispatch;
+        ``StepStats`` leaves carry leading ``(n_steps, batch)`` axes;
+        donates ``states``; memoized per window length."""
+        self._serial._check(states, dts, extras)
+        n = int(n_steps)
+        roll = self._rolled.get(n)
+        if roll is None:
+            vroll = jax.vmap(_pipeline_rolled_fn(self.program, n), in_axes=0)
+
+            def rolled(states, dts, *extras):
+                out, stats = vroll(states, dts, *extras)
+                # the scan runs inside the vmap, so stats leaves come out
+                # (batch, n_steps, ...); swap to the serial cohort
+                # convention (n_steps, batch, ...) the engine indexes by
+                stats = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), stats)
+                return out, stats
+
+            roll = self._rolled[n] = jax.jit(rolled, donate_argnums=(0,))
+        self.dispatches += 1
+        return roll(states, dts, *extras)
+
+    def run_converged(self, states, dts, max_iters: int, *extras):
+        raise ValueError(
+            "BatchedPipelinedExecutor cannot run_converged — see "
+            "PipelinedExecutor.run_converged")
+
+    def timed_step(self, states, dts, *extras):
+        """One instrumented cohort step — on the SERIAL schedule (the
+        pipelined walls overlap and cannot be attributed per phase).
+        Returns ``(states, stats, rows)`` with ``overlapped=False`` rows.
+        Does NOT donate ``states``."""
+        self.samples += 1
+        return self._serial.timed_step(states, dts, *extras)
+
+
 class ProgramExecutors:
     """The compiled artifacts of one program binding (memoized per
-    ``(alpha, solve_mode, solver_backend)`` by ``PisoSolver``).  Batched
-    executors are additionally memoized per cohort size — each cohort
-    shape is its own set of XLA programs and its own dispatch counter."""
+    ``(alpha, solve_mode, solver_backend, pipelined)`` by ``PisoSolver``).
+    Batched executors are additionally memoized per cohort size — each
+    cohort shape is its own set of XLA programs and its own dispatch
+    counter.  The pipelined executors are built lazily: a program without
+    a :class:`PipelineForm` (SIMPLE) raises only if someone actually asks
+    for them."""
 
     def __init__(self, program: StepProgram):
         self.program = program
         self.fused = FusedExecutor(program)
         self.instrumented = InstrumentedExecutor(program)
         self._batched: dict[int, BatchedExecutor] = {}
+        self._pipelined: PipelinedExecutor | None = None
+        self._batched_pipelined: dict[int, BatchedPipelinedExecutor] = {}
 
     def batched(self, batch: int) -> BatchedExecutor:
         """The cohort executor for ``batch`` stacked sessions (memoized)."""
         exe = self._batched.get(batch)
         if exe is None:
             exe = self._batched[batch] = BatchedExecutor(self.program, batch)
+        return exe
+
+    @property
+    def pipelined(self) -> PipelinedExecutor:
+        """The software-pipelined executor (lazy; raises for programs
+        without a :class:`PipelineForm`)."""
+        if self._pipelined is None:
+            self._pipelined = PipelinedExecutor(self.program)
+        return self._pipelined
+
+    def batched_pipelined(self, batch: int) -> BatchedPipelinedExecutor:
+        """The pipelined cohort executor for ``batch`` sessions (memoized,
+        lazy like :attr:`pipelined`)."""
+        exe = self._batched_pipelined.get(batch)
+        if exe is None:
+            exe = self._batched_pipelined[batch] = BatchedPipelinedExecutor(
+                self.program, batch)
         return exe
 
 
@@ -593,6 +945,12 @@ class ProgramSpec:
     build: Callable
     transient: bool = True
     description: str = ""
+    # whether the built program declares a PipelineForm: the STATIC half
+    # of the solver's pipeline=auto|on|off resolution (known before the
+    # program is built, so it can key the executor memoization).  A
+    # steady-state program must leave this False — run_converged cannot
+    # software-pipeline across an unknown trip count.
+    pipelined: bool = False
 
 
 PROGRAMS: dict[str, ProgramSpec] = {}
@@ -680,6 +1038,14 @@ class PhaseToolkit:
     halo_probe: Callable
     update_mom_inst: Callable | None
     update_p_inst: Callable | None
+    # the pipelined form's factored phases: momentum assembly consuming a
+    # ring-carried grad(p); the corrector-invariant pressure-matrix half;
+    # the per-corrector source-only half; the standalone gradient (ring
+    # producer / prologue prime)
+    assemble_mom_g: Callable | None = None
+    assemble_p_mat: Callable | None = None
+    assemble_p_src: Callable | None = None
+    grad_p: Callable | None = None
 
 
 def _phase_toolkit(solver) -> PhaseToolkit:
@@ -754,6 +1120,34 @@ def _phase_toolkit(solver) -> PhaseToolkit:
     def halo_probe(p):
         return x_pad(p.reshape(n_c, -1), plan_p.plane)
 
+    # -- the pipelined form's factored phases ------------------------------
+    def assemble_mom_g(U, phi, phi_if, phi_b, gradp, dt, *masks):
+        # the ring-carried grad(p) replaces the in-phase gradient — the
+        # dataflow edge from step t's last corrector into step t+1
+        return _asm_of(*masks).assemble_momentum(U, phi, phi_if, None, dt,
+                                                 phi_b=phi_b, gradp=gradp)
+
+    def assemble_p_mat(sysM, *masks):
+        # corrector-invariant: every pressure-matrix coefficient depends
+        # only on rAU = V / diag(momentum) — build it once per step, next
+        # to the momentum solve it is independent of
+        a = _asm_of(*masks)
+        rAU = a.V / sysM.diag
+        return rAU, a.assemble_pressure_matrix(rAU)
+
+    def assemble_p_src(sysM, sysP_mat, rAU, U, *masks):
+        # per-corrector: only the divergence source changes with U
+        a = _asm_of(*masks)
+        HbyA = (sysM.source - _offdiag3(a, sysM, U)) / sysM.diag[..., None]
+        phiH, phiH_if = a.face_flux(HbyA)
+        phiH_b = a.boundary_flux(HbyA)
+        sysP = dataclasses.replace(
+            sysP_mat, source=-a.divergence(phiH, phiH_if, phiH_b))
+        return HbyA, phiH, phiH_if, phiH_b, sysP
+
+    def grad_p(p, *masks):
+        return _asm_of(*masks).grad(p)
+
     # -- plan-cache hook: pooled compiled updates (instrumented path only) -
     update_mom_inst = update_p_inst = None
     if solver.plan_cache is not None:
@@ -785,7 +1179,9 @@ def _phase_toolkit(solver) -> PhaseToolkit:
         assemble_mom=assemble_mom, update_mom=update_mom,
         solve_mom=solve_mom, assemble_p=assemble_p, update_p=update_p,
         solve_p=solve_p, halo_probe=halo_probe,
-        update_mom_inst=update_mom_inst, update_p_inst=update_p_inst)
+        update_mom_inst=update_mom_inst, update_p_inst=update_p_inst,
+        assemble_mom_g=assemble_mom_g, assemble_p_mat=assemble_p_mat,
+        assemble_p_src=assemble_p_src, grad_p=grad_p)
 
 
 # ---------------------------------------------------------------------------
@@ -901,15 +1297,73 @@ def build_piso_program(solver) -> StepProgram:
             converged=converged, diverged=diverged, hit_cap=hit_cap)
         return state, stats
 
+    # ---- the pipelined form ------------------------------------------------
+    # The same step, factored so the dependence DAG exposes overlap:
+    #  * assemble_mom consumes a RING-CARRIED grad(p) (produced by the
+    #    trailing grad_p phase of the PREVIOUS scan iteration — XLA cannot
+    #    CSE across scan steps, so the serial form pays that gradient twice
+    #    per step boundary; grad_p itself CSEs with correct[last]'s
+    #    internal gradient, so the pipelined body pays it once);
+    #  * the pressure matrix (and its Jacobi bands via update_p) is built
+    #    ONCE per step from rAU only — scheduled next to the momentum
+    #    solve, which it does not depend on (the overlap frontier);
+    #  * each corrector then re-assembles only the divergence source.
+    pipe_phases = [
+        Phase("assemble_mom", "assembly",
+              ("U", "phi", "phi_if", "phi_b", "gradp", "dt") + mask_keys,
+              ("sysM",), tk.assemble_mom_g),
+        Phase("update_mom", "assembly", ("sysM",), ("bandsM",),
+              tk.update_mom, instrumented_fn=tk.update_mom_inst),
+        Phase("solve_mom", "assembly", ("bandsM", "sysM", "U"),
+              ("U", "mom_iters", "mom_ok", "mom_cap"), tk.solve_mom,
+              blocking=True),
+        Phase("assemble_p_mat", "assembly", ("sysM",) + mask_keys,
+              ("rAU", "sysP_mat"), tk.assemble_p_mat),
+        Phase("update_p", "update", ("sysP_mat",), ("bandsP",),
+              tk.update_p, instrumented_fn=tk.update_p_inst),
+    ]
+    for i in range(n_corr):
+        pipe_phases += [
+            Phase("assemble_p", "assembly",
+                  ("sysM", "sysP_mat", "rAU", "U") + mask_keys,
+                  ("HbyA", "phiH", "phiH_if", "phiH_b", "sysP"),
+                  tk.assemble_p_src, corrector=i),
+            Phase("solve_p", "solve", ("bandsP", "sysP", "p"),
+                  ("p", f"p_iters_{i}", "p_res", f"p_ok_{i}", f"p_cap_{i}"),
+                  tk.solve_p, corrector=i, blocking=True,
+                  probe=tk.halo_probe, probe_inputs=("p",),
+                  probe_iters=f"p_iters_{i}"),
+            Phase("correct", "assembly",
+                  ("sysP", "phiH", "phiH_if", "phiH_b", "p", "HbyA", "rAU")
+                  + mask_keys,
+                  ("phi", "phi_if", "phi_b", "U", "cont"), correct,
+                  corrector=i),
+        ]
+    pipe_phases.append(
+        Phase("grad_p", "assembly", ("p",) + mask_keys, ("gradp",),
+              tk.grad_p))
+
+    def prime(env):
+        # pipeline prologue: the first step's gradient from the seeded p,
+        # inside the jitted window (no extra dispatch)
+        masks = tuple(env[k] for k in mask_keys)
+        return {"gradp": tk.grad_p(env["p"], *masks)}
+
+    pipeline = PipelineForm(phases=tuple(pipe_phases), ring=("gradp",),
+                            prime=prime)
+
     return StepProgram(phases=tuple(phases), seed=seed, finalize=finalize,
-                       seed_keys=seed_keys, extra_keys=extra_keys)
+                       seed_keys=seed_keys, extra_keys=extra_keys,
+                       pipeline=pipeline)
 
 
 register_program(ProgramSpec(
     name="piso",
     build=build_piso_program,
     transient=True,
+    pipelined=True,
     description=("transient PISO: momentum predictor + n_correctors "
                  "pressure corrections per timestep (the paper's fig. 5/7 "
-                 "decomposition)"),
+                 "decomposition), with a software-pipelined form "
+                 "(ring-carried grad(p), hoisted pressure matrix)"),
 ))

@@ -67,6 +67,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "dots Pallas kernels; reference = the plain jnp op "
                          "sequence; auto picks fused once a part fills a "
                          "kernel row block")
+    ap.add_argument("--pipeline", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="software-pipelined stepping (PipelinedExecutor): "
+                         "auto pipelines whenever the program declares a "
+                         "pipeline form (piso does; steady programs fall "
+                         "back to serial), on demands it (error on steady "
+                         "programs), off forces the serial fused stepper")
+    ap.add_argument("--xla-tuning", action="store_true",
+                    help="apply repro.env.configure_platform()'s XLA "
+                         "latency-hiding/async-stream flags before backend "
+                         "init (lets the GPU runtime overlap the pipelined "
+                         "program's independent assembly and solve ops)")
     ap.add_argument("--adaptive", action="store_true",
                     help="feedback-driven alpha (overrides --alpha; "
                          "transient programs only)")
@@ -91,7 +103,8 @@ def run_steady(args, mesh, alpha, nu) -> None:
     solver = make_solver(args.program, mesh, alpha=alpha, nu=nu,
                          case=args.case, update_schedule=args.schedule,
                          solve_mode=args.solve_mode,
-                         solver_backend=args.solver_backend)
+                         solver_backend=args.solver_backend,
+                         pipeline=args.pipeline)
     dt = args.co * mesh.h  # ignored by steady assembly; kept for the ABI
     cap = args.max_outer or None
     t0 = time.time()
@@ -116,9 +129,14 @@ def run_steady(args, mesh, alpha, nu) -> None:
 
 def run_transient(args, mesh, alpha, nu, cm) -> None:
     """Transient program: scan-rolled timestepping, optionally adaptive."""
-    from repro.fvm.step_program import roll_schedule
+    from repro.fvm.step_program import get_program, roll_schedule
 
     dt = args.co * mesh.h  # u_ref 1 -> dt = Co*h
+    # resolve the pipeline knob once, the same way the solver will: the
+    # controller/cost-model alpha picks then score the overlap objective
+    pipelined = (args.pipeline == "on"
+                 or (args.pipeline == "auto"
+                     and get_program(args.program).pipelined))
 
     if args.adaptive:
         cache = PlanCache()
@@ -129,14 +147,17 @@ def run_transient(args, mesh, alpha, nu, cm) -> None:
                                     alpha0=alpha, config=cfg, cache=cache,
                                     fixed_fine=True,
                                     solve_mode=args.solve_mode,
-                                    solver_backend=args.solver_backend)
+                                    solver_backend=args.solver_backend,
+                                    pipelined=pipelined)
         solver = make_solver(args.program, mesh, alpha=ctl.alpha, nu=nu,
                              case=args.case, update_schedule=args.schedule,
                              plan_cache=cache, solve_mode=args.solve_mode,
-                             solver_backend=args.solver_backend)
+                             solver_backend=args.solver_backend,
+                             pipeline=args.pipeline)
         print(f"controller start: alpha={ctl.alpha} "
               f"solve_mode={args.solve_mode} "
               f"solver_backend={args.solver_backend} "
+              f"pipeline={args.pipeline} (resolved {solver.pipelined}) "
               f"sample_every={cfg.sample_every}")
         state = solver.initial_state()
         t0 = time.time()
@@ -177,12 +198,15 @@ def run_transient(args, mesh, alpha, nu, cm) -> None:
         return
 
     if alpha is None:
-        alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1)
-        print(f"cost model picked alpha={alpha}")
+        alpha = cm.optimal_alpha(n_cpu=args.parts, n_gpu=1,
+                                 pipelined=pipelined)
+        print(f"cost model picked alpha={alpha}"
+              + (" (overlap objective)" if pipelined else ""))
     solver = make_solver(args.program, mesh, alpha=alpha, nu=nu,
                          case=args.case, update_schedule=args.schedule,
                          solve_mode=args.solve_mode,
-                         solver_backend=args.solver_backend)
+                         solver_backend=args.solver_backend,
+                         pipeline=args.pipeline)
     state = solver.initial_state()
     t0 = time.time()
     scan = max(args.scan_steps, 1)
@@ -200,12 +224,19 @@ def run_transient(args, mesh, alpha, nu, cm) -> None:
           f"({mesh.n_cells_global} cells, alpha={alpha}, "
           f"solve_mode={args.solve_mode}, "
           f"solver_backend={args.solver_backend}, "
+          f"pipeline={args.pipeline} (resolved {solver.pipelined}), "
           f"scan_steps={scan})")
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
 
+    if args.xla_tuning:
+        # must precede backend init (importing jax above is fine — XLA
+        # reads the env on first backend *use*, not on import)
+        from repro.env import configure_platform
+
+        configure_platform()
     jax.config.update("jax_enable_x64", True)
     # resolve "auto" at the fine part size — the smallest solve part any
     # alpha produces, so the cost model's fused bytes/iter prior flips

@@ -91,6 +91,7 @@ def serve_cfd_arrivals(args) -> dict:
             open_kwargs={"adaptive": args.adaptive,
                          "alpha0": args.alpha or None, "nu": args.nu,
                          "solver_backend": args.solver_backend,
+                         "pipeline": args.pipeline,
                          "program": programs[int(rng.integers(len(programs)))],
                          "case": cases[int(rng.integers(len(cases)))]}))
     t0 = time.time()
@@ -161,7 +162,8 @@ def serve_cfd_supervised(args) -> None:
             eng.open_session(f"tenant{i}", mesh, dt=base_dt * (1 + 0.1 * i),
                              alpha0=args.alpha or None, nu=args.nu,
                              adaptive=args.adaptive,
-                             solver_backend=args.solver_backend)
+                             solver_backend=args.solver_backend,
+                             pipeline=args.pipeline)
         print(f"opened {args.sessions} supervised sessions, cohorts="
               f"{[len(g) for g in eng.cohorts().values()]}")
 
@@ -240,7 +242,8 @@ def serve_cfd(args) -> None:
         eng.open_session(f"tenant{i}", mesh, dt=base_dt * (1 + 0.1 * i),
                          alpha0=args.alpha or None, nu=args.nu,
                          adaptive=args.adaptive,
-                         solver_backend=args.solver_backend)
+                         solver_backend=args.solver_backend,
+                         pipeline=args.pipeline)
     print(f"opened {args.sessions} sessions, cohorts="
           f"{[len(g) for g in eng.cohorts().values()]}")
 
@@ -289,6 +292,15 @@ def main():
                     help="rolled window cap (steps per cohort dispatch)")
     ap.add_argument("--solver-backend", default="auto",
                     choices=["auto", "fused", "reference"])
+    ap.add_argument("--pipeline", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="software-pipelined rolled windows per tenant "
+                         "(auto: pipeline whenever the tenant's program "
+                         "declares a pipeline form; off: serial fused)")
+    ap.add_argument("--xla-tuning", action="store_true",
+                    help="apply repro.env.configure_platform()'s XLA "
+                         "latency-hiding/async-stream flags before "
+                         "backend init")
     # -- open-loop arrivals (continuous-batching scheduler) ----------------
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate (sessions/s of virtual "
@@ -335,6 +347,13 @@ def main():
                     help="restore the engine from --snapshot-dir and "
                          "continue to --steps total steps per session")
     args = ap.parse_args()
+
+    if args.xla_tuning:
+        # must precede backend init (importing jax above is fine — XLA
+        # reads the env on first backend *use*, not on import)
+        from repro.env import configure_platform
+
+        configure_platform()
 
     if args.sessions > 0 or args.resume:
         if (args.supervise or args.resume or args.chaos is not None

@@ -186,6 +186,12 @@ class SimulationEngine:
         self.counters = {"solo_dispatches": 0, "cohort_dispatches": 0,
                          "sample_steps": 0, "rolled_windows": 0,
                          "scheduling_rounds": 0}
+        # per-executor-path breakdown of the rolled-window launches above:
+        # which stepping executor served each dispatch (solo vs cohort,
+        # serial fused vs software-pipelined).  Sample steps always run
+        # the serial instrumented schedule, so they are not split here.
+        self.dispatch_paths = {"solo": 0, "cohort": 0,
+                               "pipelined_solo": 0, "pipelined_cohort": 0}
 
     def open_session(self, sid: str, mesh, *, dt: float,
                      alpha0: int | None = None, nu: float = 0.01,
@@ -197,7 +203,8 @@ class SimulationEngine:
                      priority: str = "bulk",
                      deadline_ms: float | None = None,
                      program: str = "piso",
-                     case: str = "cavity") -> SimulationSession:
+                     case: str = "cavity",
+                     pipeline: str = "auto") -> SimulationSession:
         """Admit a simulation; its controller starts from the cost model's
         static pick (``alpha0=None``) exactly like the non-adaptive launcher,
         then departs from it as measurements arrive.  ``solve_mode``
@@ -222,10 +229,19 @@ class SimulationEngine:
         timestep program and flow-case BC set; both are cohort-key
         components, so heterogeneous tenants never co-batch across a
         program or case boundary.
+
+        ``pipeline`` ("auto" | "on" | "off") selects the software-
+        pipelined stepper for this tenant's rolled windows
+        (:class:`~repro.fvm.step_program.PipelinedExecutor`); "auto"
+        resolves per program (PISO pipelines, steady programs fall back
+        to serial).  The resolved boolean is a cohort-key component and
+        is handed to the session's controller so alpha selection scores
+        the overlap objective instead of the serial sum.
         """
         from repro.core.repartition import mesh_fingerprint
         from repro.fvm.mesh import PaddedCavityMesh
         from repro.fvm.piso import make_solver
+        from repro.fvm.step_program import get_program
 
         if sid in self.sessions:
             raise ValueError(f"session {sid!r} already open")
@@ -238,14 +254,25 @@ class SimulationEngine:
         model = model or CostModel(TPU_V5E, n_dofs=n_dofs)
         # fixed_fine feasibility already restricts alphas to divisors of
         # n_cpu = mesh.n_parts, i.e. to plans realizable on the mesh
+        # resolve the pipeline knob against the program spec up front so
+        # the controller's *initial* alpha pick already scores the overlap
+        # objective (the solver re-resolves and validates the same knob)
+        if pipeline not in ("auto", "on", "off"):
+            raise ValueError(f"unknown pipeline mode {pipeline!r} "
+                             "(choose auto|on|off)")
+        pipelined = (pipeline == "on"
+                     or (pipeline == "auto"
+                         and get_program(program).pipelined))
         controller = RepartitionController(
             model, n_cpu=mesh.n_parts, n_gpu=1, alpha0=alpha0,
             config=self.config, cache=self.plan_cache, fixed_fine=True,
-            solve_mode=solve_mode, solver_backend=solver_backend)
+            solve_mode=solve_mode, solver_backend=solver_backend,
+            pipelined=pipelined)
         solver = make_solver(program, mesh, alpha=controller.alpha, nu=nu,
                              case=case, plan_cache=self.plan_cache,
                              solve_mode=solve_mode,
-                             solver_backend=solver_backend)
+                             solver_backend=solver_backend,
+                             pipeline=pipeline)
         sess = SimulationSession(sid=sid, solver=solver,
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
@@ -324,6 +351,10 @@ class SimulationEngine:
             stats = jax.tree.map(lambda a: a[-1], window)
             self.counters["solo_dispatches"] += 1
             self.counters["rolled_windows"] += 1
+            self.dispatch_paths[
+                "pipelined_solo"
+                if getattr(sess.solver, "pipelined", False)
+                else "solo"] += 1
         if self.track_latency:
             jax.block_until_ready(sess.state)
             per_step = (self._clock() - t0) / chunk
@@ -358,7 +389,11 @@ class SimulationEngine:
         ``(program_name, case)`` are key components too: a PISO and a
         SIMPLE tenant compile different phase lists, and two cases bind
         different BC masks/boundary sources into the assembly closures —
-        mixed-program or mixed-case tenants are never co-batched.
+        mixed-program or mixed-case tenants are never co-batched.  The
+        resolved ``pipelined`` flag likewise: a software-pipelined and a
+        serial tenant compile different rolled bodies (ring-carried
+        schedule vs phase-ordered scan), so they dispatch separately even
+        when everything else matches.
         """
         s = sess.solver
         phase = (sess.steps_done % self.config.sample_every
@@ -382,7 +417,8 @@ class SimulationEngine:
                 s.nu, str(s.dtype), sess.adaptive, phase, tols,
                 getattr(s, "padded", False),
                 getattr(s, "program_name", "piso"),
-                getattr(s, "case", "cavity"), quarantine)
+                getattr(s, "case", "cavity"),
+                getattr(s, "pipelined", False), quarantine)
 
     def step_all(self, n_steps: int = 1, sids=None) -> dict:
         """Advance every open session (or ``sids``) by ``n_steps`` through
@@ -533,6 +569,10 @@ class SimulationEngine:
             states, window = exe.run_steps(states, dts, chunk, *extras)
             self.counters["cohort_dispatches"] += 1
             self.counters["rolled_windows"] += 1
+            self.dispatch_paths[
+                "pipelined_cohort"
+                if getattr(lead.solver, "pipelined", False)
+                else "cohort"] += 1
             rows = None
             per_stats = [jax.tree.map(lambda a, i=i: a[-1, i], window)
                          for i in range(n)]
@@ -662,6 +702,7 @@ class SimulationEngine:
                 "alpha": sess.solver.alpha,
                 "solve_mode": sess.solver.solve_mode,
                 "solver_backend": sess.solver.solver_backend,
+                "pipeline": getattr(sess.solver, "pipeline", "auto"),
                 "latency_samples": list(sess.latency_samples),
                 "controller": {
                     "alpha": c.alpha,
@@ -689,6 +730,7 @@ class SimulationEngine:
                     else dataclasses.asdict(self.supervisor_config)),
                 "config": dataclasses.asdict(self.config),
                 "counters": dict(self.counters),
+                "dispatch_paths": dict(self.dispatch_paths),
             },
             "failed": self.failed,
             "scheduler": (None if scheduler is None
@@ -742,6 +784,9 @@ class SimulationEngine:
                   track_latency=e["track_latency"], clock=clock,
                   supervise=e["supervise"], supervisor_config=sup_cfg)
         eng.counters.update({k: int(v) for k, v in e["counters"].items()})
+        # manifests written before the pipelined path carry no breakdown
+        eng.dispatch_paths.update(
+            {k: int(v) for k, v in e.get("dispatch_paths", {}).items()})
         eng.failed = dict(manifest["failed"])
         for m in manifest["sessions"]:
             md = m["mesh"]
@@ -762,7 +807,8 @@ class SimulationEngine:
                 solve_mode=m["solve_mode"],
                 solver_backend=m["solver_backend"],
                 priority=m["priority"], deadline_ms=m["deadline_ms"],
-                program=m["program"], case=m["case"])
+                program=m["program"], case=m["case"],
+                pipeline=m.get("pipeline", "auto"))
             sess.state = PisoState(*[jnp.asarray(arrs[f"{sid}|state|{f}"])
                                      for f in PisoState._fields])
             sess.steps_done = int(m["steps_done"])
@@ -808,6 +854,8 @@ class SimulationEngine:
         per-config counts instead of a running total)."""
         for k in self.counters:
             self.counters[k] = 0
+        for k in self.dispatch_paths:
+            self.dispatch_paths[k] = 0
         for sess in self.sessions.values():
             sess.latency_samples.clear()
         reset = getattr(self.plan_cache, "reset_stats", None)
@@ -846,12 +894,14 @@ class SimulationEngine:
                       "priority": s.priority,
                       "program": getattr(s.solver, "program_name", "piso"),
                       "case": getattr(s.solver, "case", "cavity"),
+                      "pipelined": getattr(s.solver, "pipelined", False),
                       "health": (None if s.supervisor is None
                                  else s.supervisor.state)}
                 for sid, s in self.sessions.items()
             },
             "cohorts": [len(g) for g in self.cohorts().values()],
             "counters": dict(self.counters),
+            "dispatch_paths": dict(self.dispatch_paths),
             "failed": sorted(self.failed),
             "plan_cache": self.plan_cache.stats(),
             "latency": self.latency_stats(),

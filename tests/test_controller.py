@@ -318,3 +318,45 @@ def test_piso_timed_step_matches_fused_step():
                                atol=1e-12)
     assert sample.total > 0.0
     assert min(sample.assembly, sample.update, sample.solve) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# pipelined sessions (overlap objective + calibration provenance)
+# ---------------------------------------------------------------------------
+
+def test_overlapped_samples_never_calibrate():
+    """A PhaseBreakdown with overlapped=True is recorded in the history
+    but must NOT feed the serial per-phase calibration."""
+    ctl, truth = make_controller()
+    clean = measured(truth, ctl.alpha)
+    ctl.observe(clean)
+    n_before = ctl.calibration.n_obs
+    scales = ctl.calibration.scales
+    import dataclasses as dc
+
+    ctl.observe(dc.replace(clean, assembly=clean.assembly * 100,
+                           overlapped=True))
+    assert ctl.calibration.n_obs == n_before
+    assert ctl.calibration.scales == scales
+    assert len(ctl.history) == 2
+
+
+def test_pipelined_controller_scores_overlap_objective():
+    """pipelined=True switches predicted_total to max(assembly,
+    solve+halo) + update, and the initial alpha pick already uses it."""
+    base = CostModel(HOREKA_A100, n_dofs=2e4)
+    cfg = ControllerConfig(alphas=ALPHAS)
+    serial = RepartitionController(base, n_cpu=N_CPU, n_gpu=N_GPU,
+                                   config=cfg)
+    piped = RepartitionController(base, n_cpu=N_CPU, n_gpu=N_GPU,
+                                  config=cfg, pipelined=True)
+    for a in ALPHAS:
+        ph = piped.predicted_phases(a)
+        assert piped.predicted_total(a) == pytest.approx(
+            max(ph.assembly, ph.solve + ph.halo) + ph.update)
+        assert serial.predicted_total(a) == pytest.approx(ph.total)
+        assert piped.predicted_total(a) <= serial.predicted_total(a) + 1e-12
+    assert piped.stats()["pipelined"] is True
+    assert serial.stats()["pipelined"] is False
+    # the overlap argmin never recruits MORE assembly ranks than serial
+    assert piped.alpha <= serial.alpha

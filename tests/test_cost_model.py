@@ -86,3 +86,48 @@ def test_dispatch_overhead_amortized_by_scan_roll():
     assert cm.T_step(64, 4, steps_per_dispatch=8) < cm.T_step(64, 4)
     assert ph.total == pytest.approx(
         cm.T_repartitioned(64, 4), rel=0.5)  # same family, no dispatch term
+
+
+def test_pipelined_step_hides_the_shorter_phase():
+    """T_pipelined = max(assembly, solve) + repartition-update: overlap
+    hides the shorter of the two walls, so it is never worse than the
+    serial sum and exactly the serial sum minus min(assembly, solve)."""
+    cm = model()
+    for n_as, n_ls in ((16, 4), (64, 4), (8, 8)):
+        serial = cm.T_repartitioned(n_as, n_ls)
+        piped = cm.T_pipelined(n_as, n_ls)
+        t_a, t_s = cm.t_assembly(n_as), cm.t_solver(n_ls)
+        assert piped == pytest.approx(serial - min(t_a, t_s))
+        assert piped <= serial
+        # the dispatch-bearing step variant amortizes like the serial one
+        assert cm.T_step_pipelined(n_as, n_ls) == pytest.approx(
+            piped + cm.dispatch_latency)
+        assert cm.T_step_pipelined(n_as, n_ls, steps_per_dispatch=8) < \
+            cm.T_step_pipelined(n_as, n_ls)
+
+
+def test_optimal_alpha_shifts_under_overlap():
+    """Once assembly hides behind the solve, pushing alpha further only
+    buys update latency: the overlap argmin must never exceed the serial
+    argmin, and the pipelined objective at its own argmin beats the
+    serial objective at the serial argmin."""
+    cm = model()
+    a_serial = cm.optimal_alpha(n_cpu=128, n_gpu=4)
+    a_piped = cm.optimal_alpha(n_cpu=128, n_gpu=4, pipelined=True)
+    assert a_piped <= a_serial
+    assert cm.T_pipelined(4 * a_piped, 4) <= \
+        cm.T_repartitioned(4 * a_serial, 4)
+
+
+def test_phase_breakdown_overlapped_provenance():
+    """overlapped defaults False (serial provenance), is carried by the
+    dataclass, and never changes the time fields' total."""
+    from repro.core.cost_model import PhaseBreakdown
+
+    ph = PhaseBreakdown(1.0, 2.0, 3.0, 4.0)
+    assert ph.overlapped is False
+    po = PhaseBreakdown(1.0, 2.0, 3.0, 4.0, overlapped=True)
+    assert po.overlapped is True
+    assert po.total == ph.total == pytest.approx(10.0)
+    assert PhaseBreakdown.TIME_FIELDS == ("assembly", "update", "halo",
+                                          "solve")

@@ -136,7 +136,7 @@ def test_rebind_alpha_rebuilds_the_program():
     s = PisoSolver(mesh, alpha=4)
     exe4 = s._exec
     st, _ = s.step(s.initial_state(), 1e-4)
-    assert exe4.fused.trace_count == 1  # strict: -1 sentinel must fail
+    assert s._stepper.trace_count == 1  # strict: -1 sentinel must fail
 
     s.rebind_alpha(2)
     exe2 = s._exec

@@ -98,11 +98,11 @@ def test_engine_samples_instrumented_every_kth_step():
     # steps 0, 3, 6 sampled -> 3 instrumented walks, 3 controller samples;
     # the stretches 1-2 and 4-5 each rolled into ONE fused dispatch
     inst = sess.solver._exec.instrumented
-    fused = sess.solver._exec.fused
+    stepper = sess.solver._stepper  # pipelined under the default auto mode
     assert inst.calls == 3
     assert sess.controller.calibration.n_obs == 3
-    assert fused.dispatches == 2
-    assert sorted(fused._rolled) == [2]  # both stretches share one window
+    assert stepper.dispatches == 2
+    assert sorted(stepper._rolled) == [2]  # both stretches share one window
 
     # the cadence is anchored to steps_done across calls: next step (7)
     # is not a sample point, 8 is rolled too, 9 is
@@ -135,7 +135,7 @@ def test_engine_non_adaptive_rolls_whole_request():
                             adaptive=False)
     eng.step_session("b", n_steps=5)
     assert sess.solver._exec.instrumented.calls == 0
-    assert sess.solver._exec.fused.dispatches == 1  # one rolled window of 5
+    assert sess.solver._stepper.dispatches == 1  # one rolled window of 5
     assert sess.steps_done == 5
 
 
@@ -206,9 +206,10 @@ def test_step_all_one_dispatch_per_cohort_window():
     assert eng.counters["solo_dispatches"] == 0
     assert eng.counters["sample_steps"] == 0
     # the batched executor itself agrees, and is memoized per cohort shape
+    # (the pipelined cohort dict: PISO defaults to pipeline="auto")
     lead = eng.sessions["s0"].solver
-    assert lead._exec._batched[4].dispatches == 1
-    assert lead.batched_executor(4) is lead._exec._batched[4]
+    assert lead._exec._batched_pipelined[4].dispatches == 1
+    assert lead.batched_executor(4) is lead._exec._batched_pipelined[4]
 
 
 def test_step_all_cohort_keying_and_migration():
@@ -391,8 +392,9 @@ def test_lane_classes_pad_batch_to_pow2():
 
     lc, exact = build(True), build(False)
     lead = lc.sessions["s0"].solver
-    assert list(lead._exec._batched) == [4]      # pow2 lanes, not 3
-    assert list(exact.sessions["s0"].solver._exec._batched) == [3]
+    # the pipelined cohort dict: PISO defaults to pipeline="auto"
+    assert list(lead._exec._batched_pipelined) == [4]  # pow2 lanes, not 3
+    assert list(exact.sessions["s0"].solver._exec._batched_pipelined) == [3]
     for sid in ("s0", "s1", "s2"):
         np.testing.assert_allclose(
             np.asarray(lc.sessions[sid].state.U),
@@ -403,13 +405,13 @@ def test_lane_classes_pad_batch_to_pow2():
     # already-compiled 4-lane executor (no per-occupancy recompiles)
     lc.close_session("s2")
     lc.step_all(4)
-    assert sorted(lead._exec._batched) == [2, 4]
-    four = lead._exec._batched[4]
+    assert sorted(lead._exec._batched_pipelined) == [2, 4]
+    four = lead._exec._batched_pipelined[4]
     disp = four.dispatches
     lc.open_session("s3", _slab_mesh(3), dt=1e-3, alpha0=1,
                     adaptive=False, pad_to_class=4)
     lc.step_all(4, sids=["s0", "s1", "s3"])
-    assert sorted(lead._exec._batched) == [2, 4]   # no new shape
+    assert sorted(lead._exec._batched_pipelined) == [2, 4]  # no new shape
     assert four.dispatches > disp                  # same executor reused
 
 
@@ -578,3 +580,93 @@ def test_supervised_session_recovers_and_rejoins_cohort():
     assert s1.supervisor.dt_scale == 1.0
     assert [len(g) for g in eng.cohorts().values()] == [4]
     assert any(e.kind == "restore" for e in s1.supervisor.events)
+
+
+# ---------------------------------------------------------------------------
+# pipelined serving: per-executor-path dispatch accounting + cohort split
+# ---------------------------------------------------------------------------
+
+def test_dispatch_paths_split_by_pipeline_and_reset():
+    """stats()["dispatch_paths"] books every rolled-window launch under
+    the executor path that served it (solo/cohort x serial/pipelined);
+    reset_stats() zeroes it; the resolved pipeline flag splits cohorts."""
+    mesh = CavityMesh.cube(4, 2)
+    eng = SimulationEngine(scan_window=4)
+    eng.open_session("p1", mesh, dt=1e-3, alpha0=2, adaptive=False)
+    eng.open_session("p2", mesh, dt=2e-3, alpha0=2, adaptive=False)
+    eng.open_session("s1", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     pipeline="off")
+    # pipelined pair co-batches; the serial session steps alone
+    assert sorted(len(g) for g in eng.cohorts().values()) == [1, 2]
+    eng.step_all(4)
+    paths = eng.stats()["dispatch_paths"]
+    assert paths["pipelined_cohort"] == 1
+    assert paths["solo"] == 1
+    assert paths["cohort"] == 0 and paths["pipelined_solo"] == 0
+    # legacy counters keep the solo/cohort totals
+    c = eng.stats()["counters"]
+    assert c["solo_dispatches"] == 1 and c["cohort_dispatches"] == 1
+
+    eng.reset_stats()
+    assert all(v == 0 for v in eng.stats()["dispatch_paths"].values())
+
+    # a solo pipelined window books under pipelined_solo
+    eng.close_session("p2")
+    eng.step_all(4)
+    paths = eng.stats()["dispatch_paths"]
+    assert paths["pipelined_solo"] == 1 and paths["solo"] == 1
+    assert paths["pipelined_cohort"] == 0
+
+
+def test_pipelined_cohort_matches_serial_cohort_numerics():
+    """The same three-session mix advanced pipelined and serial lands on
+    identical-to-1e-10 states — cohort batching must not change what the
+    overlap schedule computes."""
+    mesh = CavityMesh.cube(4, 2)
+    outs = {}
+    for mode in ("auto", "off"):
+        eng = SimulationEngine(scan_window=8)
+        for i in range(3):
+            eng.open_session(f"t{i}", mesh, dt=1e-3 * (1 + i),
+                             alpha0=2, adaptive=False, pipeline=mode)
+        eng.step_all(5)
+        outs[mode] = [np.asarray(eng.sessions[f"t{i}"].state.U)
+                      for i in range(3)]
+    for a, b in zip(outs["auto"], outs["off"]):
+        np.testing.assert_allclose(a, b, atol=1e-10)
+
+
+def test_snapshot_restore_round_trips_pipeline_knob():
+    """A snapshotted engine restores each session's pipeline mode and the
+    dispatch-path breakdown (and old manifests without them restore to
+    defaults)."""
+    import json
+    import os
+
+    mesh = CavityMesh.cube(4, 2)
+    eng = SimulationEngine(scan_window=4)
+    eng.open_session("p", mesh, dt=1e-3, alpha0=2, adaptive=False)
+    eng.open_session("s", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     pipeline="off")
+    eng.step_all(4)
+    path = "/tmp/test_snap_pipeline"
+    eng.snapshot(path)
+    back = SimulationEngine.restore(path)
+    assert back.sessions["p"].solver.pipelined
+    assert not back.sessions["s"].solver.pipelined
+    assert back.dispatch_paths == eng.dispatch_paths
+    for sid in ("p", "s"):
+        np.testing.assert_array_equal(
+            np.asarray(back.sessions[sid].state.U),
+            np.asarray(eng.sessions[sid].state.U))
+
+    # forward-compat: strip the new manifest fields -> defaults apply
+    mf = os.path.join(path, "manifest.json")
+    m = json.load(open(mf))
+    m["engine"].pop("dispatch_paths")
+    for sess in m["sessions"]:
+        sess.pop("pipeline")
+    json.dump(m, open(mf, "w"))
+    old = SimulationEngine.restore(path)
+    assert all(v == 0 for v in old.dispatch_paths.values())
+    assert old.sessions["p"].solver.pipeline == "auto"

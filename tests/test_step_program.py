@@ -72,18 +72,21 @@ def test_executors_equivalent_per_backend(backend):
 
 def test_rolled_window_is_one_dispatch():
     """An 8-step window through run_steps is ONE host→XLA dispatch; the
-    per-step path pays eight."""
+    per-step path pays eight.  ``_stepper`` is the routed executor —
+    pipelined under PISO's default pipeline="auto", fused under "off" —
+    and the contract holds on both."""
     mesh = CavityMesh.cube(4, 2)
-    s = PisoSolver(mesh, alpha=2)
-    base = s._exec.fused.dispatches
-    s.run_steps(fresh(s), DT, 8)
-    assert s._exec.fused.dispatches - base == 1
+    for mode in ("auto", "off"):
+        s = PisoSolver(mesh, alpha=2, pipeline=mode)
+        base = s._stepper.dispatches
+        s.run_steps(fresh(s), DT, 8)
+        assert s._stepper.dispatches - base == 1
 
-    st = fresh(s)
-    base = s._exec.fused.dispatches
-    for _ in range(8):
-        st, _ = s.step(st, DT)
-    assert s._exec.fused.dispatches - base == 8
+        st = fresh(s)
+        base = s._stepper.dispatches
+        for _ in range(8):
+            st, _ = s.step(st, DT)
+        assert s._stepper.dispatches - base == 8
 
 
 # ---------------------------------------------------------------------------
@@ -94,19 +97,22 @@ def test_dt_is_traced_not_static():
     """Regression: the seed jitted the step with static_argnames=("dt",),
     recompiling per distinct timestep size.  dt is now a traced operand —
     two dt values share one compilation-cache entry."""
-    s = PisoSolver(CavityMesh.cube(4, 2), alpha=2)
-    st, _ = s.step(fresh(s), 1e-3)
-    st, _ = s.step(st, 2e-3)     # different dt: must NOT retrace
-    st, _ = s.step(st, 5e-4)
-    tc = s._exec.fused.trace_count
-    # strict: the -1 "cache hidden" sentinel must FAIL here, not pass
-    # vacuously — if jax drops _cache_size(), replace this meter, don't
-    # let the dt-retrace regression go unwatched
-    assert tc == 1, f"dt changed -> {tc} compilations (expected 1)"
-    # and the rolled executor shares the behaviour
-    s.run_steps(st, 1e-3, 2)
-    st2, _ = s.run_steps(fresh(s), 2e-3, 2)
-    assert len(s._exec.fused._rolled) == 1
+    # the routed stepper (pipelined under the default "auto") and the
+    # explicit serial fused path both keep dt traced
+    for mode in ("auto", "off"):
+        s = PisoSolver(CavityMesh.cube(4, 2), alpha=2, pipeline=mode)
+        st, _ = s.step(fresh(s), 1e-3)
+        st, _ = s.step(st, 2e-3)     # different dt: must NOT retrace
+        st, _ = s.step(st, 5e-4)
+        tc = s._stepper.trace_count
+        # strict: the -1 "cache hidden" sentinel must FAIL here, not pass
+        # vacuously — if jax drops _cache_size(), replace this meter, don't
+        # let the dt-retrace regression go unwatched
+        assert tc == 1, f"dt changed -> {tc} compilations (expected 1)"
+        # and the rolled executor shares the behaviour
+        s.run_steps(st, 1e-3, 2)
+        st2, _ = s.run_steps(fresh(s), 2e-3, 2)
+        assert len(s._stepper._rolled) == 1
 
 
 def test_state_donation_invalidate_and_alias():
@@ -269,7 +275,7 @@ def test_run_scan_steps_cap_concatenates_windows():
                                atol=1e-10)
     assert stats_b.p_iters.shape == (5, 2)
     assert stats_b.p_iters.tolist() == stats_a.p_iters.tolist()
-    assert sorted(b._exec.fused._rolled) == [1, 2]  # windows 2+2+1
+    assert sorted(b._stepper._rolled) == [1, 2]  # windows 2+2+1
 
 
 # ---------------------------------------------------------------------------
@@ -366,3 +372,158 @@ def test_batched_timed_step_apportions_rows():
     st, _, _ = solo.timed_step(solo.initial_state(), 1e-3)
     np.testing.assert_allclose(np.asarray(out.U[0]), np.asarray(st.U),
                                atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# the software-pipelined executor (PipelineForm)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_pipelined_matches_fused_per_backend(backend):
+    """pipeline="on" vs pipeline="off" run_steps: states <= 1e-10 apart
+    with IDENTICAL per-step Krylov iteration counts on both SolverOps
+    backends — the overlap schedule reorders work, it must not change it."""
+    n_steps = 3
+    mesh = CavityMesh.cube(4, 2)
+    serial = PisoSolver(mesh, alpha=2, solver_backend=backend,
+                        pipeline="off")
+    piped = PisoSolver(mesh, alpha=2, solver_backend=backend, pipeline="on")
+    st_s, w_s = serial.run_steps(fresh(serial), DT, n_steps)
+    st_p, w_p = piped.run_steps(fresh(piped), DT, n_steps)
+    np.testing.assert_allclose(np.asarray(st_p.U), np.asarray(st_s.U),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.asarray(st_p.p), np.asarray(st_s.p),
+                               atol=1e-10)
+    assert w_p.p_iters.tolist() == w_s.p_iters.tolist()
+    assert w_p.mom_iters.tolist() == w_s.mom_iters.tolist()
+    # the window's health flags agree too (same solves, same verdicts)
+    assert w_p.diverged.tolist() == w_s.diverged.tolist()
+    assert w_p.hit_cap.tolist() == w_s.hit_cap.tolist()
+
+
+def test_pipelined_schedule_and_frontier():
+    """The dependence scheduler derives the overlap frontier from the
+    declared phase dataflow alone: the momentum solve (a blocking phase)
+    runs with the next pressure-matrix assembly + coefficient update —
+    neither consumes anything the solve produces."""
+    from repro.fvm.step_program import PHASE_TAGS
+
+    s = PisoSolver(CavityMesh.cube(4, 2), alpha=2)
+    exe = s._exec.pipelined
+    names = [ph.name for ph in exe.schedule]
+    # every pipeline phase scheduled exactly once
+    assert sorted(names) == sorted(
+        ph.name for ph in s.program.pipeline.phases)
+    # the legal frontier under solve_mom: the matrix-only pressure half
+    assert set(exe.frontier["solve_mom"]) == {"assemble_p_mat", "update_p"}
+    # frontier phases are scheduled BEFORE the blocking solve they overlap
+    for ph in exe.frontier["solve_mom"]:
+        assert names.index(ph) < names.index("solve_mom")
+    # blocking phases sort after independent work of their level
+    assert PHASE_TAGS == PhaseBreakdown.TIME_FIELDS
+
+
+def test_pipelined_donates_state_and_aliases_buffers():
+    s = PisoSolver(CavityMesh.cube(4, 2), alpha=2, pipeline="on")
+    st = fresh(s)
+    out, _ = s.step(st, DT)
+    assert st.U.is_deleted() and st.p.is_deleted()
+    assert not out.U.is_deleted()
+    hlo = s._exec.pipelined.lower_step(fresh(s), DT).as_text()
+    header = hlo.splitlines()[0]
+    assert "input_output_alias" in header, header
+    assert header.count("may-alias") + header.count("must-alias") >= 4, header
+
+
+def test_pipelined_health_flag_parity_under_forced_cap():
+    """A misconfigured pressure solve (unreachable tol at a tiny cap)
+    must raise the same hit_cap flags through the pipelined window as
+    through the serial roll — the supervisor's window_verdict may not
+    depend on which executor advanced the session."""
+    from repro.serving.supervisor import window_verdict
+
+    mesh = CavityMesh.cube(4, 2)
+    windows = {}
+    for mode in ("off", "on"):
+        s = PisoSolver(mesh, alpha=2, pipeline=mode)
+        s.p_tol, s.p_maxiter = 1e-30, 2
+        s._programs.clear()
+        s.rebind_alpha(s.alpha)
+        _, windows[mode] = s.run_steps(fresh(s), DT, 4)
+    assert windows["on"].hit_cap.tolist() == windows["off"].hit_cap.tolist()
+    assert bool(windows["on"].hit_cap.any())
+    assert windows["on"].diverged.tolist() == \
+        windows["off"].diverged.tolist()
+    assert window_verdict(windows["on"]) == window_verdict(windows["off"])
+
+
+def test_pipeline_knob_resolution_and_errors():
+    """auto resolves per program spec; "on" demands a PipelineForm; the
+    resolved flag keys the executor memoization."""
+    from repro.fvm.piso import SimpleSolver
+    from repro.fvm.step_program import (BatchedPipelinedExecutor,
+                                        FusedExecutor, PipelinedExecutor)
+
+    mesh = CavityMesh.cube(4, 2)
+    auto = PisoSolver(mesh, alpha=2)
+    assert auto.pipelined and isinstance(auto._stepper, PipelinedExecutor)
+    off = PisoSolver(mesh, alpha=2, pipeline="off")
+    assert not off.pipelined and isinstance(off._stepper, FusedExecutor)
+    assert isinstance(auto.batched_executor(2), BatchedPipelinedExecutor)
+    # the memo key carries the resolved boolean
+    assert ("piso", 2, "stacked", "auto", True) in auto._programs
+    assert ("piso", 2, "stacked", "auto", False) in off._programs
+
+    # steady programs: auto degrades, "on" refuses
+    simple = SimpleSolver(mesh, alpha=2)
+    assert not simple.pipelined
+    assert isinstance(simple._stepper, FusedExecutor)
+    with pytest.raises(ValueError, match="no pipelined form"):
+        SimpleSolver(mesh, alpha=2, pipeline="on")
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        PisoSolver(mesh, alpha=2, pipeline="yes")
+    # and a pipelined executor has no steady outer loop
+    with pytest.raises(ValueError, match="run_converged"):
+        auto._exec.pipelined.run_converged(fresh(auto), DT, 10)
+
+
+def test_pipeline_form_validation():
+    """PipelineForm dataflow is validated at program construction: ring
+    keys must be produced by some pipeline phase, and a ring needs a
+    prime() to fill the prologue."""
+    from repro.fvm.step_program import PipelineForm
+
+    ok = Phase("double", "solve", ("x",), ("x",), lambda x: 2 * x)
+
+    def build(pipeline):
+        return StepProgram(phases=(ok,),
+                           seed=lambda state, dt: {"x": state, "dt": dt},
+                           finalize=lambda env: (env["x"], None),
+                           seed_keys=("x", "dt"), pipeline=pipeline)
+
+    build(PipelineForm(phases=(ok,)))  # fine: no ring
+    with pytest.raises(ValueError, match="not produced"):
+        build(PipelineForm(phases=(ok,), ring=("gradp",),
+                           prime=lambda env: {"gradp": env["x"]}))
+    with pytest.raises(ValueError, match="prime"):
+        build(PipelineForm(
+            phases=(ok, Phase("g", "assembly", ("x",), ("gradp",),
+                              lambda x: x)),
+            ring=("gradp",)))
+
+
+def test_instrumented_sample_is_serial_provenance():
+    """Instrumented samples force the serial schedule and say so: the
+    PhaseBreakdown rows arrive with overlapped=False even when the
+    session's advancing executor is the pipelined one — the controller
+    calibrates the serial per-phase model from them."""
+    s = PisoSolver(CavityMesh.cube(4, 2), alpha=2)   # auto -> pipelined
+    assert s.pipelined
+    _, _, sample = s.timed_step(fresh(s), DT)
+    assert sample.overlapped is False
+    exe = s.batched_executor(2)
+    states = stack_states([s.initial_state(), s.initial_state()])
+    _, _, rows = exe.timed_step(states,
+                                jnp.asarray([1e-3, 2e-3], s.dtype))
+    assert all(row.overlapped is False for row in rows)
+    assert exe.samples == 1
