@@ -25,7 +25,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import json, sys
 import jax
-jax.config.update("jax_enable_x64", True)
+from repro.env import enable_x64; enable_x64()
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.comm import make_cfd_mesh

@@ -42,7 +42,7 @@ from benchmarks.common import emit, time_fn_fresh
 def run(n: int = 16, parts: int = 4, alpha: int = 2,
         windows=(1, 8, 64), reps: int = 3, out: str | None = None,
         dry_run: bool = False) -> dict:
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     import jax.numpy as jnp
 
     from repro.fvm.mesh import CavityMesh

@@ -64,7 +64,7 @@ def run_arrivals(n: int = 8, parts: int = 4, window: int = 8,
                  dry_run: bool = False) -> list[dict]:
     """Open-loop serving cells: Poisson arrivals of a heterogeneous
     size-class mix through the continuous-batching EngineScheduler."""
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     from repro.fvm.mesh import CavityMesh
     from repro.serving.engine import SimulationEngine
     from repro.serving.scheduler import (BULK, DEADLINE, EngineScheduler,
@@ -139,7 +139,7 @@ def run_arrivals(n: int = 8, parts: int = 4, window: int = 8,
 def run(n: int = 8, parts: int = 4, window: int = 8, reps: int = 3,
         session_counts=(1, 4, 16), out: str | None = None,
         dry_run: bool = False, arrivals: bool = False) -> dict:
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     import jax.numpy as jnp
 
     from repro.fvm.mesh import CavityMesh

@@ -99,7 +99,7 @@ def run(cases=("cavity", "channel", "backstep"), sizes=((6, 2), (8, 4)),
         nu: float = 0.01, dt: float = 5e-3, chunk: int = 50,
         max_steps: int = 2000, tol_u: float = 1e-6,
         out: str | None = None, dry_run: bool = False) -> dict:
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
 
     if dry_run:
         sizes = ((4, 2),)

@@ -49,7 +49,7 @@ def _open(eng, n_sessions, mesh, dt0):
 def run(n: int = 8, parts: int = 4, window: int = 8, sessions: int = 4,
         windows: int = 3, reps: int = 3, out: str | None = None,
         dry_run: bool = False) -> dict:
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     import jax.numpy as jnp
 
     from repro.faults import ChaosMonkey

@@ -18,7 +18,7 @@ from repro.fvm.piso import PisoSolver
 
 
 def run(n: int = 24, parts: int = 8, alphas=(1, 2, 4, 8), reps: int = 3):
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     rows = []
     for alpha in alphas:
         if parts % alpha:

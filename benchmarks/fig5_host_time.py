@@ -17,7 +17,7 @@ from repro.fvm.mesh import CavityMesh
 
 
 def run(n: int = 24, n_gpu: int = 2, alphas=(1, 2, 4, 8)):
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     for alpha in alphas:
         parts = n_gpu * alpha
         if n % parts and n % parts != 0:

@@ -35,7 +35,7 @@ CODE = """
 import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import jax
-jax.config.update("jax_enable_x64", True)
+from repro.env import enable_x64; enable_x64()
 from repro.fvm.mesh import CavityMesh
 from repro.fvm.piso import PisoSolver
 

@@ -25,7 +25,7 @@ from repro.fvm.piso import PisoSolver
 
 
 def _measure_schedules(n=16, parts=4, alpha=2):
-    jax.config.update("jax_enable_x64", True)
+    from repro.env import enable_x64; enable_x64()
     for schedule in ("device_direct", "host_buffer"):
         mesh = CavityMesh.cube(n, parts)
         solver = PisoSolver(mesh, alpha=alpha, update_schedule=schedule)
@@ -42,7 +42,7 @@ def _measure_schedules(n=16, parts=4, alpha=2):
 def _collective_bytes_subprocess():
     code = textwrap.dedent("""
         import jax
-        jax.config.update("jax_enable_x64", True)
+        from repro.env import enable_x64; enable_x64()
         import jax.numpy as jnp
         import numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P

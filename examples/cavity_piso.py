@@ -7,7 +7,7 @@ import argparse
 
 import jax
 
-jax.config.update("jax_enable_x64", True)
+from repro.env import enable_x64; enable_x64()
 import numpy as np
 
 from repro.fvm.mesh import CavityMesh

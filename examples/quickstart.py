@@ -9,7 +9,7 @@ then verifies the solution against the fine-partition residual.
 """
 import jax
 
-jax.config.update("jax_enable_x64", True)
+from repro.env import enable_x64; enable_x64()
 import jax.numpy as jnp
 import numpy as np
 

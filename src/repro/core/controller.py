@@ -140,43 +140,48 @@ class PlanCache:
     # -- plan lookup ------------------------------------------------------
     @staticmethod
     def _key(fingerprint: str, alpha: int, target: str, mode: str,
-             backend: str = "auto"):
+             backend: str = "auto", precision: str = "f64"):
         """Cache key.  ``mode`` is the SPMD solve layout ("stacked" |
-        "full_mesh") and ``backend`` the Krylov per-iteration backend
-        ("auto" | "fused" | "reference", :mod:`repro.solvers.ops`): both
-        are separate key *components*, never folded into the target
-        string — ``target`` also dispatches the DIA-vs-ELL source arrays
-        in :class:`UpdaterPool` and must stay a clean target name.  The
-        stacked/auto key keeps its historical 3-tuple shape; the two
+        "full_mesh"), ``backend`` the Krylov per-iteration backend
+        ("auto" | "fused" | "reference", :mod:`repro.solvers.ops`) and
+        ``precision`` the mixed-precision policy name
+        (:mod:`repro.solvers.precision`): all are separate key
+        *components*, never folded into the target string — ``target``
+        also dispatches the DIA-vs-ELL source arrays in
+        :class:`UpdaterPool` and must stay a clean target name.  The
+        stacked/auto/f64 key keeps its historical 3-tuple shape; the
         optional components cannot collide (disjoint value sets)."""
         key = (fingerprint, alpha, target)
         if mode != "stacked":
             key += (mode,)
         if backend != "auto":
             key += (backend,)
+        if precision != "f64":
+            key += (precision,)
         return key
 
     def plan_for_mesh(self, mesh, alpha: int, target: str = "dia",
-                      mode: str = "stacked",
-                      backend: str = "auto") -> RepartitionPlan:
+                      mode: str = "stacked", backend: str = "auto",
+                      precision: str = "f64") -> RepartitionPlan:
         return self.get(mesh_fingerprint(mesh), alpha, target,
                         lambda: plan_for_mesh(mesh, alpha), mode=mode,
-                        backend=backend)
+                        backend=backend, precision=precision)
 
     def plan_for_layout(self, layout, alpha: int, *, nx=None, plane=None,
                         target: str = "dia", mode: str = "stacked",
-                        backend: str = "auto") -> RepartitionPlan:
+                        backend: str = "auto",
+                        precision: str = "f64") -> RepartitionPlan:
         from repro.core.repartition import build_plan
 
         return self.get(layout_fingerprint(layout), alpha, target,
                         lambda: build_plan(layout, alpha, nx=nx, plane=plane),
-                        mode=mode, backend=backend)
+                        mode=mode, backend=backend, precision=precision)
 
     def get(self, fingerprint: str, alpha: int, target: str,
-            builder, mode: str = "stacked",
-            backend: str = "auto") -> RepartitionPlan:
+            builder, mode: str = "stacked", backend: str = "auto",
+            precision: str = "f64") -> RepartitionPlan:
         """Return the cached plan for the key, building via ``builder`` on miss."""
-        key = self._key(fingerprint, alpha, target, mode, backend)
+        key = self._key(fingerprint, alpha, target, mode, backend, precision)
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
@@ -193,9 +198,9 @@ class PlanCache:
     # -- compiled-update reuse -------------------------------------------
     def updater(self, fingerprint: str, alpha: int, target: str = "dia",
                 schedule: str = "device_direct", mode: str = "stacked",
-                backend: str = "auto"):
+                backend: str = "auto", precision: str = "f64"):
         """Plan-bound ``buffers -> values`` callable (memoized per entry)."""
-        key = self._key(fingerprint, alpha, target, mode, backend)
+        key = self._key(fingerprint, alpha, target, mode, backend, precision)
         entry = self._entries.get(key)
         if entry is None:
             raise KeyError(
@@ -281,7 +286,8 @@ class RepartitionController:
                  fixed_fine: bool = False,
                  solve_mode: str = "stacked",
                  solver_backend: str = "auto",
-                 pipelined: bool = False):
+                 pipelined: bool = False,
+                 precision: str = "f64"):
         """``fixed_fine`` selects the partition parametrization:
 
         * ``False`` (paper §2): the solve side is pinned to ``n_gpu``
@@ -316,6 +322,12 @@ class RepartitionController:
         the solve.  Calibration is unaffected: instrumented samples force
         the serial schedule, so the per-phase scales stay serial truths
         the max() is applied on top of.
+
+        ``precision`` names the session's mixed-precision Krylov policy
+        (:mod:`repro.solvers.precision`); it becomes a plan-cache key
+        component and, when not "f64", re-prices the cost model's
+        bytes/iter term (:meth:`CostModel.with_precision`) so the alpha
+        selection sees the inner sweeps' narrower storage width.
         """
         if solve_mode not in ("stacked", "full_mesh"):
             raise ValueError(f"unknown solve_mode {solve_mode!r}")
@@ -331,9 +343,15 @@ class RepartitionController:
 
         if solver_backend not in BACKENDS:
             raise ValueError(f"unknown solver_backend {solver_backend!r}")
+        from repro.solvers.precision import get_policy
+
+        get_policy(precision)
         if solver_backend == "fused" and not model.fused_solver:
             model = model.with_fused_solver(True)
+        if precision != "f64" and model.precision == "f64":
+            model = model.with_precision(precision)
         self.base_model = model
+        self.precision = precision
         self.n_cpu = n_cpu
         self.n_gpu = n_gpu
         self.fixed_fine = fixed_fine
@@ -469,7 +487,8 @@ class RepartitionController:
         """
         return self.cache.plan_for_mesh(mesh, self.alpha, target,
                                         mode=self.solve_mode,
-                                        backend=self.solver_backend)
+                                        backend=self.solver_backend,
+                                        precision=self.precision)
 
     def stats(self) -> dict:
         a, s, c = self.calibration.scales
@@ -477,6 +496,7 @@ class RepartitionController:
             "alpha": self.alpha,
             "solve_mode": self.solve_mode,
             "solver_backend": self.solver_backend,
+            "precision": self.precision,
             "pipelined": self.pipelined,
             "steps": self.step_count,
             "switches": [dataclasses.asdict(e) for e in self.switches],

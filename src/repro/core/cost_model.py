@@ -147,6 +147,17 @@ class CostModel:
     fused_solver: bool = False
     vector_passes: float = 8.0
     vector_passes_fused: float = 5.0
+    # Mixed-precision Krylov policy (repro.solvers.precision): the inner
+    # sweeps stream bands + vectors at the policy's *storage* width
+    # (f32_ir: 4 B, bf16_ir: 2 B — the near-2x/4x bandwidth lever on a
+    # bandwidth-bound solver), plus ``refine_outers`` f64 residual-replay
+    # passes (one full-width SpMV + correction axpy each).  Under the
+    # default "f64" policy the bytes expression is exactly the pre-policy
+    # one.  ``solver_iters`` counts *inner* iterations for refined
+    # policies (the inner/outer split the controller's alpha selection
+    # sees).
+    precision: str = "f64"
+    refine_outers: int = 4
     # Host→XLA launch overhead per *dispatched* step.  The StepProgram's
     # scan-rolled executor (fvm/step_program.FusedExecutor.run_steps)
     # retires this term: a window of n timesteps is ONE executable launch,
@@ -181,8 +192,21 @@ class CostModel:
     def solver_bytes(self) -> float:
         vec = (self.vector_passes_fused if self.fused_solver
                else self.vector_passes)
-        per_iter = (self.nnz_per_row + vec) * self.n_dofs * self.bytes_per_val
-        return per_iter * self.solver_iters
+        if self.precision == "f64":
+            per_iter = (self.nnz_per_row + vec) * self.n_dofs \
+                * self.bytes_per_val
+            return per_iter * self.solver_iters
+        # refined policy: inner sweeps at the storage width, plus
+        # refine_outers full-width replay passes (bands + x read, r
+        # written, correction axpy: ~nnz + 3 vector transits each)
+        from repro.solvers.precision import get_policy
+
+        pol = get_policy(self.precision)
+        inner = (self.nnz_per_row + vec) * self.n_dofs \
+            * pol.storage_itemsize * self.solver_iters
+        outer = (self.nnz_per_row + 3) * self.n_dofs * self.bytes_per_val \
+            * self.refine_outers
+        return inner + outer
 
     def t_solve_core(self, n_dev: int, ranks_per_dev: int = 1) -> float:
         """Device solve sans halo; memory-bound SpMV with DOFs/device knee."""
@@ -215,9 +239,10 @@ class CostModel:
         dofs_per_core = self.n_dofs / n_ranks
         eff = 1.3 if 1e4 <= dofs_per_core <= 3e4 else 1.0
         bw_per_core = self.hw.host_bw / 8.0
-        # the CPU baseline never runs the fused kernels: always the
-        # reference vector-pass count
-        cpu_bytes = dataclasses.replace(self, fused_solver=False).solver_bytes()
+        # the CPU baseline never runs the fused kernels or a mixed-
+        # precision policy: always the reference full-width pass count
+        cpu_bytes = dataclasses.replace(self, fused_solver=False,
+                                        precision="f64").solver_bytes()
         t = cpu_bytes / (n_ranks * bw_per_core * eff)
         t += 5e-6 * _m.log2(max(n_ranks, 2)) * self.solver_iters
         return t
@@ -316,6 +341,22 @@ class CostModel:
     def with_fused_solver(self, fused: bool = True) -> "CostModel":
         """A copy with the fused-iteration bytes/iter term toggled."""
         return dataclasses.replace(self, fused_solver=fused)
+
+    def with_precision(self, precision: str,
+                       refine_outers: int | None = None) -> "CostModel":
+        """A copy priced under a named precision policy.
+
+        ``refine_outers`` overrides the modelled outer-refinement count
+        (e.g. a measured value from benchmarks); ``None`` keeps the
+        current one.  Raises on an unknown policy name.
+        """
+        from repro.solvers.precision import get_policy
+
+        get_policy(precision)
+        return dataclasses.replace(
+            self, precision=precision,
+            refine_outers=(self.refine_outers if refine_outers is None
+                           else refine_outers))
 
     def with_scales(self, assembly: float | None = None,
                     solve: float | None = None,

@@ -26,7 +26,8 @@ from __future__ import annotations
 import os
 import sys
 
-__all__ = ["GPU_XLA_FLAGS", "configure_platform", "jax_initialized"]
+__all__ = ["GPU_XLA_FLAGS", "configure_platform", "enable_x64",
+           "jax_initialized"]
 
 # The overlap-relevant XLA tuning set (GPU backend).  The latency-hiding
 # scheduler + async/priority-stream flags are what let the pipelined
@@ -61,6 +62,22 @@ def jax_initialized() -> bool:
         # unknown JAX internals: conservatively treat "jax imported" as
         # "may be initialized" only if we cannot tell at all
         return False
+
+
+def enable_x64() -> None:
+    """Turn on double-precision JAX arrays for this process.
+
+    The solver's baseline numerics are f64 (the paper's; mixed-precision
+    policies refine *against* an f64 outer residual, so they need it
+    too).  Every entry point — launchers, the pytest conftest, the
+    benchmark subprocess cells — calls this one helper instead of
+    scattering ``jax.config.update("jax_enable_x64", True)`` strings.
+    Unlike :data:`GPU_XLA_FLAGS` this is a JAX-level config, safe to set
+    (idempotently) at any time, including after backend initialization.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
 
 
 def _flag_name(flag: str) -> str:

@@ -47,6 +47,7 @@ from repro.fvm.cases import FlowCase, get_case
 from repro.fvm.mesh import CavityMesh
 from repro.fvm.step_program import ProgramExecutors, get_program
 from repro.solvers.jacobi import jacobi_preconditioner
+from repro.solvers.precision import get_policy
 from repro.solvers.ops import (fused_stacked_ops, reference_ops,
                                resolve_backend)
 from repro.sparse.distributed import spmv_dia
@@ -184,6 +185,13 @@ class SegregatedSolver:
     # interpreter inside the solve loop — explicit "fused" forces that
     # for parity tests and benchmarks)
     solver_backend: str = "auto"
+    # mixed-precision Krylov policy (repro.solvers.precision): "f64" is
+    # the exact pre-policy solve; "f32_ir"/"bf16_ir" run the inner Krylov
+    # sweeps at the low storage dtype with an outer f64 iterative-
+    # refinement loop, so the converged answer still meets the <=1e-10
+    # parity gate while the hot loop streams 2-4x fewer bytes.  Stacked
+    # layouts only (the full-mesh shard_map backend stays f64).
+    precision: str = "f64"
     # optional shared PlanCache (repro.core.controller) — plans and compiled
     # steppers are then reused when alpha is rebound to a previously seen
     # value, and the instrumented executor's value updates route through
@@ -207,6 +215,11 @@ class SegregatedSolver:
         if self.solver_backend not in ("auto", "fused", "reference"):
             raise ValueError(
                 f"unknown solver_backend {self.solver_backend!r}")
+        get_policy(self.precision)  # raises on an unknown policy name
+        if self.precision != "f64" and self.solve_mode == "full_mesh":
+            raise ValueError(
+                "mixed-precision policies require solve_mode='stacked' "
+                "(the full-mesh shard_map backend is f64-only)")
         if self.pipeline not in ("auto", "on", "off"):
             raise ValueError(f"unknown pipeline mode {self.pipeline!r} "
                              f"(choose auto|on|off)")
@@ -259,7 +272,8 @@ class SegregatedSolver:
             # sessions sharing one PlanCache never alias cached artifacts
             return self.plan_cache.plan_for_mesh(self.mesh, alpha, "dia",
                                                  mode=self.solve_mode,
-                                                 backend=self.solver_backend)
+                                                 backend=self.solver_backend,
+                                                 precision=self.precision)
         return plan_for_mesh(self.mesh, alpha)
 
     def rebind_alpha(self, alpha: int) -> None:
@@ -269,8 +283,8 @@ class SegregatedSolver:
         layout), so a running simulation can switch plans between steps.
         Plans come from ``plan_cache`` when present; the built StepProgram
         and its executors are memoized per (program, alpha, mode, backend,
-        pipelined), so a revisited alpha pays zero re-plan, re-trace or
-        re-compile cost.
+        precision, pipelined), so a revisited alpha pays zero re-plan,
+        re-trace or re-compile cost.
         """
         if self.mesh.n_parts % alpha != 0:
             raise ValueError("alpha must divide the number of fine parts")
@@ -292,7 +306,7 @@ class SegregatedSolver:
                     self.n_coarse, alpha,
                     devices=list(self.spmd_mesh.devices.flat))
         key = (self.program_name, alpha, self.solve_mode,
-               self.solver_backend, self.pipelined)
+               self.solver_backend, self.precision, self.pipelined)
         exe = self._programs.get(key)
         if exe is None:
             # a fresh program binds fresh closures over the new plans, so
@@ -405,9 +419,26 @@ class SegregatedSolver:
                 make_jacobi_full_mesh(self.spmd_mesh, diag_c))
 
         backend = resolve_backend(self.solver_backend, plan.m_coarse)
+        policy = get_policy(self.precision)
         if backend == "fused":
             return fused_stacked_ops(bands, diag, offsets=offsets,
-                                     plane=plan.plane)
+                                     plane=plan.plane, policy=policy)
+
+        if policy.refine:
+            # inner sweep over downcast bands (the bytes/iter win), outer
+            # f64 residual replay over the originals (the parity gate)
+            bands_lo = bands.astype(policy.storage_dtype)
+            diag_lo = diag.astype(policy.storage_dtype)
+
+            def A_lo(x):
+                return spmv_dia(bands_lo, x, offsets=offsets,
+                                plane=plan.plane)
+
+            def A_hi(x):
+                return spmv_dia(bands, x, offsets=offsets, plane=plan.plane)
+
+            return reference_ops(A_lo, jacobi_preconditioner(diag_lo),
+                                 policy=policy, matvec_hi=A_hi)
 
         def A(x):
             return spmv_dia(bands, x, offsets=offsets, plane=plan.plane)

@@ -50,26 +50,36 @@ def _pad_tail(m: int, block_rows: int) -> int:
 
 
 def spmv_dot_cost(nb: int, m: int, plane: int, itemsize: int = 8,
-                  block_rows: int = DEFAULT_BLOCK_ROWS) -> dict:
-    """HBM contract of :func:`spmv_dot_single` (bytes/flops per call)."""
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  accum_itemsize: int | None = None) -> dict:
+    """HBM contract of :func:`spmv_dot_single` (bytes/flops per call).
+
+    ``itemsize`` follows the *storage* dtype (bands, vectors); the
+    ``n_blocks`` partial-sum slots are written at ``accum_itemsize``
+    (defaults to the storage width — the uniform-dtype case).
+    """
     n_blocks = -(-m // block_rows)
+    acc = accum_itemsize if accum_itemsize is not None else itemsize
     return {
         # bands once + x_pad once (VMEM-resident across the grid) + Ap out
-        # + the n_blocks partial slots
-        "bytes_accessed": float((nb * m + (m + 2 * plane) + m + n_blocks)
-                                * itemsize),
+        # + the n_blocks partial slots (accumulation width)
+        "bytes_accessed": float((nb * m + (m + 2 * plane) + m) * itemsize
+                                + n_blocks * acc),
         "flops": float(2 * nb * m + 2 * m),
         "transcendentals": 0.0,
     }
 
 
 def fused_axpy_precond_cost(m: int, itemsize: int = 8,
-                            block_rows: int = DEFAULT_BLOCK_ROWS) -> dict:
+                            block_rows: int = DEFAULT_BLOCK_ROWS,
+                            accum_itemsize: int | None = None) -> dict:
     """HBM contract of :func:`fused_axpy_precond_single`."""
     n_blocks = -(-m // block_rows)
+    acc = accum_itemsize if accum_itemsize is not None else itemsize
     return {
         # reads x, r, p, Ap, inv_diag; writes x', r', z, 2 * partials
-        "bytes_accessed": float((5 * m + 3 * m + 2 * n_blocks) * itemsize),
+        "bytes_accessed": float((5 * m + 3 * m) * itemsize
+                                + 2 * n_blocks * acc),
         "flops": float(9 * m),
         "transcendentals": 0.0,
     }
@@ -86,32 +96,44 @@ def _cost(d: dict) -> pl.CostEstimate:
 # ---------------------------------------------------------------------------
 
 def _spmv_dot_kernel(bands_ref, xpad_ref, y_ref, dot_ref, *,
-                     offsets: tuple[int, ...], plane: int, block_rows: int):
+                     offsets: tuple[int, ...], plane: int, block_rows: int,
+                     accum_dtype: str):
     i = pl.program_id(0)
     row0 = i * block_rows
-    acc = jnp.zeros((block_rows,), bands_ref.dtype)
+    # low-precision loads, accumulation at the policy's accum dtype (a
+    # no-op upcast when storage == accum, so the f64 path is bit-identical)
+    acc = jnp.zeros((block_rows,), accum_dtype)
     for d, off in enumerate(offsets):
         xw = xpad_ref[pl.dslice(row0 + plane + off, block_rows)]
-        acc = acc + bands_ref[d, :] * xw
-    y_ref[:] = acc
+        acc = acc + bands_ref[d, :].astype(accum_dtype) * xw.astype(accum_dtype)
+    y_ref[:] = acc.astype(y_ref.dtype)
     # the block's rows of p itself (offset 0 window) feed the p.Ap partial
     pw = xpad_ref[pl.dslice(row0 + plane, block_rows)]
-    dot_ref[0] = jnp.sum(pw * acc)
+    dot_ref[0] = jnp.sum(pw.astype(accum_dtype) * acc)
 
 
 @functools.partial(jax.jit, static_argnames=("offsets", "plane",
-                                             "block_rows", "interpret"))
+                                             "block_rows", "interpret",
+                                             "accum_dtype"))
 def spmv_dot_single(bands: jax.Array, x_pad: jax.Array, *,
                     offsets: tuple[int, ...], plane: int,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
-                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+                    interpret: bool = False,
+                    accum_dtype: str | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
     """``(A p, p . A p)`` for one part in one grid pass.
 
     bands: (nb, m); x_pad: (m + 2*plane,).  Ragged ``m`` is padded with
     zeros (zero bands => zero tail contributions to both outputs).
+    ``accum_dtype`` (a dtype *name*, hashable for jit) sets the partial
+    accumulation width; ``None`` accumulates in the storage dtype — the
+    pre-policy behaviour.  ``Ap`` comes back in the storage dtype, the
+    ``p . Ap`` scalar in the accum dtype.
     """
     nb, m = bands.shape
     assert x_pad.shape == (m + 2 * plane,), (x_pad.shape, m, plane)
+    accum_dtype = accum_dtype or bands.dtype.name
+    acc_itemsize = jnp.dtype(accum_dtype).itemsize
     pad = _pad_tail(m, block_rows)
     if pad:
         bands = jnp.pad(bands, ((0, 0), (0, pad)))
@@ -120,7 +142,7 @@ def spmv_dot_single(bands: jax.Array, x_pad: jax.Array, *,
     grid = (mp // block_rows,)
     y, partials = pl.pallas_call(
         functools.partial(_spmv_dot_kernel, offsets=offsets, plane=plane,
-                          block_rows=block_rows),
+                          block_rows=block_rows, accum_dtype=accum_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((nb, block_rows), lambda i: (0, i)),
@@ -132,10 +154,11 @@ def spmv_dot_single(bands: jax.Array, x_pad: jax.Array, *,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((mp,), bands.dtype),
-            jax.ShapeDtypeStruct((grid[0],), bands.dtype),
+            jax.ShapeDtypeStruct((grid[0],), accum_dtype),
         ],
         cost_estimate=_cost(spmv_dot_cost(nb, m, plane, bands.dtype.itemsize,
-                                          block_rows=block_rows)),
+                                          block_rows=block_rows,
+                                          accum_itemsize=acc_itemsize)),
         interpret=interpret,
     )(bands, x_pad)
     return y[:m], jnp.sum(partials)
@@ -146,7 +169,8 @@ def spmv_dot_single(bands: jax.Array, x_pad: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _axpy_precond_kernel(x_ref, r_ref, p_ref, ap_ref, inv_ref, alpha_ref,
-                         xo_ref, ro_ref, zo_ref, rz_ref, rr_ref):
+                         xo_ref, ro_ref, zo_ref, rz_ref, rr_ref, *,
+                         accum_dtype: str):
     a = alpha_ref[0]
     xn = x_ref[:] + a * p_ref[:]
     rn = r_ref[:] - a * ap_ref[:]
@@ -154,23 +178,31 @@ def _axpy_precond_kernel(x_ref, r_ref, p_ref, ap_ref, inv_ref, alpha_ref,
     xo_ref[:] = xn
     ro_ref[:] = rn
     zo_ref[:] = z
-    rz_ref[0] = jnp.sum(rn * z)
-    rr_ref[0] = jnp.sum(rn * rn)
+    # the block reductions upcast per element (no-op when storage == accum)
+    rn_a = rn.astype(accum_dtype)
+    rz_ref[0] = jnp.sum(rn_a * z.astype(accum_dtype))
+    rr_ref[0] = jnp.sum(rn_a * rn_a)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "accum_dtype"))
 def fused_axpy_precond_single(x: jax.Array, r: jax.Array, p: jax.Array,
                               Ap: jax.Array, inv_diag: jax.Array,
                               alpha: jax.Array, *,
                               block_rows: int = DEFAULT_BLOCK_ROWS,
-                              interpret: bool = False):
+                              interpret: bool = False,
+                              accum_dtype: str | None = None):
     """``(x', r', z, r'.z, r'.r')`` for one part in one grid pass.
 
     ``x' = x + alpha p``, ``r' = r - alpha Ap``, ``z = r' * inv_diag``.
     All inputs (m,); ``alpha`` a scalar.  Ragged ``m`` padded with zeros
-    (zero tails contribute zero to both partials).
+    (zero tails contribute zero to both partials).  Vector outputs stay
+    in the storage dtype; the two partial slots accumulate and return in
+    ``accum_dtype`` (``None``: the storage dtype, pre-policy behaviour).
     """
     (m,) = x.shape
+    accum_dtype = accum_dtype or x.dtype.name
+    acc_itemsize = jnp.dtype(accum_dtype).itemsize
     pad = _pad_tail(m, block_rows)
     vecs = (x, r, p, Ap, inv_diag)
     if pad:
@@ -180,15 +212,16 @@ def fused_axpy_precond_single(x: jax.Array, r: jax.Array, p: jax.Array,
     blk = pl.BlockSpec((block_rows,), lambda i: (i,))
     part = pl.BlockSpec((1,), lambda i: (i,))
     xn, rn, z, rz, rr = pl.pallas_call(
-        _axpy_precond_kernel,
+        functools.partial(_axpy_precond_kernel, accum_dtype=accum_dtype),
         grid=grid,
         in_specs=[blk, blk, blk, blk, blk,
                   pl.BlockSpec((1,), lambda i: (0,))],
         out_specs=[blk, blk, blk, part, part],
         out_shape=[jax.ShapeDtypeStruct((mp,), x.dtype)] * 3 + [
-            jax.ShapeDtypeStruct((grid[0],), x.dtype)] * 2,
+            jax.ShapeDtypeStruct((grid[0],), accum_dtype)] * 2,
         cost_estimate=_cost(fused_axpy_precond_cost(m, x.dtype.itemsize,
-                                                    block_rows=block_rows)),
+                                                    block_rows=block_rows,
+                                                    accum_itemsize=acc_itemsize)),
         interpret=interpret,
     )(*vecs, jnp.reshape(alpha, (1,)).astype(x.dtype))
     return xn[:m], rn[:m], z[:m], jnp.sum(rz), jnp.sum(rr)

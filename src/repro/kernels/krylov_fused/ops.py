@@ -23,38 +23,46 @@ from repro.sparse.distributed import x_pad as make_x_pad
 
 
 @functools.partial(jax.jit, static_argnames=("offsets", "plane",
-                                             "block_rows"))
+                                             "block_rows", "accum_dtype"))
 def fused_matvec_dot(bands: jax.Array, x: jax.Array, *,
                      offsets: tuple[int, ...], plane: int,
-                     block_rows: int = 0) -> tuple[jax.Array, jax.Array]:
+                     block_rows: int = 0,
+                     accum_dtype: str | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
     """``(A x, x . A x)`` over stacked parts: bands (P, nb, m), x (P, m).
 
     One HBM pass over the bands and the halo'd vector per call;
     ``block_rows=0`` picks the block size from the part size.
+    ``accum_dtype`` (dtype name) sets the partial-reduction width for
+    low-precision storage policies; ``None`` keeps the storage dtype.
     """
     P, nb, m = bands.shape
     assert m + 2 * plane <= VMEM_F32_BUDGET, "x_pad exceeds the VMEM budget"
     br = block_rows or pick_block_rows(m)
     xp = make_x_pad(x, plane)
     fn = functools.partial(spmv_dot_single, offsets=offsets, plane=plane,
-                           block_rows=br, interpret=not _on_tpu())
+                           block_rows=br, interpret=not _on_tpu(),
+                           accum_dtype=accum_dtype)
     y, part = jax.vmap(fn)(bands, xp)
     return y, jnp.sum(part)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows",))
+@functools.partial(jax.jit, static_argnames=("block_rows", "accum_dtype"))
 def fused_update_step(x: jax.Array, r: jax.Array, p: jax.Array,
                       Ap: jax.Array, inv_diag: jax.Array, alpha: jax.Array,
-                      *, block_rows: int = 0):
+                      *, block_rows: int = 0,
+                      accum_dtype: str | None = None):
     """Fused axpy pair + Jacobi inverse + global ``(r'.z, r'.r')`` dots.
 
     All vectors stacked (P, m); ``alpha`` a global scalar.  Returns
-    ``(x', r', z, rz, rr)`` with the dots reduced over all parts.
+    ``(x', r', z, rz, rr)`` with the dots reduced over all parts (the two
+    scalars in ``accum_dtype`` when given, else the storage dtype).
     """
     P, m = x.shape
     br = block_rows or pick_block_rows(m)
     fn = functools.partial(fused_axpy_precond_single, block_rows=br,
-                           interpret=not _on_tpu())
+                           interpret=not _on_tpu(),
+                           accum_dtype=accum_dtype)
     xn, rn, z, rz, rr = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, None))(
         x, r, p, Ap, inv_diag, alpha)
     return xn, rn, z, jnp.sum(rz), jnp.sum(rr)

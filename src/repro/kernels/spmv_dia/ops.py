@@ -19,20 +19,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("offsets", "plane", "block_rows"))
+@functools.partial(jax.jit, static_argnames=("offsets", "plane", "block_rows",
+                                             "accum_dtype"))
 def spmv_dia_pallas(bands: jax.Array, x: jax.Array, *,
                     offsets: tuple[int, ...], plane: int,
-                    block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    accum_dtype: str | None = None) -> jax.Array:
     """Stacked SpMV: bands (P, nb, m), x (P, m) → y (P, m).
 
     Builds the halo'd x_pad (the shifts across the part axis lower to
     collective-permute under pjit), then vmaps the single-part Pallas
     kernel over parts.  Ragged row counts are handled inside
     ``spmv_dia_single`` (zero-padded tail block, sliced off).
+    ``accum_dtype`` (dtype name) widens the in-kernel row accumulator for
+    low-precision bands; ``None`` accumulates in the storage dtype.
     """
     P, nb, m = bands.shape
     assert m + 2 * plane <= VMEM_F32_BUDGET, "x_pad exceeds the VMEM budget"
     xp = make_x_pad(x, plane)  # (P, m + 2*plane)
     fn = functools.partial(spmv_dia_single, offsets=offsets, plane=plane,
-                           block_rows=block_rows, interpret=not _on_tpu())
+                           block_rows=block_rows, interpret=not _on_tpu(),
+                           accum_dtype=accum_dtype)
     return jax.vmap(fn)(bands, xp)

@@ -33,25 +33,28 @@ def pick_block_rows(m: int, cap: int = DEFAULT_BLOCK_ROWS) -> int:
 
 
 def _kernel(bands_ref, xpad_ref, y_ref, *, offsets: tuple[int, ...],
-            plane: int, block_rows: int):
+            plane: int, block_rows: int, accum_dtype: str):
     i = pl.program_id(0)
     row0 = i * block_rows
-    acc = jnp.zeros((block_rows,), bands_ref.dtype)
+    # accumulate at the (possibly wider) accum dtype — a no-op upcast for
+    # the uniform-dtype case, f32 accumulation for bf16-stored bands
+    acc = jnp.zeros((block_rows,), accum_dtype)
     for d, off in enumerate(offsets):
         # x window for this band: rows [row0, row0+R) shifted by off, +plane
         # because x_pad has the down-halo prefix.
         xw = xpad_ref[pl.dslice(row0 + plane + off, block_rows)]
-        acc = acc + bands_ref[d, :] * xw
-    y_ref[:] = acc
+        acc = acc + bands_ref[d, :].astype(accum_dtype) * xw.astype(accum_dtype)
+    y_ref[:] = acc.astype(y_ref.dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("offsets", "plane", "block_rows",
-                                    "interpret"))
+                                    "interpret", "accum_dtype"))
 def spmv_dia_single(bands: jax.Array, x_pad: jax.Array, *,
                     offsets: tuple[int, ...], plane: int,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False,
+                    accum_dtype: str | None = None) -> jax.Array:
     """y = A @ x for one part.  bands: (nb, m); x_pad: (m + 2*plane,).
 
     A ragged final row block (``m % block_rows != 0`` — any odd mesh x
@@ -59,9 +62,14 @@ def spmv_dia_single(bands: jax.Array, x_pad: jax.Array, *,
     rows carry zero band values, so they contribute nothing, and valid
     rows never read the pad region (row ``i < m`` reaches at most
     ``x_pad[m - 1 + 2*plane]``, the last real element).
+
+    ``accum_dtype`` (dtype *name*, jit-hashable) widens the row
+    accumulator for low-precision bands; ``y`` comes back in the storage
+    dtype.  ``None`` accumulates in the storage dtype as before.
     """
     nb, m = bands.shape
     assert x_pad.shape == (m + 2 * plane,), (x_pad.shape, m, plane)
+    accum_dtype = accum_dtype or bands.dtype.name
     pad = (-m) % block_rows
     if pad:
         bands = jnp.pad(bands, ((0, 0), (0, pad)))
@@ -70,7 +78,7 @@ def spmv_dia_single(bands: jax.Array, x_pad: jax.Array, *,
     grid = (mp // block_rows,)
     y = pl.pallas_call(
         functools.partial(_kernel, offsets=offsets, plane=plane,
-                          block_rows=block_rows),
+                          block_rows=block_rows, accum_dtype=accum_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((nb, block_rows), lambda i: (0, i)),

@@ -19,11 +19,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-
 from repro.core.controller import (ControllerConfig, PlanCache,
                                    RepartitionController)
 from repro.core.cost_model import CostModel, TPU_V5E
+from repro.env import enable_x64
 from repro.fvm.cases import case_names, get_case
 from repro.fvm.mesh import CavityMesh
 from repro.fvm.piso import SOLVERS, make_solver
@@ -232,12 +231,13 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
 
     if args.xla_tuning:
-        # must precede backend init (importing jax above is fine — XLA
-        # reads the env on first backend *use*, not on import)
+        # must precede backend init (the jax import the modules above
+        # pull in is fine — XLA reads the env on first backend *use*,
+        # not on import)
         from repro.env import configure_platform
 
         configure_platform()
-    jax.config.update("jax_enable_x64", True)
+    enable_x64()
     # resolve "auto" at the fine part size — the smallest solve part any
     # alpha produces, so the cost model's fused bytes/iter prior flips
     # only when every candidate alpha runs the fused kernels (larger

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
+from repro.env import enable_x64
 from repro.models import lm
 from repro.serving.engine import generate
 
@@ -64,7 +65,7 @@ def serve_cfd_arrivals(args) -> dict:
     """Open-loop serving: Poisson arrivals of a heterogeneous tenant mix
     scheduled by :class:`~repro.serving.scheduler.EngineScheduler` —
     size-class cohorts, deadline preemption, per-class p50/p99."""
-    jax.config.update("jax_enable_x64", True)
+    enable_x64()
     from repro.core.controller import ControllerConfig
     from repro.serving.engine import SimulationEngine
     from repro.serving.scheduler import (BULK, DEADLINE, EngineScheduler,
@@ -135,7 +136,7 @@ def serve_cfd_supervised(args) -> None:
     snapshot must reproduce the uninterrupted run's digests bit-for-bit
     (the CI chaos-smoke job asserts exactly that).
     """
-    jax.config.update("jax_enable_x64", True)
+    enable_x64()
     from repro.core.controller import ControllerConfig
     from repro.faults import ChaosMonkey, parse_kinds
     from repro.fvm.mesh import CavityMesh
@@ -218,7 +219,7 @@ def serve_cfd_supervised(args) -> None:
 
 def serve_cfd(args) -> None:
     """Multi-tenant PISO serving: cohort-batched stepping of N sessions."""
-    jax.config.update("jax_enable_x64", True)
+    enable_x64()
     from repro.core.controller import ControllerConfig
     from repro.fvm.mesh import CavityMesh
     from repro.serving.engine import SimulationEngine

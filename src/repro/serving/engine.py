@@ -204,7 +204,8 @@ class SimulationEngine:
                      deadline_ms: float | None = None,
                      program: str = "piso",
                      case: str = "cavity",
-                     pipeline: str = "auto") -> SimulationSession:
+                     pipeline: str = "auto",
+                     precision: str = "f64") -> SimulationSession:
         """Admit a simulation; its controller starts from the cost model's
         static pick (``alpha0=None``) exactly like the non-adaptive launcher,
         then departs from it as measurements arrive.  ``solve_mode``
@@ -237,6 +238,13 @@ class SimulationEngine:
         to serial).  The resolved boolean is a cohort-key component and
         is handed to the session's controller so alpha selection scores
         the overlap objective instead of the serial sum.
+
+        ``precision`` ("f64" | "f32_ir" | "bf16_ir",
+        :mod:`repro.solvers.precision`) picks the tenant's mixed-precision
+        Krylov policy.  It is a cohort-key component (mixed-precision
+        tenants never co-batch with f64 ones), re-prices the controller's
+        bytes/iter term, and is the supervisor's first fallback ladder on
+        faults (``bf16_ir -> f32_ir -> f64`` before any backend rebind).
         """
         from repro.core.repartition import mesh_fingerprint
         from repro.fvm.mesh import PaddedCavityMesh
@@ -267,12 +275,12 @@ class SimulationEngine:
             model, n_cpu=mesh.n_parts, n_gpu=1, alpha0=alpha0,
             config=self.config, cache=self.plan_cache, fixed_fine=True,
             solve_mode=solve_mode, solver_backend=solver_backend,
-            pipelined=pipelined)
+            pipelined=pipelined, precision=precision)
         solver = make_solver(program, mesh, alpha=controller.alpha, nu=nu,
                              case=case, plan_cache=self.plan_cache,
                              solve_mode=solve_mode,
                              solver_backend=solver_backend,
-                             pipeline=pipeline)
+                             pipeline=pipeline, precision=precision)
         sess = SimulationSession(sid=sid, solver=solver,
                                  controller=controller,
                                  state=solver.initial_state(), dt=dt,
@@ -413,12 +421,17 @@ class SimulationEngine:
         # silently ride the lead session's
         tols = (s.mom_tol, s.p_tol, getattr(s, "mom_maxiter", 500),
                 getattr(s, "p_maxiter", 2000))
+        # precision is a key component for the same compiled-identity
+        # reason: a mixed-precision tenant's program runs the outer
+        # refinement loop (different jaxpr, different storage dtypes) —
+        # it must never co-batch with an f64 tenant's dispatch
         return (sess.mesh_fp, s.alpha, s.solve_mode, s.solver_backend,
                 s.nu, str(s.dtype), sess.adaptive, phase, tols,
                 getattr(s, "padded", False),
                 getattr(s, "program_name", "piso"),
                 getattr(s, "case", "cavity"),
-                getattr(s, "pipelined", False), quarantine)
+                getattr(s, "pipelined", False),
+                getattr(s, "precision", "f64"), quarantine)
 
     def step_all(self, n_steps: int = 1, sids=None) -> dict:
         """Advance every open session (or ``sids``) by ``n_steps`` through
@@ -608,15 +621,21 @@ class SimulationEngine:
 
         Clean window: checkpoint the state and let the supervisor count
         toward recovery (restoring the original backend on
-        QUARANTINED → DEGRADED).  Faulty window: roll the session back to
-        its last clean snapshot and escalate — "quarantine" additionally
-        rebinds the configured fallback backend, "fail" closes the
-        session and parks its post-mortem in :attr:`failed`.  Returns the
-        supervisor directive (None for a clean window).
+        QUARANTINED → DEGRADED and the original precision policy on
+        DEGRADED → HEALTHY).  Faulty window: roll the session back to
+        its last clean snapshot and escalate.  Mixed-precision tenants
+        first climb the precision ladder (``bf16_ir → f32_ir → f64``,
+        one rung per fault) — a low-precision divergence is most often
+        cured by more mantissa, and a precision rebind is far cheaper
+        than a backend swap; only once the ladder is exhausted does
+        "quarantine" rebind the configured fallback backend.  "fail"
+        closes the session and parks its post-mortem in :attr:`failed`.
+        Returns the supervisor directive (None for a clean window).
         """
         import dataclasses as _dc
 
         from repro.serving.supervisor import FAILED, window_verdict
+        from repro.solvers.precision import PRECISION_FALLBACK
 
         sup = sess.supervisor
         if sup is None or sup.state == FAILED:
@@ -627,6 +646,9 @@ class SimulationEngine:
             if act == "recover" and sup.orig_backend is not None:
                 self._rebind_backend(sess, sup.orig_backend)
                 sup.orig_backend = None
+            if act == "restore" and sup.orig_precision is not None:
+                self._rebind_precision(sess, sup.orig_precision)
+                sup.orig_precision = None
             sup.checkpoint(sess.state, sess.steps_done)
             return None
         act = sup.on_fault(kind, sess.steps_done)
@@ -638,10 +660,17 @@ class SimulationEngine:
                 "events": [_dc.asdict(e) for e in sup.events],
             }
             return act
-        # roll back to the pre-fault snapshot; the halved dt (and, under
-        # quarantine, the fallback backend) applies to the replay
+        # roll back to the pre-fault snapshot; the halved dt (and any
+        # precision/backend rebind below) applies to the replay
         sess.state, sess.steps_done = sup.rollback()
-        if act == "quarantine" and sup.config.fallback_backend:
+        nxt = PRECISION_FALLBACK.get(getattr(sess.solver, "precision",
+                                             "f64"))
+        if nxt is not None:
+            # precision ladder first: one rung toward f64 per fault
+            if sup.orig_precision is None:
+                sup.orig_precision = sess.solver.precision
+            self._rebind_precision(sess, nxt)
+        elif act == "quarantine" and sup.config.fallback_backend:
             fb = sup.config.fallback_backend
             if sess.solver.solver_backend != fb:
                 sup.orig_backend = sess.solver.solver_backend
@@ -654,6 +683,21 @@ class SimulationEngine:
         a backend the session used before rebinds without a retrace."""
         sess.solver.solver_backend = backend
         sess.controller.solver_backend = backend
+        sess.solver.rebind_alpha(sess.solver.alpha)
+
+    def _rebind_precision(self, sess: SimulationSession, precision: str):
+        """Swap the session's precision policy in place.  Same memoized
+        executor mechanics as :meth:`_rebind_backend` — the policy is a
+        component of the solver's executor key — plus the cohort key:
+        the session stops co-batching with its old-policy cohort-mates
+        on the next dispatch."""
+        if getattr(sess.solver, "precision", "f64") == precision:
+            return
+        sess.solver.precision = precision
+        sess.controller.precision = precision
+        base = sess.controller.base_model
+        if getattr(base, "precision", "f64") != precision:
+            sess.controller.base_model = base.with_precision(precision)
         sess.solver.rebind_alpha(sess.solver.alpha)
 
     # ---- exact checkpoint/restore ---------------------------------------
@@ -703,6 +747,7 @@ class SimulationEngine:
                 "solve_mode": sess.solver.solve_mode,
                 "solver_backend": sess.solver.solver_backend,
                 "pipeline": getattr(sess.solver, "pipeline", "auto"),
+                "precision": getattr(sess.solver, "precision", "f64"),
                 "latency_samples": list(sess.latency_samples),
                 "controller": {
                     "alpha": c.alpha,
@@ -808,7 +853,8 @@ class SimulationEngine:
                 solver_backend=m["solver_backend"],
                 priority=m["priority"], deadline_ms=m["deadline_ms"],
                 program=m["program"], case=m["case"],
-                pipeline=m.get("pipeline", "auto"))
+                pipeline=m.get("pipeline", "auto"),
+                precision=m.get("precision", "f64"))
             sess.state = PisoState(*[jnp.asarray(arrs[f"{sid}|state|{f}"])
                                      for f in PisoState._fields])
             sess.steps_done = int(m["steps_done"])
@@ -895,6 +941,7 @@ class SimulationEngine:
                       "program": getattr(s.solver, "program_name", "piso"),
                       "case": getattr(s.solver, "case", "cavity"),
                       "pipelined": getattr(s.solver, "pipelined", False),
+                      "precision": getattr(s.solver, "precision", "f64"),
                       "health": (None if s.supervisor is None
                                  else s.supervisor.state)}
                 for sid, s in self.sessions.items()

@@ -103,6 +103,9 @@ class SessionSupervisor:
         # set by the engine when it applies the fallback backend, so
         # recovery knows what to rebind back to
         self.orig_backend: str | None = None
+        # likewise for the precision ladder (bf16_ir -> f32_ir -> f64):
+        # the policy the tenant opened with, restored on full recovery
+        self.orig_precision: str | None = None
 
     @property
     def healthy(self) -> bool:
@@ -182,6 +185,7 @@ class SessionSupervisor:
             "retries_used": self.retries_used,
             "clean_windows": self.clean_windows,
             "orig_backend": self.orig_backend,
+            "orig_precision": self.orig_precision,
             "last_good_step": (None if self.last_good is None
                                else self.last_good[1]),
             "events": [dataclasses.asdict(e) for e in self.events],
@@ -196,5 +200,6 @@ class SessionSupervisor:
         sup.retries_used = d["retries_used"]
         sup.clean_windows = d["clean_windows"]
         sup.orig_backend = d["orig_backend"]
+        sup.orig_precision = d.get("orig_precision")
         sup.events = [SupervisorEvent(**e) for e in d["events"]]
         return sup

@@ -16,6 +16,18 @@ The squared residual norm ``r . r`` is **carried in the loop state**: the
 the carried value against the squared threshold, instead of re-issuing a
 ``vdot`` (an extra global all-reduce per iteration) in both ``cond`` and
 ``body`` as the seed did.
+
+**Iterative refinement.**  When the bundle's
+:class:`repro.solvers.precision.PrecisionPolicy` refines (``f32_ir`` /
+``bf16_ir``), the while_loop above becomes the *inner sweep* of an outer
+f64 loop: replay the true residual ``r = b - A_hi x`` in f64, solve the
+correction system ``A_lo d = r`` with one low-precision sweep to the
+policy's loose ``inner_tol``, apply ``x += d`` in f64, repeat until the
+caller's f64 tolerance holds.  The outer ``cond`` compares the carried
+f64 ``r.r`` — no extra reduction, preserving the one-all-reduce-per-
+iteration contract — and the exit flags keep the exact health signature
+of the plain path (NaN anywhere => ``converged`` and ``hit_cap`` both
+False).
 """
 from __future__ import annotations
 
@@ -31,31 +43,20 @@ __all__ = ["cg", "CGResult"]
 
 class CGResult(NamedTuple):
     x: jax.Array
-    iters: jax.Array
-    residual: jax.Array   # final ||r||_2
+    iters: jax.Array      # total inner Krylov iterations
+    residual: jax.Array   # final ||r||_2 (f64 true residual when refined)
     converged: jax.Array  # bool: ||r|| <= threshold at exit (False on NaN)
-    hit_cap: jax.Array    # bool: exited at maxiter without converging
+    hit_cap: jax.Array    # bool: exited at an iteration cap w/o converging
+    outer_iters: jax.Array = 0  # refinement passes (0 on the f64 policy)
 
 
-def cg(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
-       x0: jax.Array, *, M: Callable[[jax.Array], jax.Array] | None = None,
-       tol: float = 1e-8, atol: float = 0.0, maxiter: int = 1000) -> CGResult:
-    """Solve ``A x = b`` (SPD) with preconditioned CG.
+def _cg_sweep(ops: SolverOps, b, x0, threshold_sq, maxiter):
+    """One preconditioned-CG while_loop at the bundle's storage dtype.
 
-    ``A`` is either an operator closure (with ``M`` applying the
-    preconditioner inverse, e.g. Jacobi ``r / diag``) or a ready-made
-    :class:`SolverOps` bundle (``M`` must then be None).
-    Convergence: ``||r|| <= max(tol * ||b||, atol)``.
+    Returns ``(x, rr, k)`` with ``rr`` the carried squared residual norm
+    (accum dtype) and ``k`` the iteration count.  This *is* the entire
+    pre-policy solver body — the f64 path runs it once, bit-identically.
     """
-    if isinstance(A, SolverOps):
-        assert M is None, "pass the preconditioner inside SolverOps"
-        ops = A
-    else:
-        ops = reference_ops(A, M)
-
-    (bb,) = ops.dots((b, b))
-    threshold_sq = jnp.maximum(tol * jnp.sqrt(bb), atol) ** 2
-
     r0 = b - ops.matvec(x0)
     z0 = ops.precond(r0)
     gamma0, rr0 = ops.dots((r0, z0), (r0, r0))
@@ -70,14 +71,90 @@ def cg(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
         alpha = gamma / pAp
         x, r, z, gamma_new, rr_new = ops.fused_step(x, r, p, Ap, alpha)
         beta = gamma_new / gamma
-        p = z + beta * p
+        p = z + beta.astype(z.dtype) * p
         return (x, r, p, gamma_new, rr_new, k + 1)
 
     init = (x0, r0, z0, gamma0, rr0, jnp.array(0, jnp.int32))
     x, r, _, _, rr, k = jax.lax.while_loop(cond, body, init)
+    return x, rr, k
+
+
+def _cg_refined(ops: SolverOps, b, x0, *, tol, atol, maxiter) -> "CGResult":
+    """Outer f64 refinement loop around low-precision inner sweeps."""
+    pol = ops.policy
+    A_hi = ops.matvec_hi if ops.matvec_hi is not None else ops.matvec
+    lo = pol.storage_dtype
+
+    def vdot_hi(u, v):
+        return jnp.vdot(u, v, precision=jax.lax.Precision.HIGHEST)
+
+    bb = vdot_hi(b, b)
+    threshold_sq = jnp.maximum(tol * jnp.sqrt(bb), atol) ** 2
+    inner_tol_sq = pol.inner_tol ** 2
+
+    def residual(x):
+        r = b - A_hi(x)
+        return r, vdot_hi(r, r)
+
+    r0, rr0 = residual(x0)
+
+    def cond(state):
+        _, _, rr, k_out, _, _ = state
+        return (rr > threshold_sq) & (k_out < pol.max_outer)
+
+    def body(state):
+        x, r, _, k_out, inner_total, inner_capped = state
+        # correction solve A_lo d = r at the storage dtype, from zero,
+        # to the policy's loose relative tolerance
+        r_lo = r.astype(lo)
+        (rr_lo,) = ops.dots((r_lo, r_lo))
+        thr_lo = inner_tol_sq * rr_lo
+        d, _, k_in = _cg_sweep(ops, r_lo, jnp.zeros_like(r_lo), thr_lo,
+                               maxiter)
+        x = x + d.astype(b.dtype)
+        r, rr = residual(x)   # f64 replay: low precision never touches x
+        return (x, r, rr, k_out + 1, inner_total + k_in,
+                inner_capped | (k_in >= maxiter))
+
+    init = (x0, r0, rr0, jnp.array(0, jnp.int32), jnp.array(0, jnp.int32),
+            jnp.array(False))
+    x, _, rr, k_out, inner_total, inner_capped = jax.lax.while_loop(
+        cond, body, init)
+    converged = rr <= threshold_sq
+    hit_cap = ((k_out >= pol.max_outer) | inner_capped) & ~converged
+    return CGResult(x=x, iters=inner_total, residual=jnp.sqrt(rr),
+                    converged=converged, hit_cap=hit_cap,
+                    outer_iters=k_out)
+
+
+def cg(A: Callable[[jax.Array], jax.Array] | SolverOps, b: jax.Array,
+       x0: jax.Array, *, M: Callable[[jax.Array], jax.Array] | None = None,
+       tol: float = 1e-8, atol: float = 0.0, maxiter: int = 1000) -> CGResult:
+    """Solve ``A x = b`` (SPD) with preconditioned CG.
+
+    ``A`` is either an operator closure (with ``M`` applying the
+    preconditioner inverse, e.g. Jacobi ``r / diag``) or a ready-made
+    :class:`SolverOps` bundle (``M`` must then be None).
+    Convergence: ``||r|| <= max(tol * ||b||, atol)`` — always evaluated
+    against the *true* f64 residual when the bundle's policy refines.
+    ``maxiter`` caps the plain solve, or each inner sweep when refined.
+    """
+    if isinstance(A, SolverOps):
+        assert M is None, "pass the preconditioner inside SolverOps"
+        ops = A
+    else:
+        ops = reference_ops(A, M)
+
+    if ops.policy.refine:
+        return _cg_refined(ops, b, x0, tol=tol, atol=atol, maxiter=maxiter)
+
+    (bb,) = ops.dots((b, b))
+    threshold_sq = jnp.maximum(tol * jnp.sqrt(bb), atol) ** 2
+    x, rr, k = _cg_sweep(ops, b, x0, threshold_sq, maxiter)
     # NaN rr compares False on both sides: converged and hit_cap both stay
     # False, which the health plumbing upstream reads as divergence.
     converged = rr <= threshold_sq
     hit_cap = (k >= maxiter) & ~converged
     return CGResult(x=x, iters=k, residual=jnp.sqrt(rr),
-                    converged=converged, hit_cap=hit_cap)
+                    converged=converged, hit_cap=hit_cap,
+                    outer_iters=jnp.zeros((), jnp.int32))

@@ -25,6 +25,16 @@ Backends:
   ``repro.sparse.shardmap_spmv.make_fused_ops_full_mesh`` (shard_map +
   per-shard kernels + psum'd partials).
 
+**Precision.**  Both constructors take a
+:class:`repro.solvers.precision.PrecisionPolicy`.  Under the default
+``f64`` policy every cast below is a no-op and the op sequence is
+bit-identical to the pre-policy code.  Under a refined policy
+(``f32_ir`` / ``bf16_ir``) the bundle's members run the *inner* sweep at
+the storage dtype with accum-dtype reductions, and the bundle carries a
+``matvec_hi`` closure over the original f64 bands for the outer
+residual replay ``r = b - A x`` in the solvers' iterative-refinement
+loop.
+
 Selection is **per part size and platform** (:func:`resolve_backend`): the
 fused kernels pay off once a part fills at least one ``block_rows`` grid
 step; below that (tiny test meshes, deeply fused full-mesh shards) the
@@ -33,14 +43,20 @@ reference path wins on dispatch overhead, so ``"auto"`` keeps it.  Off-TPU
 through the Pallas *interpreter* inside the jitted ``while_loop`` (a
 Python-level emulation, ~50x wall overhead on host devices) — while an
 explicit ``"fused"`` request still forces them (parity tests, benchmarks).
+The crossover row count defaults to :data:`FUSED_MIN_ROWS` but is a
+parameter, overridable per call or process-wide via the
+``REPRO_FUSED_MIN_ROWS`` environment variable (see ``docs/kernels.md``).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.solvers.precision import F64, PrecisionPolicy, get_policy
 
 __all__ = [
     "SolverOps", "reference_ops", "fused_stacked_ops", "resolve_backend",
@@ -51,7 +67,8 @@ BACKENDS = ("auto", "fused", "reference")
 
 # the fused kernels start paying off once a part fills one default row
 # block (below this the grid is a single padded step and per-call overhead
-# dominates); "auto" switches backends at this part size
+# dominates); "auto" switches backends at this part size.  Default for the
+# resolve_backend parameter; REPRO_FUSED_MIN_ROWS overrides process-wide.
 FUSED_MIN_ROWS = 2048
 
 
@@ -69,56 +86,100 @@ class SolverOps:
     fused_step: Callable
     dots: Callable
     backend: str = "reference"   # informational (logs, benchmarks)
+    # mixed-precision contract: the policy the members were built under,
+    # and (for refined policies) the full-precision operator for the
+    # outer residual replay.  None falls back to ``matvec`` — correct for
+    # f64, required for f32_ir/bf16_ir bundles built from downcast bands.
+    policy: PrecisionPolicy = F64
+    matvec_hi: Callable | None = None
 
 
-def resolve_backend(requested: str, m: int,
-                    on_tpu: bool | None = None) -> str:
+def resolve_backend(requested: str, m: int, on_tpu: bool | None = None,
+                    fused_min_rows: int | None = None) -> str:
     """Concrete backend for a part of ``m`` rows (see module doc).
 
     ``on_tpu`` overrides the platform probe (tests); ``None`` asks JAX.
+    ``fused_min_rows`` sets the auto-mode crossover row count; ``None``
+    reads ``REPRO_FUSED_MIN_ROWS`` from the environment, falling back to
+    :data:`FUSED_MIN_ROWS`.
     """
     if requested not in BACKENDS:
         raise ValueError(f"unknown solver backend {requested!r}")
     if requested != "auto":
         return requested
+    if fused_min_rows is None:
+        fused_min_rows = int(os.environ.get("REPRO_FUSED_MIN_ROWS",
+                                            FUSED_MIN_ROWS))
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
     if not on_tpu:
         return "reference"
-    return "fused" if m >= FUSED_MIN_ROWS else "reference"
+    return "fused" if m >= fused_min_rows else "reference"
 
 
 def _reference_dots(*pairs):
     return tuple(_vdot(a, b) for a, b in pairs)
 
 
-def reference_ops(A: Callable, M: Callable | None = None) -> SolverOps:
+def _policy_dot(policy: PrecisionPolicy):
+    """Per-policy global vdot: upcast both operands to the accum dtype.
+
+    The f64 policy returns the plain ``_vdot`` (no casts at all), so
+    legacy closures of any dtype keep their exact pre-policy reduction.
+    """
+    if not policy.refine and policy.name == "f64":
+        return _vdot
+    acc = policy.accum_dtype
+
+    def dot(a, b):
+        return jnp.vdot(a.astype(acc), b.astype(acc),
+                        precision=jax.lax.Precision.HIGHEST)
+
+    return dot
+
+
+def reference_ops(A: Callable, M: Callable | None = None, *,
+                  policy: PrecisionPolicy | str = F64,
+                  matvec_hi: Callable | None = None) -> SolverOps:
     """Plain-jnp backend over operator closures (any layout).
 
     The ``fused_step``/``matvec_dot`` members run the seed solver's exact
     op sequence, so a refactored solver body on this backend is
     numerically identical to the pre-``SolverOps`` implementation.
+
+    Under a refined ``policy`` the caller passes closures over the
+    *downcast* operator (``A``/``M`` at the storage dtype) plus a
+    ``matvec_hi`` over the original f64 bands; the reductions then
+    accumulate at the policy's accum dtype.
     """
+    policy = get_policy(policy)
     M = M if M is not None else (lambda r: r)
+    dot = _policy_dot(policy)
 
     def matvec_dot(p):
         Ap = A(p)
-        return Ap, _vdot(p, Ap)
+        return Ap, dot(p, Ap)
 
     def fused_step(x, r, p, Ap, alpha):
-        xn = x + alpha * p
-        rn = r - alpha * Ap
+        a = alpha.astype(x.dtype)  # accum scalar -> storage (f64: no-op)
+        xn = x + a * p
+        rn = r - a * Ap
         z = M(rn)
-        return xn, rn, z, _vdot(rn, z), _vdot(rn, rn)
+        return xn, rn, z, dot(rn, z), dot(rn, rn)
+
+    def dots(*pairs):
+        return tuple(dot(a, b) for a, b in pairs)
 
     return SolverOps(matvec=A, precond=M, matvec_dot=matvec_dot,
-                     fused_step=fused_step, dots=_reference_dots,
-                     backend="reference")
+                     fused_step=fused_step, dots=dots,
+                     backend="reference", policy=policy,
+                     matvec_hi=matvec_hi)
 
 
 def fused_stacked_ops(bands: jax.Array, diag: jax.Array, *,
                       offsets: tuple[int, ...], plane: int,
-                      block_rows: int = 0) -> SolverOps:
+                      block_rows: int = 0,
+                      policy: PrecisionPolicy | str = F64) -> SolverOps:
     """Fused-Pallas backend on stacked DIA bands ``(P, nb, m)``.
 
     ``diag`` is the stacked matrix diagonal (P, m); the Jacobi inverse is
@@ -128,31 +189,55 @@ def fused_stacked_ops(bands: jax.Array, diag: jax.Array, *,
     invert to a safe 0 — a bare ``1/diag`` would carry ``inf`` into the
     padded lanes, where the first fused Jacobi apply turns ``inf * 0``
     into NaN and poisons every global reduction of the solve.
+
+    Under a refined ``policy`` the bands/diag are downcast once to the
+    storage dtype for the kernel hot loop (this is the bytes/iter win:
+    the kernels stream 4- or 2-byte values), the block partials
+    accumulate at the accum dtype, and ``matvec_hi`` keeps a jnp SpMV
+    over the original full-precision bands for the outer residual
+    replay.
     """
     from repro.kernels.krylov_fused.ops import (fused_matvec_dot,
                                                 fused_update_step)
     from repro.kernels.spmv_dia.ops import spmv_dia_pallas
     from repro.kernels.spmv_dia.spmv_dia import pick_block_rows
+    from repro.sparse.distributed import spmv_dia
     from repro.solvers.jacobi import safe_jacobi_inverse
+
+    policy = get_policy(policy)
+    bands_hi = bands
+    accum = None
+    if policy.name != "f64":
+        bands = bands.astype(policy.storage_dtype)
+        diag = diag.astype(policy.storage_dtype)
+        accum = policy.accum
 
     inv = safe_jacobi_inverse(diag)
     block_rows = block_rows or pick_block_rows(bands.shape[-1])
 
     def matvec(x):
         return spmv_dia_pallas(bands, x, offsets=offsets, plane=plane,
-                               block_rows=block_rows)
+                               block_rows=block_rows, accum_dtype=accum)
 
     def precond(r):
         return r * inv
 
     def matvec_dot(p):
         return fused_matvec_dot(bands, p, offsets=offsets, plane=plane,
-                                block_rows=block_rows)
+                                block_rows=block_rows, accum_dtype=accum)
 
     def fused_step(x, r, p, Ap, alpha):
         return fused_update_step(x, r, p, Ap, inv, alpha,
-                                 block_rows=block_rows)
+                                 block_rows=block_rows, accum_dtype=accum)
+
+    matvec_hi = None
+    if policy.refine:
+        def matvec_hi(x):
+            return spmv_dia(bands_hi, x, offsets=offsets, plane=plane)
+
+    dots = _reference_dots if policy.name == "f64" else (
+        lambda *pairs: tuple(_policy_dot(policy)(a, b) for a, b in pairs))
 
     return SolverOps(matvec=matvec, precond=precond, matvec_dot=matvec_dot,
-                     fused_step=fused_step, dots=_reference_dots,
-                     backend="fused")
+                     fused_step=fused_step, dots=dots,
+                     backend="fused", policy=policy, matvec_hi=matvec_hi)

@@ -1,4 +1,16 @@
-import jax
+import pytest
+
+from repro.env import enable_x64
 
 # CFD correctness tests need f64; model smoke tests pass explicit dtypes.
-jax.config.update("jax_enable_x64", True)
+# Module-level so collection-time jnp constants are already f64.
+enable_x64()
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _x64():
+    """Belt-and-braces: re-assert f64 for the whole session even if an
+    earlier import toggled the flag (subprocess tests call
+    :func:`repro.env.enable_x64` themselves — child processes do not
+    inherit this fixture)."""
+    enable_x64()

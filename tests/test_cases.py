@@ -8,7 +8,6 @@ answer agrees with a long-horizon PISO march, and both survive
 size-class padding and cohort batching unchanged.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -67,7 +66,6 @@ def test_cavity_case_path_is_bitwise_identical_to_legacy():
     same moving-lid patch, zero boundary flux everywhere (all cavity
     patches are walls in the wall-normal direction), identical momentum
     and pressure systems."""
-    jax.config.update("jax_enable_x64", True)
     mesh = CavityMesh.cube(4, 2)
     legacy = CavityAssembly(mesh, nu=0.01)
     cased = CavityAssembly(mesh, nu=0.01, case=get_case("cavity"))
@@ -88,7 +86,6 @@ def test_channel_boundary_flux_masks():
     """Inlet flux is the prescribed U_b . n A on the inlet plane only;
     the outlet plane extrapolates the interior velocity (zero-gradient),
     so at rest the outlet flux is zero."""
-    jax.config.update("jax_enable_x64", True)
     mesh = CavityMesh.cube(4, 2)
     asm = CavityAssembly(mesh, nu=0.01, case=get_case("channel"))
     U = jnp.zeros((mesh.n_parts, mesh.n_cells, 3), jnp.float64)
@@ -112,7 +109,6 @@ def test_channel_boundary_flux_masks():
 
 
 def test_backstep_inlet_covers_the_upper_half():
-    jax.config.update("jax_enable_x64", True)
     mesh = CavityMesh.cube(4, 2)
     asm = CavityAssembly(mesh, nu=0.01, case=get_case("backstep"))
     U = jnp.zeros((mesh.n_parts, mesh.n_cells, 3), jnp.float64)
@@ -126,7 +122,6 @@ def test_backstep_inlet_covers_the_upper_half():
 # ---------------------------------------------------------------------------
 
 def test_run_steady_converges_under_the_cap_and_respects_it():
-    jax.config.update("jax_enable_x64", True)
     solver = SimpleSolver(CavityMesh.cube(4, 2), alpha=2, nu=0.01)
     state, stats, n_outer = solver.run_steady()
     assert bool(solver.program.converged(stats))
@@ -155,7 +150,6 @@ def test_simple_agrees_with_long_horizon_piso_on_cavity():
     O(dt) Rhie-Chow smoothing term, so agreement is a few percent of the
     lid speed, not machine epsilon (dt = 5e-3 gives 0.024 here; the gate
     is 0.05)."""
-    jax.config.update("jax_enable_x64", True)
     mesh = CavityMesh.cube(4, 2)
     s_state, stats, _ = SimpleSolver(mesh, alpha=2, nu=0.01).run_steady()
     assert bool(stats.continuity_err < 1e-5)
@@ -170,7 +164,6 @@ def test_simple_channel_conserves_mass_globally():
     """At convergence the outlet carries exactly the prescribed inflow:
     sum(phi_b) == 0 to continuity tolerance (the conservative
     flux-correction acceptance for the Dirichlet-pressure outlet)."""
-    jax.config.update("jax_enable_x64", True)
     solver = SimpleSolver(CavityMesh.cube(4, 2), alpha=2, nu=0.01,
                           case="channel")
     state, stats, _ = solver.run_steady()
@@ -190,7 +183,6 @@ def test_simple_channel_conserves_mass_globally():
 def test_padded_simple_case_matches_unpadded():
     """A size-class-padded SIMPLE session is the same fixed point: ghost
     slabs stay exactly zero and the real slabs match the unpadded run."""
-    jax.config.update("jax_enable_x64", True)
     real = CavityMesh(nx=4, ny=4, nz=4, n_parts=2, h=0.025)
     solo_state, _, solo_n = SimpleSolver(real, alpha=1, nu=0.01,
                                          case="channel").run_steady()
@@ -207,7 +199,6 @@ def test_batched_run_converged_matches_solo_per_lane():
     """The cohort (vmapped) while-loop must preserve every lane's exact
     outer-iteration count: converged lanes freeze while stragglers keep
     iterating (the batching rule dispatches until all predicates drop)."""
-    jax.config.update("jax_enable_x64", True)
     from repro.fvm.piso import stack_states
 
     mesh = CavityMesh.cube(4, 2)

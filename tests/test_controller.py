@@ -272,9 +272,6 @@ def test_cached_updater_matches_direct_update():
 # ---------------------------------------------------------------------------
 
 def test_piso_rebind_alpha_reuses_plans_and_steppers():
-    import jax
-
-    jax.config.update("jax_enable_x64", True)
     from repro.fvm.piso import PisoSolver
 
     cache = PlanCache()
@@ -299,9 +296,6 @@ def test_piso_rebind_alpha_reuses_plans_and_steppers():
 
 
 def test_piso_timed_step_matches_fused_step():
-    import jax
-
-    jax.config.update("jax_enable_x64", True)
     from repro.fvm.piso import PisoSolver
 
     mesh = CavityMesh.cube(4, 2)

@@ -58,7 +58,7 @@ def test_cfd_piso_on_sharded_mesh_matches_single_device():
     physics, collectives inserted by XLA."""
     out = run_forced("""
         import numpy as np, jax
-        jax.config.update("jax_enable_x64", True)
+        from repro.env import enable_x64; enable_x64()
         import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.comm import make_cfd_mesh
@@ -123,7 +123,7 @@ def test_full_mesh_spmv_matches_stacked():
     bands/x to ~machine precision, for several alpha values."""
     out = run_forced("""
         import numpy as np, jax
-        jax.config.update("jax_enable_x64", True)
+        from repro.env import enable_x64; enable_x64()
         import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.comm import make_cfd_mesh, solve_sharding
@@ -171,7 +171,7 @@ def test_full_mesh_piso_step_matches_stacked():
     tolerance (identical physics, all devices active in the solve)."""
     out = run_forced("""
         import jax
-        jax.config.update("jax_enable_x64", True)
+        from repro.env import enable_x64; enable_x64()
         import jax.numpy as jnp
         from repro.fvm.mesh import CavityMesh
         from repro.fvm.piso import PisoSolver
@@ -218,7 +218,7 @@ def test_full_mesh_fused_backend_matches_reference():
     full fused full-mesh PISO step must match the stacked path."""
     out = run_forced("""
         import numpy as np, jax
-        jax.config.update("jax_enable_x64", True)
+        from repro.env import enable_x64; enable_x64()
         import jax.numpy as jnp
         from repro.core.comm import make_cfd_mesh, solve_sharding
         from repro.core.repartition import plan_for_mesh

@@ -403,3 +403,147 @@ def test_plan_cache_backend_key_component():
     assert cache.hits == 1
     # plans are structurally interchangeable; only the cache keys differ
     assert p_auto.m_coarse == p_fused.m_coarse == p_fm_fused.m_coarse
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision policies (ISSUE 10): kernels, solvers, cost model, cache
+# ---------------------------------------------------------------------------
+from repro.solvers.precision import (F64, PRECISION_FALLBACK, get_policy,
+                                     POLICIES)
+
+
+def test_get_policy_validates_names():
+    assert get_policy("f64") is F64
+    assert get_policy(F64) is F64
+    assert set(POLICIES) == {"f64", "f32_ir", "bf16_ir"}
+    assert PRECISION_FALLBACK == {"bf16_ir": "f32_ir", "f32_ir": "f64"}
+    with pytest.raises(ValueError, match="f16"):
+        get_policy("f16")
+
+
+@pytest.mark.parametrize("dtype,accum,tol", [
+    (jnp.float32, "float64", 1e-5),
+    (jnp.bfloat16, "float32", 2e-2),
+])
+def test_spmv_dot_kernel_low_precision_storage(dtype, accum, tol):
+    """Low-precision loads + accum-dtype block partials: the kernel and
+    its jnp oracle share the promotion contract, so they agree to the
+    summation-order noise of the storage dtype."""
+    m, plane, block = 777, 16, 256
+    nx = 4
+    offsets = (-plane, -nx, -1, 0, 1, nx, plane)
+    rng = np.random.default_rng(10)
+    bands = jnp.asarray(rng.standard_normal((7, m)), dtype)
+    xp = jnp.asarray(rng.standard_normal(m + 2 * plane), dtype)
+    y_k, d_k = spmv_dot_single(bands, xp, offsets=offsets, plane=plane,
+                               block_rows=block, interpret=True,
+                               accum_dtype=accum)
+    y_r, d_r = spmv_dot_ref(bands, xp, offsets=offsets, plane=plane,
+                            accum_dtype=accum)
+    assert y_k.dtype == dtype and d_k.dtype == jnp.dtype(accum)
+    np.testing.assert_allclose(np.asarray(y_k.astype(jnp.float64)),
+                               np.asarray(y_r.astype(jnp.float64)),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(d_k), float(d_r), rtol=10 * tol,
+                               atol=10 * tol)
+
+
+def _fused_policy_system(policy, alpha=2):
+    """The laplacian system of ``_spd_ops_pair`` as a fused bundle under
+    ``policy``, with the rhs normalized so tol=1e-12 reaches an absolute
+    error comparable across policies (the parity-gate methodology)."""
+    mesh = CavityMesh.cube(4, 4)
+    layout, buffers, diag = laplacian_buffers(mesh)
+    A_dense = global_dense(layout, buffers)
+    plan = plan_for_mesh(mesh, alpha)
+    n_c = mesh.n_parts // alpha
+    grouped = jnp.asarray(buffers).reshape(n_c, alpha, -1)
+    bands = update_device_direct(plan, grouped, target="dia")
+    offsets = tuple(int(o) for o in plan.dia_offsets)
+    diag_c = jnp.asarray(diag).reshape(n_c, plan.m_coarse)
+    rng = np.random.default_rng(8)
+    x_true = rng.standard_normal(mesh.n_cells_global)
+    b = jnp.asarray((A_dense @ x_true).reshape(n_c, plan.m_coarse))
+    b = b / jnp.linalg.norm(b)
+    ops = fused_stacked_ops(bands, diag_c, offsets=offsets,
+                            plane=plan.plane, policy=policy)
+    return ops, b
+
+
+@pytest.mark.parametrize("solver", [cg, bicgstab])
+def test_refined_policies_match_f64_within_gate(solver):
+    """The acceptance gate: f32_ir and bf16_ir answers within 1e-10 of
+    the f64 answer, same convergence verdict, refinement visible in
+    ``outer_iters``."""
+    res = {}
+    for pol in ("f64", "f32_ir", "bf16_ir"):
+        ops, b = _fused_policy_system(pol)
+        res[pol] = solver(ops, b, jnp.zeros_like(b), tol=1e-12,
+                          maxiter=500)
+    assert bool(res["f64"].converged)
+    assert int(res["f64"].outer_iters) == 0
+    x64 = np.asarray(res["f64"].x)
+    for pol in ("f32_ir", "bf16_ir"):
+        r = res[pol]
+        assert bool(r.converged) and not bool(r.hit_cap), pol
+        assert int(r.outer_iters) >= 1, pol
+        diff = float(np.max(np.abs(np.asarray(r.x) - x64)))
+        assert diff <= 1e-10, (pol, diff)
+
+
+@pytest.mark.parametrize("solver", [cg, bicgstab])
+@pytest.mark.parametrize("policy", ["f32_ir", "bf16_ir"])
+def test_refined_nan_rhs_signature(solver, policy):
+    """The NaN health-flag signature survives refinement: the f64 outer
+    residual of a NaN rhs kills the outer cond immediately — 0 inner and
+    0 outer iterations, converged False AND hit_cap False."""
+    pol = get_policy(policy)
+    op = lambda v: 2.0 * v
+    ops = reference_ops(op, policy=pol, matvec_hi=op)
+    b = jnp.ones((2, 32)).at[0, 0].set(jnp.nan)
+    res = solver(ops, b, jnp.zeros_like(b), tol=1e-10)
+    assert int(res.iters) == 0 and int(res.outer_iters) == 0
+    assert not bool(res.converged) and not bool(res.hit_cap)
+
+
+def test_resolve_backend_fused_min_rows_override(monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED_MIN_ROWS", raising=False)
+    assert resolve_backend("auto", 512, on_tpu=True,
+                           fused_min_rows=256) == "fused"
+    assert resolve_backend("auto", 512, on_tpu=True,
+                           fused_min_rows=1024) == "reference"
+    monkeypatch.setenv("REPRO_FUSED_MIN_ROWS", "128")
+    assert resolve_backend("auto", 128, on_tpu=True) == "fused"
+    assert resolve_backend("auto", 127, on_tpu=True) == "reference"
+    # an explicit parameter wins over the environment
+    assert resolve_backend("auto", 127, on_tpu=True,
+                           fused_min_rows=64) == "fused"
+
+
+def test_cost_model_precision_bytes():
+    cm = CostModel(TPU_V5E, n_dofs=1e6)
+    f32 = cm.with_precision("f32_ir")
+    bf16 = cm.with_precision("bf16_ir")
+    # narrower storage streams fewer bytes/iter, strictly ordered
+    assert bf16.solver_bytes() < f32.solver_bytes() < cm.solver_bytes()
+    # the f64 policy is the exact pre-policy expression
+    assert cm.with_precision("f64").solver_bytes() == cm.solver_bytes()
+    # the CPU fallback never runs mixed precision: unchanged
+    assert f32.t_solver_cpu(8) == cm.t_solver_cpu(8)
+    with pytest.raises(ValueError):
+        cm.with_precision("fp8")
+
+
+def test_plan_cache_precision_key_component():
+    mesh = CavityMesh.cube(4, 4)
+    cache = PlanCache()
+    p64 = cache.plan_for_mesh(mesh, 2, "dia")
+    p32 = cache.plan_for_mesh(mesh, 2, "dia", precision="f32_ir")
+    p16 = cache.plan_for_mesh(mesh, 2, "dia", precision="bf16_ir")
+    assert cache.misses == 3 and cache.hits == 0
+    assert cache.plan_for_mesh(mesh, 2, "dia", precision="f32_ir") is p32
+    # the default key spells f64 without a precision component (historic)
+    assert cache.plan_for_mesh(mesh, 2, "dia", precision="f64") is p64
+    assert cache.hits == 2
+    # plans are structurally interchangeable; only the cache keys differ
+    assert p64.m_coarse == p32.m_coarse == p16.m_coarse

@@ -670,3 +670,122 @@ def test_snapshot_restore_round_trips_pipeline_knob():
     old = SimulationEngine.restore(path)
     assert all(v == 0 for v in old.dispatch_paths.values())
     assert old.sessions["p"].solver.pipeline == "auto"
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision serving (ISSUE 10): cohort split, numerics, supervision
+# ---------------------------------------------------------------------------
+
+def test_cohort_keys_split_on_precision():
+    """Tenants on different precision policies never co-batch: the policy
+    is an executor-identity component, same as program/case/pipeline."""
+    mesh = CavityMesh.cube(4, 4)
+    eng = SimulationEngine()
+    eng.open_session("a", mesh, dt=1e-3, alpha0=2, adaptive=False)
+    eng.open_session("b", mesh, dt=2e-3, alpha0=2, adaptive=False)
+    eng.open_session("m", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     precision="f32_ir")
+    assert sorted(len(g) for g in eng.cohorts().values()) == [1, 2]
+    eng.step_all(2)
+    assert eng.sessions["m"].solver.precision == "f32_ir"
+    assert eng.sessions["a"].solver.precision == "f64"
+    # stats expose the policy through the controller
+    assert eng.sessions["m"].controller.stats()["precision"] == "f32_ir"
+
+
+def test_pipelined_mixed_precision_cohort_matches_f64():
+    """A pipelined mixed-precision cohort (PISO defaults to the
+    software-pipelined stepper) tracks the f64 cohort trajectory to the
+    refinement gate — the overlap schedule must not perturb the outer
+    f64 refinement loop."""
+    mesh = CavityMesh.cube(4, 2)
+    outs = {}
+    for prec in ("f64", "f32_ir"):
+        eng = SimulationEngine(scan_window=4)
+        for i in range(3):
+            eng.open_session(f"t{i}", mesh, dt=1e-3 * (1 + i), alpha0=2,
+                             adaptive=False, precision=prec)
+        eng.step_all(4)
+        # cohort-batched AND pipelined: one dispatch, pipelined path
+        assert eng.stats()["dispatch_paths"]["pipelined_cohort"] == 1
+        outs[prec] = [np.asarray(eng.sessions[f"t{i}"].state.U)
+                      for i in range(3)]
+    for a, b in zip(outs["f64"], outs["f32_ir"]):
+        assert np.isfinite(b).all()
+        np.testing.assert_allclose(b, a, atol=1e-8)
+
+
+def test_supervisor_precision_ladder_escalates_and_restores():
+    """Faults climb the precision ladder one rung at a time
+    (bf16_ir -> f32_ir -> f64) before any backend rebind; full recovery
+    restores the session's original policy."""
+    mesh = CavityMesh.cube(4, 2)
+    eng = SimulationEngine(scan_window=4, supervise=True)
+    eng.open_session("m", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     precision="bf16_ir")
+    eng.step_all(4)                       # clean: checkpoint
+    s = eng.sessions["m"]
+
+    s.state = s.state._replace(U=s.state.U.at[0, 0, 0].set(jnp.nan))
+    eng.step_all(4)                       # fault 1: one rung up
+    assert s.solver.precision == "f32_ir"
+    assert s.supervisor.orig_precision == "bf16_ir"
+    assert s.supervisor.state == "degraded"
+
+    s.state = s.state._replace(U=s.state.U.at[0, 0, 0].set(jnp.nan))
+    eng.step_all(4)                       # fault 2: top of the ladder
+    assert s.solver.precision == "f64"
+    assert s.supervisor.orig_precision == "bf16_ir"   # set once
+    assert s.supervisor.state == "quarantined"
+
+    # quarantined -> degraded -> healthy: recovery restores the policy
+    for _ in range(2 * eng.supervisor_config.recovery_windows):
+        eng.step_all(4)
+    assert s.supervisor.state == "healthy"
+    assert s.solver.precision == "bf16_ir"
+    assert s.supervisor.orig_precision is None
+    assert np.isfinite(np.asarray(s.state.U)).all()
+
+
+def test_snapshot_restore_round_trips_precision():
+    """The engine snapshot records each session's precision policy (and
+    the supervisor's ladder origin); old manifests restore to f64."""
+    import json
+    import os
+
+    from repro.serving.supervisor import SessionSupervisor
+
+    mesh = CavityMesh.cube(4, 2)
+    eng = SimulationEngine(scan_window=4, supervise=True)
+    eng.open_session("m", mesh, dt=1e-3, alpha0=2, adaptive=False,
+                     precision="f32_ir")
+    eng.open_session("d", mesh, dt=1e-3, alpha0=2, adaptive=False)
+    eng.step_all(4)
+    path = "/tmp/test_snap_precision"
+    eng.snapshot(path)
+    back = SimulationEngine.restore(path)
+    assert back.sessions["m"].solver.precision == "f32_ir"
+    assert back.sessions["d"].solver.precision == "f64"
+    for sid in ("m", "d"):
+        np.testing.assert_array_equal(
+            np.asarray(back.sessions[sid].state.U),
+            np.asarray(eng.sessions[sid].state.U))
+
+    # the supervisor serializes the ladder origin (and tolerates its
+    # absence in pre-policy manifests)
+    sup = eng.sessions["m"].supervisor
+    sup.orig_precision = "bf16_ir"
+    rt = SessionSupervisor.from_dict(sup.to_dict())
+    assert rt.orig_precision == "bf16_ir"
+    d = sup.to_dict()
+    d.pop("orig_precision")
+    assert SessionSupervisor.from_dict(d).orig_precision is None
+
+    # forward-compat: a manifest without the field restores to f64
+    mf = os.path.join(path, "manifest.json")
+    m = json.load(open(mf))
+    for sess in m["sessions"]:
+        sess.pop("precision")
+    json.dump(m, open(mf, "w"))
+    old = SimulationEngine.restore(path)
+    assert old.sessions["m"].solver.precision == "f64"

@@ -470,9 +470,9 @@ def test_pipeline_knob_resolution_and_errors():
     off = PisoSolver(mesh, alpha=2, pipeline="off")
     assert not off.pipelined and isinstance(off._stepper, FusedExecutor)
     assert isinstance(auto.batched_executor(2), BatchedPipelinedExecutor)
-    # the memo key carries the resolved boolean
-    assert ("piso", 2, "stacked", "auto", True) in auto._programs
-    assert ("piso", 2, "stacked", "auto", False) in off._programs
+    # the memo key carries the resolved boolean (and the precision policy)
+    assert ("piso", 2, "stacked", "auto", "f64", True) in auto._programs
+    assert ("piso", 2, "stacked", "auto", "f64", False) in off._programs
 
     # steady programs: auto degrades, "on" refuses
     simple = SimpleSolver(mesh, alpha=2)
